@@ -1,0 +1,93 @@
+//! Adaptive transmission (Alg. 2) in isolation — no PJRT required.
+//!
+//! Simulates workers whose parameter fragments drift at very different
+//! rates (fragment 2 is 10× "hotter" than the rest) and shows how CoCoDC's
+//! change-rate metric R_p = ‖Δθ_p^g‖₂/I_p steers extra synchronizations to
+//! the hot fragment while the staleness guard keeps every fragment within
+//! one H window — versus Streaming DiLoCo's rigid round-robin.
+//!
+//! ```text
+//! cargo run --release --example adaptive_schedule
+//! ```
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::coordinator::strategy::SyncCtx;
+use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
+use cocodc::network::WanSimulator;
+use cocodc::runtime::TrainState;
+use cocodc::simclock::VirtualClock;
+use cocodc::util::Rng;
+
+fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usize>, usize)> {
+    let frags = FragmentTable::from_sizes(&[1000, 1000, 1000, 1000]);
+    let mut cfg = RunConfig::paper("sim", method);
+    cfg.h_steps = 100;
+    cfg.tau = TauMode::Fixed { tau: 5 };
+    cfg.gamma = 0.4;
+    // T_s such that gamma*H*T_c/T_s = 8 syncs per H (paper's setting).
+    cfg.network.step_compute_s = 0.15;
+    cfg.network.latency_s = 0.1237;
+    cfg.network.bandwidth_bps = 125e6;
+
+    let init = vec![0.0f32; frags.total_params()];
+    let mut workers: Vec<TrainState> =
+        (0..cfg.workers).map(|_| TrainState::new(init.clone())).collect();
+    let mut global = GlobalState::new(&init);
+    let mut net = WanSimulator::new(cfg.network, cfg.workers, 7);
+    let mut clock = VirtualClock::new();
+    let mut stats = SyncStats::new(frags.k());
+    let mut strategy = make_strategy(&cfg, &frags);
+    let mut rng = Rng::new(42, 0);
+
+    // Per-fragment drift rates: fragment 2 changes 10x faster.
+    let rates = [0.01f32, 0.01, 0.10, 0.01];
+    for step in 1..=steps {
+        for w in workers.iter_mut() {
+            for p in 0..frags.k() {
+                let f = frags.get(p);
+                for x in w.params[f.range()].iter_mut() {
+                    *x += rates[p] * (1.0 + 0.1 * rng.next_gaussian() as f32);
+                }
+            }
+            w.step = step;
+        }
+        clock.advance_compute(cfg.network.step_compute_s);
+        let mut ctx = SyncCtx {
+            workers: &mut workers,
+            global: &mut global,
+            net: &mut net,
+            clock: &mut clock,
+            engine: None,
+            cfg: &cfg,
+            frags: &frags,
+            stats: &mut stats,
+        };
+        strategy.post_step(step, &mut ctx)?;
+    }
+    Ok((
+        strategy.name().to_string(),
+        stats.per_fragment.clone(),
+        stats.staleness_guard_hits,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("600 simulated steps, H=100, fragment 2 drifts 10x faster:\n");
+    println!(
+        "{:<18} {:>6} {:>6} {:>6} {:>6}  guard_hits",
+        "method", "f0", "f1", "f2", "f3"
+    );
+    for method in [MethodKind::StreamingDiloco, MethodKind::Cocodc] {
+        let (name, counts, guards) = run_method(method, 600)?;
+        println!(
+            "{:<18} {:>6} {:>6} {:>6} {:>6}  {guards}",
+            name, counts[0], counts[1], counts[2], counts[3]
+        );
+    }
+    println!(
+        "\nStreaming DiLoCo synchronizes each fragment exactly once per H;\n\
+         CoCoDC reinvests the idle network budget (N=8 syncs/H at gamma=0.4)\n\
+         into the hot fragment while the staleness guard bounds the others."
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): trains the `e2e`
+//! transformer preset across M=4 simulated datacenters on the non-IID
+//! synthetic-C4 corpus with all three methods and logs the loss curves —
+//! the full three-layer stack (rust coordinator → PJRT → HLO train step →
+//! Pallas flash-attention/AdamW kernels) composing on a real workload.
+//!
+//! ```text
+//! make artifacts   # builds artifacts/e2e (~3.8M params)
+//! cargo run --release --example crossregion_train -- [--steps 300] \
+//!     [--preset e2e] [--methods cocodc,streaming,diloco] [--out results/e2e.csv]
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use cocodc::config::{MethodKind, RunConfig};
+use cocodc::metrics::{table1, write_curves_csv};
+use cocodc::runtime::Engine;
+use cocodc::util::cli::Args;
+use cocodc::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let preset = args.get("preset").unwrap_or("e2e").to_string();
+    let steps: u32 = args.get_or("steps", 300)?;
+    let out_path = args.get("out").unwrap_or("results/e2e.csv").to_string();
+    let methods: Vec<MethodKind> = args
+        .get("methods")
+        .unwrap_or("diloco,streaming,cocodc")
+        .split(',')
+        .map(MethodKind::parse)
+        .collect::<anyhow::Result<_>>()?;
+    args.finish()?;
+
+    let engine = Engine::load(std::path::Path::new("artifacts"), &preset)?;
+    let meta = engine.meta();
+    println!(
+        "e2e: {}-param LLaMA-style transformer ({} layers, d={}, vocab={}), \
+         M=4 simulated DCs, non-IID synthetic-C4",
+        meta.param_count, meta.model.n_layers, meta.model.d_model,
+        meta.model.vocab_size
+    );
+
+    let mut curves = Vec::new();
+    for method in methods {
+        // Paper §IV-A scaled: H=50 so several outer rounds fit in the run.
+        let mut cfg = RunConfig::paper(&preset, method);
+        cfg.total_steps = steps;
+        cfg.h_steps = 50;
+        cfg.eval_every = 20;
+        cfg.eval_batches = 6;
+        let mut trainer = Trainer::new(&engine, cfg)?;
+        trainer.verbose = true;
+        let out = trainer.run()?;
+        println!(
+            "[{}] final val loss {:.4} (ppl {:.2}), wall {:.0}s, {} syncs, real {:.0}s\n",
+            out.method,
+            out.curve.final_loss().unwrap_or(f64::NAN),
+            out.curve.final_ppl().unwrap_or(f64::NAN),
+            out.wall_s,
+            out.syncs_completed,
+            out.real_s,
+        );
+        curves.push(out.curve);
+    }
+
+    write_curves_csv(&out_path, &curves)?;
+    println!("curves -> {out_path}");
+    // The synthetic task reaches "interesting" PPL fast; report a mid-curve
+    // threshold for the steps-to-PPL comparison.
+    let thr = curves
+        .iter()
+        .filter_map(|c| c.best_ppl())
+        .fold(f64::NEG_INFINITY, f64::max)
+        * 1.15;
+    println!("{}", table1(&curves, thr));
+    for c in &curves {
+        let (first, last) = (
+            c.points.first().unwrap().loss,
+            c.points.last().unwrap().loss,
+        );
+        anyhow::ensure!(
+            last < first,
+            "{}: loss must decrease ({first:.3} -> {last:.3})",
+            c.method
+        );
+    }
+    println!("all methods converged: e2e OK");
+    Ok(())
+}

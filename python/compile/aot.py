@@ -1,0 +1,146 @@
+"""AOT lowering: jax -> HLO TEXT artifacts + meta.json + init_params.bin.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --preset exp --outdir ../artifacts
+Produces artifacts/<preset>/{train_step,eval_step,grad_step,
+delay_comp_f<i>,outer_step_f<i>}.hlo.txt plus meta.json and init_params.bin.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import (MODEL_PRESETS, TRAIN_PRESETS, ModelConfig, TrainConfig,
+                     flat_layout)
+from .kernels.elementwise import delay_comp, outer_step
+from .model import init_flat
+from .train import make_eval_step, make_grad_step, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the rust
+    side unwraps with to_tuple / to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, lowered) -> None:
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def build(preset: str, outdir: str, n_fragments: int, seed: int,
+          skip_grad: bool = False) -> None:
+    cfg: ModelConfig = MODEL_PRESETS[preset]
+    tc: TrainConfig = TRAIN_PRESETS[preset]
+    # K > n_layers would leave empty strided shards; clamp (paper uses
+    # K=4 over 12 layers, ~3 layers per shard).
+    n_fragments = min(n_fragments, cfg.n_layers)
+    leaves, fragments, P = flat_layout(cfg, n_fragments)
+    B, T = cfg.batch_size, cfg.seq_len
+    d = os.path.join(outdir, preset)
+    os.makedirs(d, exist_ok=True)
+    print(f"[aot] preset={preset} P={P} K={n_fragments} B={B} T={T}")
+
+    fP = jax.ShapeDtypeStruct((P,), jnp.float32)
+    fS = jax.ShapeDtypeStruct((), jnp.float32)
+    iBT = jax.ShapeDtypeStruct((B, T), jnp.int32)
+
+    _write(os.path.join(d, "train_step.hlo.txt"),
+           jax.jit(make_train_step(cfg, tc, n_fragments))
+           .lower(fP, fP, fP, fS, iBT, iBT))
+    _write(os.path.join(d, "eval_step.hlo.txt"),
+           jax.jit(make_eval_step(cfg, n_fragments)).lower(fP, iBT, iBT))
+    if not skip_grad:
+        _write(os.path.join(d, "grad_step.hlo.txt"),
+               jax.jit(make_grad_step(cfg, n_fragments)).lower(fP, iBT, iBT))
+
+    # One delay-comp / outer-step artifact per DISTINCT fragment size.
+    sizes = sorted({f["size"] for f in fragments})
+    size_to_name = {}
+    for s in sizes:
+        fF = jax.ShapeDtypeStruct((s,), jnp.float32)
+        name_dc = f"delay_comp_s{s}"
+        name_os = f"outer_step_s{s}"
+        _write(os.path.join(d, name_dc + ".hlo.txt"),
+               jax.jit(lambda g, tl, tp, tau, H, lam:
+                       (delay_comp(g, tl, tp, tau, H, lam),))
+               .lower(fF, fF, fF, fS, fS, fS))
+        _write(os.path.join(d, name_os + ".hlo.txt"),
+               jax.jit(lambda t, dl, m, lr, mu: outer_step(t, dl, m, lr, mu))
+               .lower(fF, fF, fF, fS, fS))
+        size_to_name[s] = {"delay_comp": name_dc, "outer_step": name_os}
+
+    init = init_flat(cfg, n_fragments, seed=seed)
+    init.tofile(os.path.join(d, "init_params.bin"))
+
+    meta = {
+        "preset": preset,
+        "model": {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "batch_size": cfg.batch_size,
+            "use_pallas_attention": cfg.use_pallas_attention,
+        },
+        "train": {
+            "lr": tc.lr, "warmup_steps": tc.warmup_steps,
+            "total_steps": tc.total_steps, "weight_decay": tc.weight_decay,
+            "beta1": tc.beta1, "beta2": tc.beta2, "eps": tc.eps,
+            "min_lr_ratio": tc.min_lr_ratio,
+        },
+        "param_count": P,
+        "n_fragments": n_fragments,
+        "seed": seed,
+        "leaves": leaves,
+        "fragments": fragments,
+        "fragment_artifacts": {
+            str(f["index"]): size_to_name[f["size"]] for f in fragments
+        },
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "eval_step": "eval_step.hlo.txt",
+            **({} if skip_grad else {"grad_step": "grad_step.hlo.txt"}),
+        },
+    }
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote {d}/meta.json + init_params.bin ({4*P/1e6:.1f} MB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="exp",
+                    choices=sorted(MODEL_PRESETS.keys()) + ["all"])
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--fragments", type=int, default=4,
+                    help="K, the number of strided depth shards (paper: 4)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-grad", action="store_true")
+    args = ap.parse_args()
+    presets = (["tiny", "exp", "e2e"] if args.preset == "all"
+               else [args.preset])
+    for p in presets:
+        build(p, args.outdir, args.fragments, args.seed,
+              skip_grad=args.skip_grad)
+
+
+if __name__ == "__main__":
+    main()

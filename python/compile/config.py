@@ -1,0 +1,142 @@
+"""Model / training configuration shared by the L2 model, the AOT lowering
+pipeline, and (via artifacts/<preset>/meta.json) the rust coordinator.
+
+Presets mirror the paper's setup scaled to this testbed (see DESIGN.md §2):
+the paper trains a 150M-param, 12-layer LLaMA-style model on C4 with M=4
+workers; we keep the architecture family and shrink width/depth so that the
+full three-method comparison fits a CPU PJRT budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch_size: int  # per-worker micro batch
+    rope_theta: float = 10000.0
+    use_pallas_attention: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Inner-optimizer (AdamW) hyperparameters, baked into the train_step
+    artifact except for `step`, which is a runtime input feeding the
+    warmup+cosine schedule (paper §IV-A)."""
+
+    lr: float = 4e-4
+    warmup_steps: int = 100
+    total_steps: int = 4000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    min_lr_ratio: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Presets. `exp` drives the Fig.1/Fig.2/Table I reproduction sweeps; `e2e`
+# is the headline end-to-end example; `tiny` keeps unit tests fast;
+# `paper150m` is the paper's exact architecture (config only on CPU).
+# ---------------------------------------------------------------------------
+MODEL_PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny", vocab_size=64, d_model=32, n_layers=2, n_heads=2,
+        d_ff=64, seq_len=16, batch_size=2,
+    ),
+    "exp": ModelConfig(
+        name="exp", vocab_size=256, d_model=64, n_layers=8, n_heads=4,
+        d_ff=176, seq_len=64, batch_size=8,
+    ),
+    "e2e": ModelConfig(
+        name="e2e", vocab_size=512, d_model=192, n_layers=8, n_heads=6,
+        d_ff=512, seq_len=128, batch_size=8,
+    ),
+    "paper150m": ModelConfig(
+        name="paper150m", vocab_size=32000, d_model=1024, n_layers=12,
+        n_heads=16, d_ff=2816, seq_len=1024, batch_size=16,
+    ),
+}
+
+TRAIN_PRESETS: Dict[str, TrainConfig] = {
+    "tiny": TrainConfig(lr=1e-3, warmup_steps=10, total_steps=200),
+    "exp": TrainConfig(lr=1e-3, warmup_steps=100, total_steps=4000),
+    "e2e": TrainConfig(lr=6e-4, warmup_steps=100, total_steps=2000),
+    "paper150m": TrainConfig(lr=4e-4, warmup_steps=1000, total_steps=18000),
+}
+
+
+def leaf_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """Canonical leaf table: (name, shape, layer). layer == -1 for globals.
+
+    Order here is *canonical model order*; the flat vector is laid out
+    fragment-major on top of this (see flat_layout)."""
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    specs: List[Tuple[str, Tuple[int, ...], int]] = [("embed", (V, D), -1)]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"layer{l}.attn_norm", (D,), l),
+            (f"layer{l}.wq", (D, D), l),
+            (f"layer{l}.wk", (D, D), l),
+            (f"layer{l}.wv", (D, D), l),
+            (f"layer{l}.wo", (D, D), l),
+            (f"layer{l}.mlp_norm", (D,), l),
+            (f"layer{l}.w1", (D, F), l),
+            (f"layer{l}.w3", (D, F), l),
+            (f"layer{l}.w2", (F, D), l),
+        ]
+    specs += [("final_norm", (D,), -2), ("lm_head", (D, V), -2)]
+    return specs
+
+
+def fragment_of(layer: int, n_fragments: int) -> int:
+    """Strided depth partition, exactly Streaming DiLoCo's scheme: layer l
+    belongs to shard l % K. The embedding table joins shard 0; the final
+    norm + LM head join shard K-1."""
+    if layer == -1:
+        return 0
+    if layer == -2:
+        return n_fragments - 1
+    return layer % n_fragments
+
+
+def flat_layout(cfg: ModelConfig, n_fragments: int):
+    """Fragment-major flat layout.
+
+    Returns (leaves, fragments, total) where
+      leaves    = [{name, shape, offset, size, fragment}]  in flat order
+      fragments = [{index, offset, size}]                  contiguous ranges
+      total     = parameter count P
+    """
+    import numpy as np
+
+    per_frag: List[list] = [[] for _ in range(n_fragments)]
+    for name, shape, layer in leaf_specs(cfg):
+        per_frag[fragment_of(layer, n_fragments)].append((name, shape))
+    leaves, fragments = [], []
+    off = 0
+    for p in range(n_fragments):
+        frag_off = off
+        for name, shape in per_frag[p]:
+            size = int(np.prod(shape))
+            leaves.append(
+                {"name": name, "shape": list(shape), "offset": off,
+                 "size": size, "fragment": p}
+            )
+            off += size
+        fragments.append({"index": p, "offset": frag_off, "size": off - frag_off})
+    return leaves, fragments, off

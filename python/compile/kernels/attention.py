@@ -1,0 +1,219 @@
+"""Pallas flash-attention (causal) with a custom VJP.
+
+This is the paper's compute hot spot (the transformer fwd/bwd inside each
+local step) re-thought for TPU per DESIGN.md §Hardware-Adaptation:
+
+  * the HBM->VMEM schedule is expressed with BlockSpecs — Q/dO are tiled
+    over sequence blocks, K/V live in VMEM and are visited block-by-block
+    by an in-kernel loop (the flash recurrence);
+  * softmax uses the running-max / running-sum recurrence so no (T, T)
+    score matrix is ever materialized;
+  * matmuls accumulate in f32 (`preferred_element_type`), the MXU-friendly
+    layout.
+
+Lowered with ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO ops
+that XLA:CPU compiles natively (see /opt/xla-example/README.md).
+
+Because ``pallas_call`` has no autodiff rule, the backward pass is two more
+Pallas kernels (dq, and dk/dv) wired up through ``jax.custom_vjp`` — this is
+what lets the kernel live inside the differentiated train_step artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _block_for(T: int) -> int:
+    for b in (128, 64, 32, 16, 8):
+        if T % b == 0:
+            return b
+    return T
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: one (batch*head, q-block) program; flash recurrence over
+# kv blocks j <= i. Emits o and the log-sum-exp (needed by the backward).
+# ---------------------------------------------------------------------------
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block: int, scale: float):
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # (Bq, dh)
+    dh = q.shape[-1]
+    rows = i * block + jax.lax.iota(jnp.int32, block)
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], j * block, block, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], j * block, block, 0)
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (Bq, Bk)
+        cols = j * block + jax.lax.iota(jnp.int32, block)
+        s = jnp.where(rows[:, None] >= cols[None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block, dh), jnp.float32)
+    m0 = jnp.full((block,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, i + 1, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def _fwd(q, k, v):
+    N, T, dh = q.shape
+    block = _block_for(T)
+    scale = 1.0 / float(dh) ** 0.5
+    grid = (N, T // block)
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, block=block, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block, dh), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, T, dh), lambda n, i: (n, 0, 0)),
+            pl.BlockSpec((1, T, dh), lambda n, i: (n, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block, dh), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, block), lambda n, i: (n, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, T, dh), q.dtype),
+            jax.ShapeDtypeStruct((N, T), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels. delta = rowsum(do * o) is elementwise and precomputed
+# outside. dq is gridded over q blocks (loop over kv blocks j <= i);
+# dk/dv are gridded over kv blocks (loop over q blocks i >= j).
+# ---------------------------------------------------------------------------
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, block: int, scale: float):
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    dh = q.shape[-1]
+    rows = i * block + jax.lax.iota(jnp.int32, block)
+
+    def body(j, dq):
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], j * block, block, 0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], j * block, block, 0).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = j * block + jax.lax.iota(jnp.int32, block)
+        mask = rows[:, None] >= cols[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, i + 1, body, jnp.zeros((block, dh), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, block: int, scale: float, nblocks: int):
+    j = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)  # (Bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    dh = k.shape[-1]
+    cols = j * block + jax.lax.iota(jnp.int32, block)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = jax.lax.dynamic_slice_in_dim(q_ref[0], i * block, block, 0).astype(jnp.float32)
+        do = jax.lax.dynamic_slice_in_dim(do_ref[0], i * block, block, 0).astype(jnp.float32)
+        lse = jax.lax.dynamic_slice_in_dim(lse_ref[0], i * block, block, 0)
+        delta = jax.lax.dynamic_slice_in_dim(delta_ref[0], i * block, block, 0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = i * block + jax.lax.iota(jnp.int32, block)
+        mask = rows[:, None] >= cols[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)  # (Bq, Bk)
+        dv2 = dv + jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk2 = dk + jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+        return dk2, dv2
+
+    z = jnp.zeros((block, dh), jnp.float32)
+    dk, dv = jax.lax.fori_loop(j, nblocks, body, (z, z))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(res, do):
+    q, k, v, o, lse = res
+    N, T, dh = q.shape
+    block = _block_for(T)
+    scale = 1.0 / float(dh) ** 0.5
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # (N, T)
+    grid = (N, T // block)
+    qspec = pl.BlockSpec((1, block, dh), lambda n, i: (n, i, 0))
+    fullspec = pl.BlockSpec((1, T, dh), lambda n, i: (n, 0, 0))
+    rowspec = pl.BlockSpec((1, block), lambda n, i: (n, i))
+    fullrow = pl.BlockSpec((1, T), lambda n, i: (n, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, block=block, scale=scale),
+        grid=grid,
+        in_specs=[qspec, fullspec, fullspec, qspec, rowspec, rowspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((N, T, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, block=block, scale=scale,
+                          nblocks=T // block),
+        grid=grid,
+        in_specs=[fullspec, qspec, qspec, fullspec, fullrow, fullrow],
+        out_specs=[qspec, qspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, T, dh), k.dtype),
+            jax.ShapeDtypeStruct((N, T, dh), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@jax.custom_vjp
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal flash attention over (N, T, dh) tensors (N = batch*heads)."""
+    return _fwd(q, k, v)[0]
+
+
+def _vjp_fwd(q, k, v):
+    o, lse = _fwd(q, k, v)
+    return o, (q, k, v, o, lse)
+
+
+flash_attention.defvjp(_vjp_fwd, _bwd)

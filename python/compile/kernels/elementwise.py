@@ -1,0 +1,140 @@
+"""1-D tiled elementwise Pallas kernels (VPU-bound on real TPU).
+
+All three operate over the flat f32 parameter vector (or a fragment slice of
+it). Tiling: the caller pads to a multiple of BLOCK and slices the result
+back, so arbitrary fragment sizes are supported without masked tail blocks.
+
+ * fused_adamw   — decoupled AdamW with bias correction; runs inside the
+                   train_step artifact after the backward pass (no AD needed).
+ * delay_comp    — CoCoDC Alg. 1 (Eqs. 4/7/8); lowered per fragment size as
+                   its own artifact and dispatched by the rust coordinator.
+ * outer_step    — DiLoCo's Nesterov-momentum outer optimizer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _pad(x, n):
+    return jnp.pad(x, (0, n - x.shape[0])) if x.shape[0] != n else x
+
+
+def _padded(P: int) -> int:
+    if P <= BLOCK:
+        return P
+    return -(-P // BLOCK) * BLOCK
+
+
+def _tile1d(P: int):
+    Pp = _padded(P)
+    blk = min(BLOCK, Pp)
+    grid = (Pp // blk,)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return Pp, grid, spec
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+def _adamw_kernel(p_ref, m_ref, v_ref, g_ref, lr_ref, step_ref,
+                  p_out, m_out, v_out, *, beta1, beta2, eps, wd):
+    p, m, v, g = p_ref[...], m_ref[...], v_ref[...], g_ref[...]
+    lr = lr_ref[0]
+    step = step_ref[0]
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - jnp.power(beta1, step)
+    bc2 = 1.0 - jnp.power(beta2, step)
+    update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * p
+    p_out[...] = p - lr * update
+    m_out[...] = m2
+    v_out[...] = v2
+
+
+def fused_adamw(p, m, v, g, lr, step, *, beta1, beta2, eps, weight_decay):
+    """p,m,v,g: f32[P]; lr, step: f32 scalars (step 1-indexed). -> (p',m',v')."""
+    P = p.shape[0]
+    Pp, grid, spec = _tile1d(P)
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    lr1 = jnp.reshape(lr, (1,)).astype(jnp.float32)
+    step1 = jnp.reshape(step, (1,)).astype(jnp.float32)
+    outs = pl.pallas_call(
+        functools.partial(_adamw_kernel, beta1=beta1, beta2=beta2, eps=eps,
+                          wd=weight_decay),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, scal, scal],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32)] * 3,
+        interpret=True,
+    )(_pad(p, Pp), _pad(m, Pp), _pad(v, Pp), _pad(g, Pp), lr1, step1)
+    return tuple(o[:P] for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# CoCoDC delay compensation (Alg. 1). tau/H/lam are *runtime* scalar inputs
+# so a single artifact per fragment size serves every (tau, H, lam) sweep —
+# tau in particular varies with the measured overlap in adaptive runs.
+# ---------------------------------------------------------------------------
+def _delay_comp_kernel(g_ref, tl_ref, tp_ref, tau_ref, h_ref, lam_ref, out_ref):
+    theta_g, theta_tl, theta_tp = g_ref[...], tl_ref[...], tp_ref[...]
+    tau, H, lam = tau_ref[0], h_ref[0], lam_ref[0]
+    g = (theta_tl - theta_tp) / tau
+    g_corr = g + lam * g * g * (theta_g - theta_tp) / H
+    out_ref[...] = theta_g + g_corr * tau
+
+
+def delay_comp(theta_g, theta_tl, theta_tp, tau, H, lam):
+    """See kernels.ref.ref_delay_comp for the math + sign convention.
+    tau/H/lam: f32 scalars (traced)."""
+    P = theta_g.shape[0]
+    Pp, grid, spec = _tile1d(P)
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    s = lambda x: jnp.reshape(x, (1,)).astype(jnp.float32)
+    out = pl.pallas_call(
+        _delay_comp_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, scal, scal, scal],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
+        interpret=True,
+    )(_pad(theta_g, Pp), _pad(theta_tl, Pp), _pad(theta_tp, Pp),
+      s(tau), s(H), s(lam))
+    return out[:P]
+
+
+# ---------------------------------------------------------------------------
+# Nesterov outer optimizer (DiLoCo / Streaming DiLoCo / CoCoDC all share it)
+# ---------------------------------------------------------------------------
+def _outer_kernel(theta_ref, delta_ref, mom_ref, lr_ref, mu_ref,
+                  theta_out, mom_out):
+    theta, delta, mom = theta_ref[...], delta_ref[...], mom_ref[...]
+    lr, momentum = lr_ref[0], mu_ref[0]
+    grad = -delta
+    mom2 = momentum * mom + grad
+    theta_out[...] = theta - lr * (grad + momentum * mom2)
+    mom_out[...] = mom2
+
+
+def outer_step(theta_g, delta, mom, lr, momentum):
+    """theta_g,delta,mom: f32[S]; lr,momentum: f32 scalars.
+    -> (theta_g', mom'). Matches ref_outer_step."""
+    P = theta_g.shape[0]
+    Pp, grid, spec = _tile1d(P)
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    s = lambda x: jnp.reshape(x, (1,)).astype(jnp.float32)
+    outs = pl.pallas_call(
+        _outer_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, scal, scal],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32)] * 2,
+        interpret=True,
+    )(_pad(theta_g, Pp), _pad(delta, Pp), _pad(mom, Pp), s(lr), s(momentum))
+    return outs[0][:P], outs[1][:P]

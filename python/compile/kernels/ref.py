@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `ref_*` function is the mathematical ground truth the corresponding
+Pallas kernel is tested against (python/tests/test_kernel.py sweeps shapes
+and dtypes with hypothesis and asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal softmax attention. q,k,v: (..., T, dh) -> (..., T, dh)."""
+    dh = q.shape[-1]
+    T = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("...td,...sd->...ts", q, k) * scale
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(mask, s, jnp.asarray(-jnp.inf, s.dtype))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...ts,...sd->...td", p, v)
+
+
+def ref_adamw(p, m, v, g, lr, step, *, beta1, beta2, eps, weight_decay):
+    """Decoupled AdamW single update. step is 1-indexed (f32 scalar)."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p2, m2, v2
+
+
+def ref_delay_comp(theta_g, theta_tl, theta_tp, *, tau, H, lam):
+    """CoCoDC delay compensation (paper Alg. 1, Eqs. 4/7/8).
+
+    Sign convention (documented in DESIGN.md): the paper's Eqs. 4-8 use an
+    internally inconsistent sign for the local change rate. We implement the
+    consistent reading:
+
+      g      = (theta_tl - theta_tp) / tau        forward local change rate
+      g_corr = g + lam * g*g * (theta_g - theta_tp) / H   Eq.5's Hessian term,
+               pulling the rate toward the observed global-local divergence
+      theta' = theta_g + g_corr * tau             extrapolate global state
+
+    With lam=0 this extrapolates the fresh global state by the local
+    trajectory over the tau overlap steps; with tau=0 it adopts theta_g.
+    """
+    g = (theta_tl - theta_tp) / tau
+    g_corr = g + lam * g * g * (theta_g - theta_tp) / H
+    return theta_g + g_corr * tau
+
+
+def ref_outer_step(theta_g, delta, mom, *, lr, momentum):
+    """Nesterov-momentum outer optimizer over pseudo-gradients (DiLoCo).
+
+    delta = mean_m(theta^m - theta^g) is the averaged pseudo-gradient; the
+    outer gradient is its negation. Matches torch SGD(nesterov=True).
+    """
+    grad = -delta
+    mom2 = momentum * mom + grad
+    theta2 = theta_g - lr * (grad + momentum * mom2)
+    return theta2, mom2
+
+
+def ref_rmsnorm(x, gain, eps: float = 1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def ref_swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2

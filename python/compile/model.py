@@ -1,0 +1,117 @@
+"""L2: LLaMA-style decoder-only transformer over a FLAT parameter vector.
+
+Architecture (paper §IV-A: "decoder-only and LLaMA-style transformer"):
+RMSNorm pre-norm, rotary position embeddings, SwiGLU MLP, causal attention,
+untied LM head. All parameters are packed into one f32[P] vector laid out
+fragment-major (see config.flat_layout) so the rust coordinator can treat
+Streaming-DiLoCo/CoCoDC fragments as contiguous slices.
+
+Attention runs through the Pallas flash kernel (kernels.attention) by
+default, or the pure-jnp reference when cfg.use_pallas_attention=False
+(used by tests and the L2-ablation bench).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, flat_layout, leaf_specs
+from .kernels.attention import flash_attention
+from .kernels.ref import ref_attention, ref_rmsnorm, ref_swiglu
+
+
+def unflatten(flat: jax.Array, cfg: ModelConfig, n_fragments: int) -> Dict[str, jax.Array]:
+    """Slice the flat vector back into named leaves (static offsets: the
+    slices lower to free HLO slices/reshapes)."""
+    leaves, _, total = flat_layout(cfg, n_fragments)
+    assert flat.shape == (total,), (flat.shape, total)
+    out = {}
+    for leaf in leaves:
+        x = jax.lax.slice_in_dim(flat, leaf["offset"], leaf["offset"] + leaf["size"])
+        out[leaf["name"]] = x.reshape(leaf["shape"])
+    return out
+
+
+def init_flat(cfg: ModelConfig, n_fragments: int, seed: int = 0) -> np.ndarray:
+    """Deterministic init (numpy so the artifact build can dump it to disk).
+
+    Scaled-normal init a la GPT-2/LLaMA: std = 0.02 for embeddings/inputs,
+    residual-out projections scaled by 1/sqrt(2*n_layers); norms at 1."""
+    rng = np.random.default_rng(seed)
+    leaves, _, total = flat_layout(cfg, n_fragments)
+    flat = np.zeros(total, np.float32)
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.n_layers)
+    for leaf in leaves:
+        name = leaf["name"]
+        sl = slice(leaf["offset"], leaf["offset"] + leaf["size"])
+        if name.endswith("_norm"):
+            flat[sl] = 1.0
+        else:
+            std = 0.02
+            if name.endswith(".wo") or name.endswith(".w2"):
+                std *= resid_scale
+            flat[sl] = rng.normal(0.0, std, leaf["size"]).astype(np.float32)
+    return flat
+
+
+def _rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding over (B, nh, T, dh)."""
+    B, nh, T, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(T, dtype=jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _attention(x: jax.Array, p: Dict[str, jax.Array], l: int, cfg: ModelConfig) -> jax.Array:
+    B, T, D = x.shape
+    nh, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p[f"layer{l}.wq"]).reshape(B, T, nh, dh).transpose(0, 2, 1, 3)
+    k = (x @ p[f"layer{l}.wk"]).reshape(B, T, nh, dh).transpose(0, 2, 1, 3)
+    v = (x @ p[f"layer{l}.wv"]).reshape(B, T, nh, dh).transpose(0, 2, 1, 3)
+    q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+    if cfg.use_pallas_attention:
+        o = flash_attention(
+            q.reshape(B * nh, T, dh), k.reshape(B * nh, T, dh),
+            v.reshape(B * nh, T, dh),
+        ).reshape(B, nh, T, dh)
+    else:
+        o = ref_attention(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+    return o @ p[f"layer{l}.wo"]
+
+
+def forward(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig,
+            n_fragments: int) -> jax.Array:
+    """tokens: i32[B, T] -> logits f32[B, T, V]."""
+    p = unflatten(flat, cfg, n_fragments)
+    x = p["embed"][tokens]  # (B, T, D)
+    for l in range(cfg.n_layers):
+        x = x + _attention(ref_rmsnorm(x, p[f"layer{l}.attn_norm"]), p, l, cfg)
+        x = x + ref_swiglu(
+            ref_rmsnorm(x, p[f"layer{l}.mlp_norm"]),
+            p[f"layer{l}.w1"], p[f"layer{l}.w3"], p[f"layer{l}.w2"],
+        )
+    x = ref_rmsnorm(x, p["final_norm"])
+    return x @ p["lm_head"]
+
+
+def loss_fn(flat: jax.Array, tokens: jax.Array, targets: jax.Array,
+            cfg: ModelConfig, n_fragments: int) -> jax.Array:
+    """Mean token cross-entropy (natural log; perplexity = exp(loss))."""
+    logits = forward(flat, tokens, cfg, n_fragments)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s, _ in leaf_specs(cfg))

@@ -1,0 +1,67 @@
+"""L2: differentiated train/eval steps with the fused-AdamW Pallas kernel.
+
+`train_step` is the single artifact executed on every local step by every
+simulated datacenter worker (L3 hot path). The warmup+cosine LR schedule
+(paper §IV-A) is computed *inside* the artifact from the runtime `step`
+input, so the rust side never re-implements it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, TrainConfig
+from .kernels.elementwise import fused_adamw
+from .model import loss_fn
+
+
+def lr_schedule(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    """Linear warmup to tc.lr, then cosine decay to min_lr_ratio*lr.
+    `step` is 0-indexed f32."""
+    warm = jnp.asarray(tc.warmup_steps, jnp.float32)
+    total = jnp.asarray(tc.total_steps, jnp.float32)
+    lr_warm = tc.lr * (step + 1.0) / jnp.maximum(warm, 1.0)
+    prog = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    lr_cos = tc.lr * (tc.min_lr_ratio + (1.0 - tc.min_lr_ratio) * cos)
+    return jnp.where(step < warm, lr_warm, lr_cos)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_fragments: int):
+    """(params, m, v, step, tokens, targets) -> (params', m', v', loss)."""
+
+    def train_step(flat, m, v, step, tokens, targets):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, tokens, targets, cfg,
+                                                 n_fragments)
+        lr = lr_schedule(step, tc)
+        flat2, m2, v2 = fused_adamw(
+            flat, m, v, grad, lr, step + 1.0,
+            beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+            weight_decay=tc.weight_decay,
+        )
+        return flat2, m2, v2, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, n_fragments: int):
+    """(params, tokens, targets) -> (loss,). PPL = exp(loss)."""
+
+    def eval_step(flat, tokens, targets):
+        return (loss_fn(flat, tokens, targets, cfg, n_fragments),)
+
+    return eval_step
+
+
+def make_grad_step(cfg: ModelConfig, n_fragments: int):
+    """(params, tokens, targets) -> (loss, grad). Ablation/testing artifact:
+    the raw backward pass without the optimizer, used by the L2 fusion bench
+    and rust-side gradient-path tests."""
+
+    def grad_step(flat, tokens, targets):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, tokens, targets, cfg,
+                                                 n_fragments)
+        return loss, grad
+
+    return grad_step

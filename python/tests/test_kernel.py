@@ -1,0 +1,195 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the dist-train guide; every property is
+checked with assert_allclose against kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, _block_for
+from compile.kernels.elementwise import (BLOCK, delay_comp, fused_adamw,
+                                         outer_step)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    t_pow=st.integers(3, 7),  # T in {8..128}
+    dh=st.sampled_from([8, 16, 32, 48]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_forward_matches_ref(n, t_pow, dh, seed):
+    T = 2**t_pow
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (n, T, dh)) for i in range(3))
+    got = flash_attention(q, k, v)
+    want = ref.ref_attention(q, k, v)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    t_pow=st.integers(3, 6),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_gradients_match_ref(t_pow, dh, seed):
+    T = 2**t_pow
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (2, T, dh)) for i in range(3))
+    w = _rand(jax.random.fold_in(key, 9), (2, T, dh))
+
+    def lp(q, k, v):
+        return jnp.sum(flash_attention(q, k, v) * w)
+
+    def lr_(q, k, v):
+        return jnp.sum(ref.ref_attention(q, k, v) * w)
+
+    gp = jax.grad(lp, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lr_, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=5e-5)
+
+
+def test_attention_is_causal():
+    """Perturbing future positions must not change earlier outputs."""
+    key = jax.random.PRNGKey(0)
+    T, dh = 32, 16
+    q, k, v = (_rand(jax.random.fold_in(key, i), (1, T, dh)) for i in range(3))
+    o1 = flash_attention(q, k, v)
+    k2 = k.at[:, T // 2:, :].set(99.0)
+    v2 = v.at[:, T // 2:, :].set(-99.0)
+    o2 = flash_attention(q, k2, v2)
+    assert_allclose(np.asarray(o1[:, : T // 2]), np.asarray(o2[:, : T // 2]),
+                    atol=1e-5)
+    assert not np.allclose(np.asarray(o1[:, T // 2:]),
+                           np.asarray(o2[:, T // 2:]))
+
+
+def test_block_for_divides():
+    for T in (8, 16, 24, 64, 128, 1024):
+        assert T % _block_for(T) == 0
+
+
+def test_attention_softmax_rows_sum_to_one():
+    """o must be a convex combination of v rows: with constant v, o == v."""
+    T, dh = 16, 8
+    key = jax.random.PRNGKey(1)
+    q, k = (_rand(jax.random.fold_in(key, i), (1, T, dh)) for i in range(2))
+    v = jnp.ones((1, T, dh), jnp.float32) * 3.5
+    o = flash_attention(q, k, v)
+    assert_allclose(np.asarray(o), 3.5 * np.ones_like(o), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    p_size=st.sampled_from([1, 17, 1000, BLOCK, BLOCK + 3, 2 * BLOCK + 11]),
+    step=st.integers(1, 10_000),
+    lr=st.floats(1e-6, 1e-1),
+    seed=st.integers(0, 2**16),
+)
+def test_adamw_matches_ref(p_size, step, lr, seed):
+    key = jax.random.PRNGKey(seed)
+    p, m, g = (_rand(jax.random.fold_in(key, i), (p_size,)) for i in range(3))
+    v = jnp.abs(_rand(jax.random.fold_in(key, 7), (p_size,)))
+    kw = dict(beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.1)
+    got = fused_adamw(p, m, v, g, jnp.float32(lr), jnp.float32(step), **kw)
+    want = ref.ref_adamw(p, m, v, g, lr, float(step), **kw)
+    for a, b in zip(got, want):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+def test_adamw_zero_grad_is_pure_decay():
+    p = jnp.ones((100,), jnp.float32)
+    z = jnp.zeros_like(p)
+    kw = dict(beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.1)
+    p2, m2, v2 = fused_adamw(p, z, z, z, jnp.float32(0.01), jnp.float32(1.0), **kw)
+    assert_allclose(np.asarray(p2), np.asarray(p * (1 - 0.01 * 0.1)), rtol=1e-6)
+    assert float(jnp.max(jnp.abs(m2))) == 0.0
+    assert float(jnp.max(jnp.abs(v2))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# delay compensation (CoCoDC Alg. 1)
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    size=st.sampled_from([3, 100, BLOCK + 5]),
+    tau=st.integers(1, 50),
+    H=st.integers(1, 500),
+    lam=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**16),
+)
+def test_delay_comp_matches_ref(size, tau, H, lam, seed):
+    key = jax.random.PRNGKey(seed)
+    tg, tl, tp = (_rand(jax.random.fold_in(key, i), (size,)) for i in range(3))
+    got = delay_comp(tg, tl, tp, jnp.float32(tau), jnp.float32(H),
+                     jnp.float32(lam))
+    want = ref.ref_delay_comp(tg, tl, tp, tau=tau, H=H, lam=lam)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_delay_comp_lambda_zero_is_linear_extrapolation():
+    """lam=0: theta' = theta_g + (theta_tl - theta_tp)."""
+    key = jax.random.PRNGKey(3)
+    tg, tl, tp = (_rand(jax.random.fold_in(key, i), (64,)) for i in range(3))
+    got = delay_comp(tg, tl, tp, jnp.float32(7.0), jnp.float32(100.0),
+                     jnp.float32(0.0))
+    assert_allclose(np.asarray(got), np.asarray(tg + (tl - tp)), atol=1e-5)
+
+
+def test_delay_comp_no_local_movement_adopts_global():
+    """If the local model did not move during overlap, theta' == theta_g."""
+    key = jax.random.PRNGKey(4)
+    tg = _rand(key, (64,))
+    tl = _rand(jax.random.fold_in(key, 1), (64,))
+    got = delay_comp(tg, tl, tl, jnp.float32(5.0), jnp.float32(100.0),
+                     jnp.float32(0.5))
+    assert_allclose(np.asarray(got), np.asarray(tg), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Nesterov outer step
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    size=st.sampled_from([2, 333, BLOCK + 1]),
+    lr=st.floats(0.01, 1.0),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**16),
+)
+def test_outer_step_matches_ref(size, lr, mu, seed):
+    key = jax.random.PRNGKey(seed)
+    tg, dl, mom = (_rand(jax.random.fold_in(key, i), (size,)) for i in range(3))
+    got = outer_step(tg, dl, mom, jnp.float32(lr), jnp.float32(mu))
+    want = ref.ref_outer_step(tg, dl, mom, lr=lr, momentum=mu)
+    for a, b in zip(got, want):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+def test_outer_step_zero_momentum_is_sgd_toward_consensus():
+    """mu=0, lr=1: theta' = theta + delta (full adoption of the average)."""
+    key = jax.random.PRNGKey(5)
+    tg, dl = (_rand(jax.random.fold_in(key, i), (32,)) for i in range(2))
+    t2, m2 = outer_step(tg, dl, jnp.zeros_like(tg), jnp.float32(1.0),
+                        jnp.float32(0.0))
+    assert_allclose(np.asarray(t2), np.asarray(tg + dl), atol=1e-6)
+    assert_allclose(np.asarray(m2), np.asarray(-dl), atol=1e-6)

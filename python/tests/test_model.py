@@ -1,0 +1,234 @@
+"""L2 model tests: flat layout invariants, forward shapes, loss sanity,
+training-step behaviour, LR schedule."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import (MODEL_PRESETS, TRAIN_PRESETS, flat_layout,
+                            fragment_of, leaf_specs)
+from compile.model import forward, init_flat, loss_fn, param_count, unflatten
+from compile.train import lr_schedule, make_eval_step, make_train_step
+
+CFG = MODEL_PRESETS["tiny"]
+TC = TRAIN_PRESETS["tiny"]
+K = 2  # tiny has 2 layers
+
+
+# ---------------------------------------------------------------------------
+# flat layout
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(preset=st.sampled_from(["tiny", "exp", "e2e"]), k=st.integers(1, 8))
+def test_flat_layout_partition_invariants(preset, k):
+    """Fragments are disjoint, contiguous, exhaustive; every leaf lives in
+    exactly one fragment and inside its fragment's range."""
+    cfg = MODEL_PRESETS[preset]
+    k = min(k, cfg.n_layers)
+    leaves, fragments, total = flat_layout(cfg, k)
+    assert total == param_count(cfg)
+    # fragments tile [0, total)
+    off = 0
+    for f in fragments:
+        assert f["offset"] == off
+        assert f["size"] > 0
+        off += f["size"]
+    assert off == total
+    # leaves tile [0, total) and respect fragment containment
+    seen = set()
+    for leaf in leaves:
+        assert leaf["name"] not in seen
+        seen.add(leaf["name"])
+        f = fragments[leaf["fragment"]]
+        assert f["offset"] <= leaf["offset"]
+        assert leaf["offset"] + leaf["size"] <= f["offset"] + f["size"]
+    assert sum(l["size"] for l in leaves) == total
+    assert len(seen) == len(leaf_specs(cfg))
+
+
+def test_strided_fragment_assignment():
+    """Paper/Streaming-DiLoCo strided pattern: layer l -> shard l % K."""
+    for l in range(12):
+        assert fragment_of(l, 4) == l % 4
+    assert fragment_of(-1, 4) == 0       # embedding -> first shard
+    assert fragment_of(-2, 4) == 3       # head -> last shard
+
+
+def test_unflatten_round_trips_leaves():
+    leaves, _, total = flat_layout(CFG, K)
+    flat = jnp.arange(total, dtype=jnp.float32)
+    tree = unflatten(flat, CFG, K)
+    for leaf in leaves:
+        want = np.arange(leaf["offset"], leaf["offset"] + leaf["size"],
+                         dtype=np.float32).reshape(leaf["shape"])
+        np.testing.assert_array_equal(np.asarray(tree[leaf["name"]]), want)
+
+
+def test_init_flat_deterministic_and_normalized():
+    a = init_flat(CFG, K, seed=7)
+    b = init_flat(CFG, K, seed=7)
+    c = init_flat(CFG, K, seed=8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    tree = unflatten(jnp.asarray(a), CFG, K)
+    np.testing.assert_array_equal(np.asarray(tree["layer0.attn_norm"]), 1.0)
+    assert abs(float(np.std(np.asarray(tree["embed"])) - 0.02)) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    tok = rng.integers(0, CFG.vocab_size, (CFG.batch_size, CFG.seq_len))
+    return (jnp.asarray(tok, jnp.int32),
+            jnp.asarray(np.roll(tok, -1, 1), jnp.int32))
+
+
+def test_forward_shapes_and_finite():
+    flat = jnp.asarray(init_flat(CFG, K))
+    tok, _ = _batch()
+    logits = forward(flat, tok, CFG, K)
+    assert logits.shape == (CFG.batch_size, CFG.seq_len, CFG.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """At init the model should be ~uniform over the vocab."""
+    flat = jnp.asarray(init_flat(CFG, K))
+    tok, tgt = _batch()
+    loss = loss_fn(flat, tok, tgt, CFG, K)
+    assert abs(float(loss) - np.log(CFG.vocab_size)) < 0.3
+
+
+def test_pallas_and_ref_attention_models_agree():
+    cfg_ref = dataclasses.replace(CFG, use_pallas_attention=False)
+    flat = jnp.asarray(init_flat(CFG, K))
+    tok, tgt = _batch()
+    l1 = loss_fn(flat, tok, tgt, CFG, K)
+    l2 = loss_fn(flat, tok, tgt, cfg_ref, K)
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+def test_causality_of_full_model():
+    flat = jnp.asarray(init_flat(CFG, K))
+    tok, _ = _batch()
+    logits1 = forward(flat, tok, CFG, K)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab_size)
+    logits2 = forward(flat, tok2, CFG, K)
+    np.testing.assert_allclose(np.asarray(logits1[:, :-1]),
+                               np.asarray(logits2[:, :-1]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def test_train_step_reduces_loss_on_fixed_batch():
+    step_fn = jax.jit(make_train_step(CFG, TC, K))
+    flat = jnp.asarray(init_flat(CFG, K))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    tok, tgt = _batch()
+    losses = []
+    for i in range(30):
+        flat, m, v, loss = step_fn(flat, m, v, jnp.float32(i), tok, tgt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses[::10]
+    assert all(np.isfinite(losses))
+
+
+def test_train_step_updates_every_fragment():
+    _, fragments, _ = flat_layout(CFG, K)
+    step_fn = jax.jit(make_train_step(CFG, TC, K))
+    flat0 = jnp.asarray(init_flat(CFG, K))
+    z = jnp.zeros_like(flat0)
+    tok, tgt = _batch()
+    flat1, _, _, _ = step_fn(flat0, z, z, jnp.float32(0), tok, tgt)
+    d = np.asarray(jnp.abs(flat1 - flat0))
+    for f in fragments:
+        assert d[f["offset"]:f["offset"] + f["size"]].max() > 0.0
+
+
+def test_eval_step_matches_loss_fn():
+    eval_fn = jax.jit(make_eval_step(CFG, K))
+    flat = jnp.asarray(init_flat(CFG, K))
+    tok, tgt = _batch()
+    (l1,) = eval_fn(flat, tok, tgt)
+    l2 = loss_fn(flat, tok, tgt, CFG, K)
+    assert abs(float(l1) - float(l2)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# LR schedule
+# ---------------------------------------------------------------------------
+def test_lr_schedule_warmup_and_decay():
+    tc = TRAIN_PRESETS["exp"]
+    lrs = [float(lr_schedule(jnp.float32(s), tc))
+           for s in (0, tc.warmup_steps // 2, tc.warmup_steps,
+                     tc.total_steps // 2, tc.total_steps)]
+    assert lrs[0] < lrs[1] < lrs[2]                    # warmup rises
+    assert abs(lrs[2] - tc.lr) / tc.lr < 0.02          # peak ~ lr
+    assert lrs[3] < lrs[2]                             # cosine decays
+    assert lrs[4] >= tc.lr * tc.min_lr_ratio * 0.99    # floor respected
+
+
+@settings(max_examples=30, deadline=None)
+@given(step=st.floats(0, 4000))
+def test_lr_schedule_bounded(step):
+    tc = TRAIN_PRESETS["exp"]
+    lr = float(lr_schedule(jnp.float32(step), tc))
+    assert 0.0 < lr <= tc.lr * 1.001
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm_and_zero_position():
+    from compile.model import _rope
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8, 16), jnp.float32)
+    y = _rope(x, 10000.0)
+    # Rotations preserve per-pair L2 norms.
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # Position 0 has angle 0: unrotated.
+    np.testing.assert_allclose(np.asarray(y[:, :, 0]), np.asarray(x[:, :, 0]),
+                               atol=1e-6)
+
+
+def test_rope_is_relative():
+    """<rope(q,i), rope(k,j)> must depend only on i-j (decoder RoPE)."""
+    from compile.model import _rope
+
+    key = jax.random.PRNGKey(1)
+    dh = 16
+    q = jax.random.normal(key, (dh,), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (dh,), jnp.float32)
+    T = 8
+
+    def dot_at(i, j):
+        x = jnp.zeros((1, 1, T, dh)).at[0, 0, i].set(q)
+        y = jnp.zeros((1, 1, T, dh)).at[0, 0, j].set(k)
+        xr, yr = _rope(x, 10000.0), _rope(y, 10000.0)
+        return float(jnp.dot(xr[0, 0, i], yr[0, 0, j]))
+
+    assert abs(dot_at(2, 0) - dot_at(5, 3)) < 1e-4
+    assert abs(dot_at(4, 1) - dot_at(6, 3)) < 1e-4
+
+
+def test_gradient_flows_to_all_leaves():
+    leaves, _, _ = flat_layout(CFG, K)
+    tok, tgt = _batch()
+    flat = jnp.asarray(init_flat(CFG, K))
+    g = jax.grad(loss_fn)(flat, tok, tgt, CFG, K)
+    g = np.asarray(g)
+    for leaf in leaves:
+        seg = g[leaf["offset"]:leaf["offset"] + leaf["size"]]
+        assert np.abs(seg).max() > 0.0, f"zero gradient in {leaf['name']}"

@@ -1,0 +1,47 @@
+//! Bench: ring all-reduce data path + cost model (the WAN substrate under
+//! every synchronization in Figs. 1-2 / Table I).
+
+use std::time::Duration;
+
+use cocodc::network::ring::{ring_allreduce_mean, ring_allreduce_time};
+use cocodc::util::bench::{bench, black_box};
+use cocodc::util::Rng;
+
+fn main() {
+    println!("== bench_allreduce ==");
+    let budget = Duration::from_millis(400);
+    for &(m, n) in &[(4usize, 100_608usize), (4, 1_000_000), (8, 100_608), (2, 100_608)] {
+        let mut rng = Rng::new(1, 0);
+        let bufs: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..n).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let r = bench(
+            &format!("ring_allreduce_mean m={m} n={n}"),
+            2,
+            budget,
+            || {
+                let mut b = bufs.clone();
+                ring_allreduce_mean(&mut b);
+                black_box(&b);
+            },
+        );
+        // Effective reduced bandwidth (element-visits per second).
+        println!(
+            "    -> {:.2} Gelem/s effective",
+            r.throughput((m * n) as f64) / 1e9
+        );
+    }
+    // Cost model sanity table (matches DESIGN.md §WAN).
+    println!("\nanalytic ring time (M=4, 1 Gbps, 50 ms): bytes -> seconds");
+    for bytes in [4e5, 4e6, 4e7] {
+        println!(
+            "  {:>10.0}B  {:.4}s",
+            bytes,
+            ring_allreduce_time(bytes, 4, 0.05, 125e6)
+        );
+    }
+    let t = bench("ring_allreduce_time (cost model eval)", 10, budget, || {
+        black_box(ring_allreduce_time(black_box(4e6), 4, 0.05, 125e6));
+    });
+    assert!(t.mean < Duration::from_micros(1));
+}

@@ -1,0 +1,36 @@
+//! Bench: synthetic-C4 generation throughput (the data substrate must never
+//! bottleneck the lockstep round; target >> tokens consumed per step).
+
+use std::time::Duration;
+
+use cocodc::config::DataConfig;
+use cocodc::data::batches::BatchStream;
+use cocodc::data::Split;
+use cocodc::util::bench::{bench, black_box};
+
+fn main() {
+    println!("== bench_data ==");
+    let budget = Duration::from_millis(500);
+    for &(vocab, batch, seq) in &[(256usize, 8usize, 64usize), (512, 8, 128), (32000, 16, 1024)] {
+        let mut s = BatchStream::new(
+            vocab,
+            DataConfig::default(),
+            1,
+            Split::Train { worker: 0, workers: 4 },
+            batch,
+            seq,
+        );
+        let r = bench(
+            &format!("next_batch vocab={vocab} B={batch} T={seq}"),
+            3,
+            budget,
+            || {
+                black_box(s.next_batch());
+            },
+        );
+        println!(
+            "    -> {:.2} Mtokens/s",
+            r.throughput((batch * seq) as f64) / 1e6
+        );
+    }
+}

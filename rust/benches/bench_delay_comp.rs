@@ -1,0 +1,79 @@
+//! Bench: delay compensation + outer step — native rust loop vs the
+//! Pallas/HLO artifact dispatched through PJRT. Quantifies why the trainer
+//! defaults to the rust path for small fragments (per-dispatch overhead)
+//! while proving both produce identical updates (see integration tests).
+
+use std::path::Path;
+use std::time::Duration;
+
+use cocodc::coordinator::delay_comp::delay_compensate;
+use cocodc::coordinator::outer_opt::outer_step;
+use cocodc::runtime::Engine;
+use cocodc::util::bench::{bench, black_box};
+use cocodc::util::Rng;
+
+fn main() {
+    println!("== bench_delay_comp (rust vs Pallas/HLO artifact) ==");
+    let budget = Duration::from_millis(400);
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    for preset in ["tiny", "exp"] {
+        if !dir.join(preset).join("meta.json").exists() {
+            println!("SKIP {preset}: run `make artifacts`");
+            continue;
+        }
+        let engine = Engine::load(&dir, preset).expect("engine");
+        let meta = engine.meta();
+        let frag = meta.fragments[0];
+        let n = frag.size;
+        let mut rng = Rng::new(3, 0);
+        let tg = rng.f32_vec(n, 0.5);
+        let tl = rng.f32_vec(n, 0.5);
+        let tp = rng.f32_vec(n, 0.5);
+        let mut out = vec![0.0f32; n];
+
+        let r_rust = bench(
+            &format!("[{preset}] delay_comp rust (S={n})"),
+            3,
+            budget,
+            || {
+                delay_compensate(&mut out, black_box(&tg), &tl, &tp, 5.0, 100.0, 0.5);
+                black_box(&out);
+            },
+        );
+        let r_hlo = bench(
+            &format!("[{preset}] delay_comp HLO/PJRT (S={n})"),
+            3,
+            budget,
+            || {
+                black_box(
+                    engine
+                        .delay_comp_hlo(0, &tg, &tl, &tp, 5.0, 100.0, 0.5)
+                        .unwrap(),
+                );
+            },
+        );
+        println!(
+            "    -> rust is {:.1}x faster at this fragment size",
+            r_hlo.mean.as_secs_f64() / r_rust.mean.as_secs_f64()
+        );
+
+        let delta = rng.f32_vec(n, 0.01);
+        let mut theta = tg.clone();
+        let mut mom = vec![0.0f32; n];
+        bench(&format!("[{preset}] outer_step rust (S={n})"), 3, budget, || {
+            outer_step(&mut theta, black_box(&delta), &mut mom, 0.7, 0.9);
+            black_box(&theta);
+        });
+        bench(
+            &format!("[{preset}] outer_step HLO/PJRT (S={n})"),
+            3,
+            budget,
+            || {
+                black_box(
+                    engine.outer_step_hlo(0, &tg, &delta, &mom, 0.7, 0.9).unwrap(),
+                );
+            },
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Bench: end-to-end steps/second per synchronization method (the system
+//! cost behind Table I / Figs. 1-2) plus the coordinator-only overhead of
+//! each strategy (post_step with the PJRT step excluded).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::coordinator::strategy::SyncCtx;
+use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
+use cocodc::network::WanSimulator;
+use cocodc::runtime::TrainState;
+use cocodc::simclock::VirtualClock;
+use cocodc::util::bench::black_box;
+use cocodc::util::Rng;
+use cocodc::Trainer;
+
+fn main() {
+    println!("== bench_table1: end-to-end method cost ==");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    // (a) full runs on the tiny preset: real steps/sec per method.
+    if dir.join("tiny").join("meta.json").exists() {
+        let engine = cocodc::runtime::Engine::load(&dir, "tiny").expect("engine");
+        for method in MethodKind::all() {
+            let mut cfg = RunConfig::paper("tiny", method);
+            cfg.workers = 4;
+            cfg.h_steps = 10;
+            cfg.tau = TauMode::Fixed { tau: 2 };
+            cfg.total_steps = 40;
+            cfg.eval_every = 40;
+            cfg.eval_batches = 1;
+            let mut tr = Trainer::new(&engine, cfg).unwrap();
+            let t = Instant::now();
+            let out = tr.run().unwrap();
+            let dt = t.elapsed();
+            println!(
+                "{:<18} 40 steps x 4 workers in {:>8.2?} = {:>6.1} steps/s  \
+                 (virtual wall {:.1}s, {} syncs)",
+                out.method,
+                dt,
+                40.0 / dt.as_secs_f64(),
+                out.wall_s,
+                out.syncs_completed
+            );
+        }
+    } else {
+        println!("SKIP full runs: artifacts/tiny missing (run `make artifacts`)");
+    }
+
+    // (b) coordinator-only overhead at exp scale (no PJRT in the loop).
+    println!("\ncoordinator-only post_step cost at exp scale (450k params, M=4):");
+    for method in MethodKind::all() {
+        let frags =
+            FragmentTable::from_sizes(&[100_608, 117_056, 116_992, 116_992]);
+        let mut cfg = RunConfig::paper("sim", method);
+        cfg.h_steps = 100;
+        cfg.tau = TauMode::Fixed { tau: 5 };
+        let init = vec![0.0f32; frags.total_params()];
+        let mut workers: Vec<TrainState> =
+            (0..4).map(|_| TrainState::new(init.clone())).collect();
+        let mut global = GlobalState::new(&init);
+        let mut net = WanSimulator::new(cfg.network, 4, 1);
+        let mut clock = VirtualClock::new();
+        let mut stats = SyncStats::new(frags.k());
+        let mut strategy = make_strategy(&cfg, &frags);
+        let mut rng = Rng::new(4, 0);
+        let steps = 400u32;
+        let t = Instant::now();
+        for step in 1..=steps {
+            for w in workers.iter_mut() {
+                // cheap drift so syncs have real data to move
+                let r = rng.next_gaussian() as f32 * 0.01;
+                for x in w.params.iter_mut().step_by(97) {
+                    *x += r;
+                }
+            }
+            clock.advance_compute(cfg.network.step_compute_s);
+            let mut ctx = SyncCtx {
+                workers: &mut workers,
+                global: &mut global,
+                net: &mut net,
+                clock: &mut clock,
+                engine: None,
+                cfg: &cfg,
+                frags: &frags,
+                stats: &mut stats,
+            };
+            strategy.post_step(step, &mut ctx).unwrap();
+            black_box(&workers);
+        }
+        let per_step = t.elapsed() / steps;
+        println!(
+            "{:<18} {:>10.2?}/step  ({} syncs over {steps} steps) -> {:.2}% of a 150 ms train step",
+            format!("{}:", strategy.name()),
+            per_step,
+            stats.syncs_completed,
+            100.0 * per_step.as_secs_f64() / 0.150
+        );
+        let _ = Duration::ZERO;
+    }
+}

@@ -1,0 +1,79 @@
+//! Bench: PJRT train/eval step latency per preset, serial vs 4 parallel
+//! workers — the L3-visible cost of the L2+L1 artifact (Pallas flash
+//! attention + fused AdamW inside the lowered HLO).
+
+use std::path::Path;
+use std::time::Duration;
+
+use cocodc::runtime::{Engine, TrainState};
+use cocodc::util::bench::{bench, black_box};
+use cocodc::util::Rng;
+
+fn batch(engine: &Engine, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let meta = engine.meta();
+    let mut rng = Rng::new(seed, 0);
+    let n = meta.batch_elems();
+    let tokens: Vec<i32> =
+        (0..n).map(|_| rng.below(meta.model.vocab_size as u64) as i32).collect();
+    let mut targets = tokens.clone();
+    targets.rotate_left(1);
+    (tokens, targets)
+}
+
+fn main() {
+    println!("== bench_train_step ==");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let budget = Duration::from_secs(2);
+
+    for preset in ["tiny", "exp"] {
+        if !dir.join(preset).join("meta.json").exists() {
+            println!("SKIP {preset}: run `make artifacts`");
+            continue;
+        }
+        let engine = Engine::load(&dir, preset).expect("engine");
+        let meta = engine.meta();
+        let tokens_per_step = meta.batch_elems() as f64;
+        let (tokens, targets) = batch(&engine, 1);
+
+        let mut st = TrainState::new(engine.init_params().unwrap());
+        let r = bench(&format!("[{preset}] train_step x1"), 2, budget, || {
+            black_box(engine.train_step(&mut st, &tokens, &targets).unwrap());
+        });
+        println!(
+            "    -> {:.0} tokens/s single worker (P={})",
+            r.throughput(tokens_per_step),
+            meta.param_count
+        );
+
+        // 4 workers in parallel threads (the trainer's lockstep round).
+        let mut states: Vec<TrainState> =
+            (0..4).map(|_| TrainState::new(engine.init_params().unwrap())).collect();
+        let eng = &engine;
+        let (tok_ref, tgt_ref) = (&tokens, &targets);
+        let r4 = bench(&format!("[{preset}] train_step x4 parallel"), 2, budget, || {
+            std::thread::scope(|s| {
+                let hs: Vec<_> = states
+                    .iter_mut()
+                    .map(|st| {
+                        s.spawn(move || {
+                            black_box(eng.train_step(st, tok_ref, tgt_ref).unwrap())
+                        })
+                    })
+                    .collect();
+                for h in hs {
+                    h.join().unwrap();
+                }
+            });
+        });
+        println!(
+            "    -> {:.0} tokens/s across 4 workers ({:.2}x scaling)",
+            r4.throughput(4.0 * tokens_per_step),
+            r.mean.as_secs_f64() * 4.0 / r4.mean.as_secs_f64() / 4.0 * 4.0
+        );
+
+        let params = engine.init_params().unwrap();
+        bench(&format!("[{preset}] eval_loss x1"), 2, budget, || {
+            black_box(engine.eval_loss(&params, &tokens, &targets).unwrap());
+        });
+    }
+}

@@ -1,0 +1,263 @@
+//! `experiments` — regenerates every table and figure in the paper's
+//! evaluation (DESIGN.md §4 index):
+//!
+//! ```text
+//! experiments fig1            # Fig. 1/2 curves (loss & PPL vs steps) + CSV
+//! experiments table1          # Table I: final loss/PPL + steps-to-PPL
+//! experiments wallclock       # §IV-B wall-clock comparison (WAN-accounted)
+//! experiments ablate-lambda   # compensation strength sweep
+//! experiments ablate-gamma    # network-utilization sweep
+//! experiments ablate-tau      # overlap-depth robustness sweep
+//! experiments all             # everything above
+//! ```
+//!
+//! Flags: --artifacts DIR --outdir DIR --preset NAME --steps N --seed N
+//!        --ppl X --eval-every N
+//!
+//! All outputs land in `results/` as long-format CSVs plus a printed
+//! summary; EXPERIMENTS.md records the paper-vs-measured comparison.
+
+use std::path::PathBuf;
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::metrics::{table1, write_curves_csv, Curve};
+use cocodc::runtime::Engine;
+use cocodc::util::cli::Args;
+use cocodc::{TrainOutcome, Trainer};
+
+struct Cli {
+    exp: String,
+    outdir: PathBuf,
+    preset: String,
+    steps: u32,
+    seed: u64,
+    ppl: f64,
+    eval_every: u32,
+}
+
+fn base_cfg(cli: &Cli, method: MethodKind) -> RunConfig {
+    let mut cfg = RunConfig::paper(&cli.preset, method);
+    cfg.total_steps = cli.steps;
+    cfg.seed = cli.seed;
+    cfg.eval_every = cli.eval_every;
+    cfg
+}
+
+fn run(engine: &Engine, cfg: RunConfig, tag: &str) -> anyhow::Result<TrainOutcome> {
+    let mut tr = Trainer::new(engine, cfg)?;
+    tr.verbose = true;
+    let mut out = tr.run()?;
+    out.curve.method = tag.to_string();
+    eprintln!(
+        "  -> {tag}: final ppl {:.3}, wall {:.0}s, syncs {}",
+        out.curve.final_ppl().unwrap_or(f64::NAN),
+        out.wall_s,
+        out.syncs_completed
+    );
+    Ok(out)
+}
+
+/// FIG1 + FIG2 + TAB1 share one three-method run.
+fn fig1(cli: &Cli, engine: &Engine) -> anyhow::Result<Vec<Curve>> {
+    println!("== FIG1/FIG2/TAB1: validation loss & perplexity vs steps ==");
+    let mut curves = Vec::new();
+    let mut outcomes = Vec::new();
+    for method in MethodKind::all() {
+        let out = run(engine, base_cfg(cli, method), method.name())?;
+        curves.push(out.curve.clone());
+        outcomes.push(out);
+    }
+    write_curves_csv(cli.outdir.join("fig1_loss.csv"), &curves)?;
+    println!("curves -> {}", cli.outdir.join("fig1_loss.csv").display());
+    println!("\nTable I reproduction (threshold PPL<={}):", cli.ppl);
+    println!("{}", table1(&curves, cli.ppl));
+    // Relative convergence-speed claims (paper: CoCoDC -21.0% vs Streaming,
+    // -4.9% vs DiLoCo).
+    let steps = |name: &str| {
+        curves
+            .iter()
+            .find(|c| c.method == name)
+            .and_then(|c| c.steps_to_ppl(cli.ppl))
+    };
+    if let (Some(s_str), Some(s_dil), Some(s_ccd)) =
+        (steps("streaming_diloco"), steps("diloco"), steps("cocodc"))
+    {
+        println!(
+            "steps-to-PPL reduction: cocodc vs streaming: {:+.1}%  | cocodc vs diloco: {:+.1}%",
+            100.0 * (s_ccd - s_str) / s_str,
+            100.0 * (s_ccd - s_dil) / s_dil,
+        );
+    }
+    let mut table =
+        String::from("method,final_loss,final_ppl,steps_to_ppl,wall_to_ppl_s,syncs,bytes_mb\n");
+    for (c, o) in curves.iter().zip(&outcomes) {
+        table.push_str(&format!(
+            "{},{:.4},{:.4},{},{},{},{:.1}\n",
+            c.method,
+            c.final_loss().unwrap_or(f64::NAN),
+            c.final_ppl().unwrap_or(f64::NAN),
+            c.steps_to_ppl(cli.ppl).map(|s| format!("{s:.0}")).unwrap_or_default(),
+            c.wall_to_ppl(cli.ppl).map(|s| format!("{s:.0}")).unwrap_or_default(),
+            o.syncs_completed,
+            o.bytes_sent / 1e6,
+        ));
+    }
+    std::fs::create_dir_all(&cli.outdir)?;
+    std::fs::write(cli.outdir.join("table1.csv"), table)?;
+    Ok(curves)
+}
+
+/// WALL: wall-clock (WAN-accounted) comparison with τ derived from the
+/// network instead of fixed — DiLoCo pays the blocking sync.
+fn wallclock(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+    println!("== WALL: virtual wall-clock to target PPL (tau from WAN) ==");
+    let mut curves = Vec::new();
+    for method in MethodKind::all() {
+        let mut cfg = base_cfg(cli, method);
+        cfg.tau = TauMode::Network;
+        let out = run(engine, cfg, method.name())?;
+        println!(
+            "  {}: wall {:.0}s = compute {:.0}s + stall {:.0}s (stalled applies: {})",
+            method.name(), out.wall_s, out.compute_s, out.comm_stall_s,
+            out.apply_stalls
+        );
+        curves.push(out.curve);
+    }
+    write_curves_csv(cli.outdir.join("wallclock.csv"), &curves)?;
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
+fn ablate_lambda(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+    println!("== ABL-lambda: compensation strength ==");
+    let mut curves = Vec::new();
+    for lam in [0.0f32, 0.25, 0.5, 1.0] {
+        let mut cfg = base_cfg(cli, MethodKind::Cocodc);
+        cfg.lambda = lam;
+        curves.push(run(engine, cfg, &format!("cocodc_lambda{lam}"))?.curve);
+    }
+    write_curves_csv(cli.outdir.join("ablate_lambda.csv"), &curves)?;
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
+fn ablate_gamma(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+    println!("== ABL-gamma: network utilization factor ==");
+    let mut curves = Vec::new();
+    for gam in [0.2f64, 0.4, 0.8] {
+        let mut cfg = base_cfg(cli, MethodKind::Cocodc);
+        cfg.gamma = gam;
+        let out = run(engine, cfg, &format!("cocodc_gamma{gam}"))?;
+        println!(
+            "  gamma={gam}: syncs completed {} (bytes {:.1} MB)",
+            out.syncs_completed,
+            out.bytes_sent / 1e6
+        );
+        curves.push(out.curve);
+    }
+    write_curves_csv(cli.outdir.join("ablate_gamma.csv"), &curves)?;
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
+fn ablate_tau(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+    println!("== ABL-tau: overlap-depth robustness (streaming vs cocodc) ==");
+    let mut curves = Vec::new();
+    for tau in [1u32, 5, 15] {
+        for method in [MethodKind::StreamingDiloco, MethodKind::Cocodc] {
+            let mut cfg = base_cfg(cli, method);
+            cfg.tau = TauMode::Fixed { tau };
+            curves.push(run(engine, cfg, &format!("{}_tau{tau}", method.name()))?.curve);
+        }
+    }
+    write_curves_csv(cli.outdir.join("ablate_tau.csv"), &curves)?;
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
+fn ablate_codec(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+    println!("== ABL-codec: pseudo-gradient wire compression ==");
+    let mut curves = Vec::new();
+    for codec in ["none", "int8", "int4"] {
+        let mut cfg = base_cfg(cli, MethodKind::Cocodc);
+        cfg.compression = cocodc::compression::Codec::parse(codec)?;
+        let out = run(engine, cfg, &format!("cocodc_{codec}"))?;
+        println!("  codec={codec}: {:.2} MB on the wire", out.bytes_sent / 1e6);
+        curves.push(out.curve);
+    }
+    write_curves_csv(cli.outdir.join("ablate_codec.csv"), &curves)?;
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
+/// Rebuild the Table-I comparison from previously written curve CSVs
+/// (`experiments report --curves a.csv,b.csv --ppl 20`).
+fn report(files: &str, ppl: f64) -> anyhow::Result<()> {
+    let mut curves = Vec::new();
+    for f in files.split(',') {
+        curves.extend(cocodc::metrics::read_curves_csv(f.trim())?);
+    }
+    println!("{}", table1(&curves, ppl));
+    let steps = |name: &str| {
+        curves.iter().find(|c| c.method == name).and_then(|c| c.steps_to_ppl(ppl))
+    };
+    if let (Some(s_str), Some(s_dil), Some(s_ccd)) =
+        (steps("streaming_diloco"), steps("diloco"), steps("cocodc"))
+    {
+        println!(
+            "steps-to-PPL<={ppl} reduction: cocodc vs streaming: {:+.1}% | cocodc vs diloco: {:+.1}%",
+            100.0 * (s_ccd - s_str) / s_str,
+            100.0 * (s_ccd - s_dil) / s_dil,
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    if args.positional.first().map(|s| s.as_str()) == Some("report") {
+        let files = args.get("curves").unwrap_or("results/fig1_loss.csv").to_string();
+        let ppl = args.get_or("ppl", 20.0)?;
+        args.finish()?;
+        return report(&files, ppl);
+    }
+    let cli = Cli {
+        exp: args.positional.first().cloned().unwrap_or_else(|| "all".into()),
+        outdir: PathBuf::from(args.get("outdir").unwrap_or("results")),
+        preset: args.get("preset").unwrap_or("exp").to_string(),
+        steps: args.get_or("steps", 1200)?,
+        seed: args.get_or("seed", 17)?,
+        ppl: args.get_or("ppl", 20.0)?,
+        eval_every: args.get_or("eval-every", 25)?,
+    };
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    args.finish()?;
+    std::fs::create_dir_all(&cli.outdir)?;
+    let engine = Engine::load(&artifacts, &cli.preset)?;
+    eprintln!(
+        "engine: preset '{}' on {}, {} params, K={}",
+        cli.preset,
+        engine.platform(),
+        engine.meta().param_count,
+        engine.meta().n_fragments
+    );
+    match cli.exp.as_str() {
+        "fig1" | "fig2" | "table1" => {
+            fig1(&cli, &engine)?;
+        }
+        "wallclock" => wallclock(&cli, &engine)?,
+        "ablate-lambda" => ablate_lambda(&cli, &engine)?,
+        "ablate-gamma" => ablate_gamma(&cli, &engine)?,
+        "ablate-tau" => ablate_tau(&cli, &engine)?,
+        "ablate-codec" => ablate_codec(&cli, &engine)?,
+        "all" => {
+            fig1(&cli, &engine)?;
+            wallclock(&cli, &engine)?;
+            ablate_lambda(&cli, &engine)?;
+            ablate_gamma(&cli, &engine)?;
+            ablate_tau(&cli, &engine)?;
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}

@@ -1,0 +1,350 @@
+//! Run configuration: which method, which artifact preset, the paper's
+//! hyperparameters (H, τ, K, α, λ, γ), the WAN model, data generation and
+//! evaluation cadence. Serializable as JSON (`--config run.json`, via the
+//! in-tree `util::json` — this build environment has no serde) with
+//! programmatic presets for every experiment in DESIGN.md §4.
+
+use crate::compression::Codec;
+use crate::util::json::{num, obj, s, Json};
+
+/// Cross-region synchronization strategy (paper §II/§III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    /// Blocking all-reduce of the full pseudo-gradient every H steps
+    /// (Douillard et al., DiLoCo).
+    Diloco,
+    /// Fragment-wise round-robin synchronization with overlap depth τ and
+    /// mixing factor α (Streaming DiLoCo).
+    StreamingDiloco,
+    /// Streaming + Taylor delay compensation (Alg. 1) + adaptive fragment
+    /// transmission (Alg. 2) — the paper's contribution.
+    Cocodc,
+}
+
+impl MethodKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Diloco => "diloco",
+            MethodKind::StreamingDiloco => "streaming_diloco",
+            MethodKind::Cocodc => "cocodc",
+        }
+    }
+
+    pub fn parse(t: &str) -> anyhow::Result<MethodKind> {
+        match t {
+            "diloco" => Ok(MethodKind::Diloco),
+            "streaming" | "streaming_diloco" => Ok(MethodKind::StreamingDiloco),
+            "cocodc" => Ok(MethodKind::Cocodc),
+            _ => anyhow::bail!("unknown method '{t}' (diloco|streaming|cocodc)"),
+        }
+    }
+
+    pub fn all() -> [MethodKind; 3] {
+        [MethodKind::Diloco, MethodKind::StreamingDiloco, MethodKind::Cocodc]
+    }
+}
+
+/// How the effective overlap depth τ (steps between initiating a fragment
+/// sync and applying its result) is determined.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TauMode {
+    /// Paper §IV-A: τ fixed (5) "to simulate network constraints".
+    Fixed { tau: u32 },
+    /// Derive τ from the WAN simulator: τ = ceil(T_ring(fragment)/T_c),
+    /// including queueing behind in-flight transfers.
+    Network,
+}
+
+/// WAN link model between datacenters (per direction, symmetric).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkConfig {
+    /// One-way latency per hop, seconds (paper: high-latency WAN).
+    pub latency_s: f64,
+    /// Per-link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Multiplicative jitter amplitude on each transfer (0 = deterministic).
+    pub jitter: f64,
+    /// Average compute time of one local step, seconds.
+    pub step_compute_s: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        // A moderately aggressive cross-region setting: 50 ms one-way,
+        // 1 Gbps dedicated inter-DC bandwidth.
+        NetworkConfig {
+            latency_s: 0.05,
+            bandwidth_bps: 125e6,
+            jitter: 0.0,
+            step_compute_s: 0.15,
+        }
+    }
+}
+
+/// Synthetic-C4 corpus generation (DESIGN.md §2: C4 substitute).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DataConfig {
+    /// Number of latent topics; non-IID shards concentrate workers on
+    /// disjoint topic subsets.
+    pub n_topics: usize,
+    /// Probability that the next token follows the topic's deterministic
+    /// successor pattern (the learnable structure).
+    pub pattern_prob: f64,
+    /// Zipf exponent of the background unigram distribution.
+    pub zipf_exponent: f64,
+    /// Concentration of each worker on its home topics;
+    /// 1.0 = fully non-IID, 0.0 = IID.
+    pub heterogeneity: f64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            n_topics: 8,
+            pattern_prob: 0.65,
+            zipf_exponent: 1.1,
+            heterogeneity: 0.8,
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Artifact preset directory under `artifacts/` (tiny / exp / e2e).
+    pub preset: String,
+    pub method: MethodKind,
+    /// Number of simulated datacenter workers M (paper: 4).
+    pub workers: usize,
+    /// Local computation period H between (full) synchronizations (paper: 100).
+    pub h_steps: u32,
+    /// Overlap depth handling.
+    pub tau: TauMode,
+    /// Streaming DiLoCo mixing factor α (Eq. 3).
+    pub alpha: f32,
+    /// CoCoDC compensation strength λ (paper: 0.5).
+    pub lambda: f32,
+    /// CoCoDC network utilization factor γ ∈ (0,1] (paper: 0.4 → 8 syncs/H).
+    pub gamma: f64,
+    /// Outer optimizer (SGD + Nesterov momentum, DiLoCo defaults).
+    pub outer_lr: f32,
+    pub outer_momentum: f32,
+    /// Total local training steps.
+    pub total_steps: u32,
+    /// Evaluate validation loss/PPL every this many steps.
+    pub eval_every: u32,
+    /// Number of held-out validation batches.
+    pub eval_batches: usize,
+    /// Base seed for data/jitter (init seed is baked into artifacts).
+    pub seed: u64,
+    pub network: NetworkConfig,
+    pub data: DataConfig,
+    /// Run worker train steps on parallel threads.
+    pub parallel_workers: bool,
+    /// Use the HLO/Pallas artifacts for outer step + delay compensation
+    /// instead of the native rust implementations.
+    pub use_hlo_fragment_ops: bool,
+    /// Wire codec for pseudo-gradients (Streaming DiLoCo ships them
+    /// quantized; `int8`/`int4` round-trip the values and charge the WAN
+    /// at compressed size).
+    pub compression: Codec,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            preset: "exp".into(),
+            method: MethodKind::Cocodc,
+            workers: 4,
+            h_steps: 100,
+            tau: TauMode::Fixed { tau: 5 },
+            alpha: 0.5,
+            lambda: 0.5,
+            gamma: 0.4,
+            outer_lr: 0.7,
+            outer_momentum: 0.9,
+            total_steps: 1200,
+            eval_every: 25,
+            eval_batches: 8,
+            seed: 17,
+            network: NetworkConfig::default(),
+            data: DataConfig::default(),
+            parallel_workers: true,
+            use_hlo_fragment_ops: false,
+            compression: Codec::None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The paper's §IV-A configuration (M=4, H=100, τ=5, λ=0.5, γ=0.4),
+    /// scaled to the given artifact preset.
+    pub fn paper(preset: &str, method: MethodKind) -> Self {
+        RunConfig { preset: preset.into(), method, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.h_steps >= 1, "H must be >= 1");
+        anyhow::ensure!((0.0..=1.0).contains(&self.alpha), "alpha must be in [0,1]");
+        anyhow::ensure!(self.gamma > 0.0 && self.gamma <= 1.0, "gamma in (0,1]");
+        anyhow::ensure!(self.lambda >= 0.0, "lambda must be >= 0");
+        if let TauMode::Fixed { tau } = self.tau {
+            anyhow::ensure!(
+                tau < self.h_steps,
+                "overlap depth tau ({tau}) must be < H ({})",
+                self.h_steps
+            );
+        }
+        anyhow::ensure!(self.network.bandwidth_bps > 0.0, "bandwidth > 0");
+        anyhow::ensure!(self.network.step_compute_s > 0.0, "step compute > 0");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
+        anyhow::ensure!(self.eval_batches >= 1, "eval_batches >= 1");
+        Ok(())
+    }
+
+    // ---------------- JSON (de)serialization ----------------
+    pub fn to_json(&self) -> Json {
+        let tau = match self.tau {
+            TauMode::Fixed { tau } => obj(vec![("mode", s("fixed")), ("tau", num(tau as f64))]),
+            TauMode::Network => obj(vec![("mode", s("network"))]),
+        };
+        obj(vec![
+            ("preset", s(&self.preset)),
+            ("method", s(self.method.name())),
+            ("workers", num(self.workers as f64)),
+            ("h_steps", num(self.h_steps as f64)),
+            ("tau", tau),
+            ("alpha", num(self.alpha as f64)),
+            ("lambda", num(self.lambda as f64)),
+            ("gamma", num(self.gamma)),
+            ("outer_lr", num(self.outer_lr as f64)),
+            ("outer_momentum", num(self.outer_momentum as f64)),
+            ("total_steps", num(self.total_steps as f64)),
+            ("eval_every", num(self.eval_every as f64)),
+            ("eval_batches", num(self.eval_batches as f64)),
+            ("seed", num(self.seed as f64)),
+            (
+                "network",
+                obj(vec![
+                    ("latency_s", num(self.network.latency_s)),
+                    ("bandwidth_bps", num(self.network.bandwidth_bps)),
+                    ("jitter", num(self.network.jitter)),
+                    ("step_compute_s", num(self.network.step_compute_s)),
+                ]),
+            ),
+            (
+                "data",
+                obj(vec![
+                    ("n_topics", num(self.data.n_topics as f64)),
+                    ("pattern_prob", num(self.data.pattern_prob)),
+                    ("zipf_exponent", num(self.data.zipf_exponent)),
+                    ("heterogeneity", num(self.data.heterogeneity)),
+                ]),
+            ),
+            ("compression", s(self.compression.name())),
+            ("parallel_workers", Json::Bool(self.parallel_workers)),
+            ("use_hlo_fragment_ops", Json::Bool(self.use_hlo_fragment_ops)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        cfg.preset = j.field("preset")?.as_str()?.to_string();
+        cfg.method = MethodKind::parse(j.field("method")?.as_str()?)?;
+        cfg.workers = j.field("workers")?.as_usize()?;
+        cfg.h_steps = j.field("h_steps")?.as_u64()? as u32;
+        let tau = j.field("tau")?;
+        cfg.tau = match tau.field("mode")?.as_str()? {
+            "fixed" => TauMode::Fixed { tau: tau.field("tau")?.as_u64()? as u32 },
+            "network" => TauMode::Network,
+            m => anyhow::bail!("unknown tau mode '{m}'"),
+        };
+        cfg.alpha = j.field("alpha")?.as_f64()? as f32;
+        cfg.lambda = j.field("lambda")?.as_f64()? as f32;
+        cfg.gamma = j.field("gamma")?.as_f64()?;
+        cfg.outer_lr = j.field("outer_lr")?.as_f64()? as f32;
+        cfg.outer_momentum = j.field("outer_momentum")?.as_f64()? as f32;
+        cfg.total_steps = j.field("total_steps")?.as_u64()? as u32;
+        cfg.eval_every = j.field("eval_every")?.as_u64()? as u32;
+        cfg.eval_batches = j.field("eval_batches")?.as_usize()?;
+        cfg.seed = j.field("seed")?.as_u64()?;
+        let n = j.field("network")?;
+        cfg.network = NetworkConfig {
+            latency_s: n.field("latency_s")?.as_f64()?,
+            bandwidth_bps: n.field("bandwidth_bps")?.as_f64()?,
+            jitter: n.field("jitter")?.as_f64()?,
+            step_compute_s: n.field("step_compute_s")?.as_f64()?,
+        };
+        let d = j.field("data")?;
+        cfg.data = DataConfig {
+            n_topics: d.field("n_topics")?.as_usize()?,
+            pattern_prob: d.field("pattern_prob")?.as_f64()?,
+            zipf_exponent: d.field("zipf_exponent")?.as_f64()?,
+            heterogeneity: d.field("heterogeneity")?.as_f64()?,
+        };
+        if let Some(c) = j.get("compression") {
+            cfg.compression = Codec::parse(c.as_str()?)?;
+        }
+        cfg.parallel_workers = j.field("parallel_workers")?.as_bool()?;
+        cfg.use_hlo_fragment_ops = j.field("use_hlo_fragment_ops")?.as_bool()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_config_and_valid() {
+        let c = RunConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.h_steps, 100);
+        assert_eq!(c.tau, TauMode::Fixed { tau: 5 });
+        assert_eq!(c.lambda, 0.5);
+        assert_eq!(c.gamma, 0.4);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = RunConfig::paper("exp", MethodKind::StreamingDiloco);
+        c.tau = TauMode::Network;
+        c.seed = 12345;
+        let text = c.to_json_string();
+        let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = RunConfig::default();
+        c.alpha = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.tau = TauMode::Fixed { tau: 200 };
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.gamma = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn method_parse_accepts_aliases() {
+        assert_eq!(MethodKind::parse("streaming").unwrap(),
+                   MethodKind::StreamingDiloco);
+        assert!(MethodKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Pseudo-gradient all-reduce across the simulated datacenters.
+//!
+//! Data path: the strategies call [`mean_pseudo_gradients`] — the exact
+//! element-wise mean the ring all-reduce converges to (equivalence proven
+//! against `network::ring::ring_allreduce_mean` in tests). Timing: the
+//! strategies separately charge the WAN simulator for the transfer, so the
+//! data path stays fast while the clock stays honest.
+
+use crate::coordinator::fragments::Fragment;
+use crate::runtime::TrainState;
+use crate::util::vecops;
+
+/// Δθ^g = mean_m(θ_p^m − θ_p^g) over one fragment (paper Eq. 1).
+/// `theta_g` is the fragment's last-synchronized global state.
+pub fn mean_pseudo_gradients(
+    workers: &[TrainState],
+    frag: Fragment,
+    theta_g: &[f32],
+) -> Vec<f32> {
+    assert!(!workers.is_empty());
+    assert_eq!(theta_g.len(), frag.size);
+    let mut acc = vec![0.0f32; frag.size];
+    for w in workers {
+        let local = &w.params[frag.range()];
+        for (a, (&l, &g)) in acc.iter_mut().zip(local.iter().zip(theta_g)) {
+            *a += l - g;
+        }
+    }
+    vecops::scale(&mut acc, 1.0 / workers.len() as f32);
+    acc
+}
+
+/// Same, but from explicit per-worker snapshots (used when the pseudo-
+/// gradient must be computed from parameters captured at initiation time
+/// t_p, not the live parameters at completion time t_l).
+pub fn mean_pseudo_gradients_from_snapshots(
+    snapshots: &[Vec<f32>],
+    theta_g: &[f32],
+) -> Vec<f32> {
+    assert!(!snapshots.is_empty());
+    let n = theta_g.len();
+    let mut acc = vec![0.0f32; n];
+    for snap in snapshots {
+        assert_eq!(snap.len(), n);
+        for i in 0..n {
+            acc[i] += snap[i] - theta_g[i];
+        }
+    }
+    vecops::scale(&mut acc, 1.0 / snapshots.len() as f32);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::ring::ring_allreduce_mean;
+    use crate::util::Rng;
+
+    fn mk_workers(m: usize, n: usize, seed: u64) -> Vec<TrainState> {
+        let mut rng = Rng::new(seed, 0);
+        (0..m)
+            .map(|_| {
+                TrainState::new((0..n).map(|_| rng.next_gaussian() as f32).collect())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_ring_allreduce_of_deltas() {
+        let m = 4;
+        let frag = Fragment { index: 0, offset: 2, size: 6 };
+        let workers = mk_workers(m, 10, 3);
+        let theta_g: Vec<f32> = vec![0.5; 6];
+        let mean = mean_pseudo_gradients(&workers, frag, &theta_g);
+
+        let mut bufs: Vec<Vec<f32>> = workers
+            .iter()
+            .map(|w| {
+                w.params[frag.range()]
+                    .iter()
+                    .zip(&theta_g)
+                    .map(|(&l, &g)| l - g)
+                    .collect()
+            })
+            .collect();
+        ring_allreduce_mean(&mut bufs);
+        for b in &bufs {
+            for (x, y) in b.iter().zip(&mean) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_variant_agrees_with_live_when_unchanged() {
+        let frag = Fragment { index: 0, offset: 0, size: 8 };
+        let workers = mk_workers(3, 8, 7);
+        let theta_g = vec![0.0f32; 8];
+        let live = mean_pseudo_gradients(&workers, frag, &theta_g);
+        let snaps: Vec<Vec<f32>> =
+            workers.iter().map(|w| w.params[frag.range()].to_vec()).collect();
+        let snap = mean_pseudo_gradients_from_snapshots(&snaps, &theta_g);
+        assert_eq!(live, snap);
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        let frag = Fragment { index: 0, offset: 0, size: 5 };
+        let mut workers = mk_workers(4, 5, 9);
+        let theta_g = vec![0.1f32; 5];
+        let a = mean_pseudo_gradients(&workers, frag, &theta_g);
+        workers.reverse();
+        let b = mean_pseudo_gradients(&workers, frag, &theta_g);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn identical_workers_give_exact_delta() {
+        let frag = Fragment { index: 0, offset: 0, size: 4 };
+        let w = TrainState::new(vec![1.0, 2.0, 3.0, 4.0]);
+        let workers = vec![w.clone(), w.clone(), w];
+        let theta_g = vec![1.0f32; 4];
+        let d = mean_pseudo_gradients(&workers, frag, &theta_g);
+        assert_eq!(d, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}

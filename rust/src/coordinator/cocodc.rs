@@ -1,0 +1,235 @@
+//! CoCoDC — the paper's contribution (§III): Streaming DiLoCo's overlapped
+//! fragment synchronization, plus
+//!
+//! 1. **Delay compensation** (Alg. 1): on completion, instead of α-blending
+//!    the stale global state, each worker's fragment is set to the
+//!    Taylor-extrapolated target `θ_g + g_corr·τ` (see
+//!    [`super::delay_comp`]).
+//! 2. **Adaptive transmission** (Alg. 2): instead of the rigid round-robin
+//!    schedule, syncs are initiated every `h = ⌊H/N⌋` steps with
+//!    `N = max(K, ⌊γ·H·T_c/T_s⌋)` (Eq. 9), and the fragment chosen is the
+//!    one violating the staleness guard (not synced for ≥ H steps) or,
+//!    failing that, the one with the largest global change rate
+//!    `R_p = ‖Δθ_p^g‖₂ / I_p` (Eq. 11). Selection is a pure function of
+//!    globally replicated history, so all workers agree without extra
+//!    coordination messages.
+
+use crate::config::RunConfig;
+use crate::coordinator::fragments::FragmentTable;
+use crate::util::vecops;
+
+use super::delay_comp::delay_compensate_inplace;
+use super::streaming::{Pending, StreamingDiloco};
+use super::strategy::{SyncCtx, SyncStrategy};
+
+pub struct Cocodc {
+    pending: Vec<Pending>,
+    /// R_p (Eq. 11); ∞ until the first sync completes so untouched
+    /// fragments win the argmax.
+    change_rate: Vec<f64>,
+    /// t_{p,b}: step at which fragment p's last sync *completed*.
+    last_completed: Vec<u32>,
+    /// Step at which fragment p's last sync was *initiated* (staleness
+    /// guard + in-flight exclusion).
+    last_initiated: Vec<u32>,
+    /// Initiation interval h = ⌊H/N⌋ (recomputed from live T_c/T_s
+    /// estimates at each initiation opportunity).
+    next_init: u32,
+}
+
+impl Cocodc {
+    pub fn new(_cfg: &RunConfig, frags: &FragmentTable) -> Self {
+        let k = frags.k();
+        Cocodc {
+            pending: Vec::new(),
+            change_rate: vec![f64::INFINITY; k],
+            last_completed: vec![0; k],
+            last_initiated: vec![0; k],
+            next_init: 1,
+        }
+    }
+
+    /// Eq. 9/10: target syncs per H window and the resulting interval.
+    pub fn schedule_params(cfg: &RunConfig, frags: &FragmentTable, t_sync: f64) -> (u32, u32) {
+        let k = frags.k() as u32;
+        let h_steps = cfg.h_steps as f64;
+        let t_c = cfg.network.step_compute_s;
+        let n = ((cfg.gamma * h_steps * t_c / t_sync).floor() as u32).max(k);
+        let h = (cfg.h_steps / n).max(1);
+        (n, h)
+    }
+
+    /// Alg. 2: deterministic fragment selection at step `t`.
+    /// Returns None when every candidate is already in flight.
+    fn select_fragment(&self, t: u32, h_steps: u32) -> Option<usize> {
+        let k = self.change_rate.len();
+        let in_flight =
+            |p: usize| self.pending.iter().any(|q| q.frag == p);
+        // Staleness guard: any fragment not synchronized for >= H steps.
+        for p in 0..k {
+            if t.saturating_sub(self.last_initiated[p]) >= h_steps && !in_flight(p) {
+                return Some(p);
+            }
+        }
+        // Otherwise the largest change rate R_p.
+        (0..k)
+            .filter(|&p| !in_flight(p))
+            .max_by(|&a, &b| {
+                self.change_rate[a]
+                    .total_cmp(&self.change_rate[b])
+                    // Deterministic tie-break on index (all workers agree).
+                    .then(b.cmp(&a))
+            })
+    }
+
+    fn complete_due(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        let due: Vec<Pending> = {
+            let (due, rest): (Vec<_>, Vec<_>) =
+                self.pending.drain(..).partition(|p| p.apply_step <= step);
+            self.pending = rest;
+            due
+        };
+        for pend in due {
+            if pend.finish_time > ctx.clock.now() {
+                ctx.clock.stall_until(pend.finish_time);
+                ctx.stats.apply_stalls += 1;
+            }
+            let p = pend.frag;
+            let frag = ctx.frags.get(p);
+            ctx.outer_step(p, &pend.delta_avg)?;
+            ctx.stats.syncs_completed += 1;
+            ctx.stats.per_fragment[p] += 1;
+
+            // Eq. 11: update the change-rate metric from the *globally
+            // averaged* pseudo-gradient over the completed interval.
+            let i_p = step.saturating_sub(self.last_completed[p]).max(1) as f64;
+            self.change_rate[p] = vecops::l2_norm(&pend.delta_avg) / i_p;
+            self.last_completed[p] = step;
+
+            // Alg. 1 per worker: delay-compensated adoption.
+            let tau = (step - pend.t_init).max(1) as f32;
+            let h = ctx.cfg.h_steps as f32;
+            let lambda = ctx.cfg.lambda;
+            let new_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
+            let snaps = pend
+                .snapshots
+                .as_ref()
+                .expect("CoCoDC pendings always carry snapshots");
+            let use_hlo = ctx.cfg.use_hlo_fragment_ops && ctx.engine.is_some();
+            for (w, snap) in ctx.workers.iter_mut().zip(snaps) {
+                let local = &mut w.params[frag.range()];
+                if use_hlo {
+                    let engine = ctx.engine.unwrap();
+                    let out = engine
+                        .delay_comp_hlo(p, &new_g, local, snap, tau, h, lambda)?;
+                    local.copy_from_slice(&out);
+                } else {
+                    delay_compensate_inplace(local, &new_g, snap, tau, h, lambda);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SyncStrategy for Cocodc {
+    fn post_step(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        self.complete_due(step, ctx)?;
+        if step == 0 || step < self.next_init {
+            return Ok(());
+        }
+        // Recompute Eq. 9/10 from the current T_s estimate (mean fragment).
+        let t_sync = ctx.net.t_sync(ctx.frags.mean_bytes());
+        let (_n, h) = Self::schedule_params(ctx.cfg, ctx.frags, t_sync);
+        if let Some(p) = self.select_fragment(step, ctx.cfg.h_steps) {
+            let guard = step.saturating_sub(self.last_initiated[p]) >= ctx.cfg.h_steps;
+            if guard && self.change_rate[p].is_finite() {
+                ctx.stats.staleness_guard_hits += 1;
+            }
+            let pend = StreamingDiloco::initiate(p, step, true, ctx);
+            self.last_initiated[p] = step;
+            self.pending.push(pend);
+        }
+        self.next_init = step + h;
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "cocodc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn frags() -> FragmentTable {
+        FragmentTable::from_sizes(&[100, 100, 100, 100])
+    }
+
+    #[test]
+    fn schedule_params_respects_gamma_and_floor() {
+        let mut cfg = RunConfig::default(); // H=100, gamma=0.4, T_c=0.15
+        // Paper §IV-A: parameters chosen so N=8 syncs per H -> h=12.
+        // gamma*H*T_c/T_s = 0.4*100*0.15/T_s; with T_s=0.75 -> N=8.
+        let (n, h) = Cocodc::schedule_params(&cfg, &frags(), 0.75);
+        assert_eq!(n, 8);
+        assert_eq!(h, 12);
+        // Very slow network: floor at K.
+        let (n, h) = Cocodc::schedule_params(&cfg, &frags(), 1e9);
+        assert_eq!(n, 4);
+        assert_eq!(h, 25);
+        // gamma=1, fast network: many syncs, h floors at 1.
+        cfg.gamma = 1.0;
+        let (n, h) = Cocodc::schedule_params(&cfg, &frags(), 1e-6);
+        assert!(n >= 100);
+        assert_eq!(h, 1);
+    }
+
+    #[test]
+    fn selection_prefers_stale_then_max_rate() {
+        let cfg = RunConfig::default();
+        let mut c = Cocodc::new(&cfg, &frags());
+        // All rates finite; fragment 2 hottest.
+        c.change_rate = vec![1.0, 2.0, 5.0, 0.5];
+        c.last_initiated = vec![90, 90, 90, 90];
+        assert_eq!(c.select_fragment(100, 100), Some(2));
+        // Fragment 3 violates the staleness guard -> wins regardless of R.
+        c.last_initiated[3] = 0;
+        assert_eq!(c.select_fragment(100, 100), Some(3));
+    }
+
+    #[test]
+    fn selection_skips_in_flight() {
+        let cfg = RunConfig::default();
+        let mut c = Cocodc::new(&cfg, &frags());
+        c.change_rate = vec![5.0, 1.0, 0.5, 0.2];
+        c.last_initiated = vec![95; 4];
+        c.pending.push(Pending {
+            frag: 0,
+            t_init: 99,
+            apply_step: 104,
+            finish_time: 0.0,
+            delta_avg: vec![],
+            snapshots: None,
+        });
+        assert_eq!(c.select_fragment(100, 100), Some(1));
+    }
+
+    #[test]
+    fn infinite_rate_gives_initial_priority() {
+        let cfg = RunConfig::default();
+        let mut c = Cocodc::new(&cfg, &frags());
+        // Nothing synced yet: all ∞; deterministic tie-break -> fragment 0.
+        c.last_initiated = vec![1; 4];
+        assert_eq!(c.select_fragment(2, 100), Some(0));
+        c.change_rate[0] = 3.0; // fragment 0 done once, others still ∞
+        c.change_rate[1] = 2.0;
+        assert!(matches!(c.select_fragment(2, 100), Some(2)));
+    }
+}

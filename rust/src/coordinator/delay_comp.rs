@@ -1,0 +1,131 @@
+//! CoCoDC's Taylor-expansion delay compensation (paper Alg. 1).
+//!
+//! When the all-reduce for fragment p completes at local step t_l, the
+//! received consensus reflects step t_p = t_l − τ. Instead of blending the
+//! stale global state (Streaming DiLoCo, Eq. 3), CoCoDC extrapolates it to
+//! the current step:
+//!
+//!   g      = (θ_tl − θ_tp) / τ                        (Eq. 4, local rate)
+//!   g_corr = g + λ · g⊙g ⊙ (θ_g − θ_tp) / H           (Eq. 7, Hessian term
+//!            approximated by the gradient outer product / Fisher diagonal)
+//!   θ'     = θ_g + g_corr · τ                          (Eq. 8)
+//!
+//! Sign convention: the paper's Eq. 4 writes g = (θ_tp − θ_tl)/τ yet applies
+//! θ_g + g·τ in Eq. 8, which would extrapolate *backwards* along the local
+//! trajectory; we implement the internally consistent forward reading
+//! (DESIGN.md §"Delay compensation"). With λ=0 the update reduces to
+//! "adopt the new global state plus the local progress made during overlap";
+//! with τ→0 it reduces to plain adoption of θ_g.
+//!
+//! The Pallas/HLO twin (`Engine::delay_comp_hlo`) implements the identical
+//! math; integration tests assert agreement to f32 rounding.
+
+/// Compensated target state, written into `out` (Alg. 1 line 3 output).
+pub fn delay_compensate(
+    out: &mut [f32],
+    theta_g: &[f32],
+    theta_tl: &[f32],
+    theta_tp: &[f32],
+    tau: f32,
+    h: f32,
+    lambda: f32,
+) {
+    debug_assert_eq!(out.len(), theta_g.len());
+    debug_assert_eq!(out.len(), theta_tl.len());
+    debug_assert_eq!(out.len(), theta_tp.len());
+    debug_assert!(tau > 0.0 && h > 0.0);
+    let inv_tau = 1.0 / tau;
+    let inv_h = 1.0 / h;
+    for i in 0..out.len() {
+        let g = (theta_tl[i] - theta_tp[i]) * inv_tau;
+        let g_corr = g + lambda * g * g * (theta_g[i] - theta_tp[i]) * inv_h;
+        out[i] = theta_g[i] + g_corr * tau;
+    }
+}
+
+/// Convenience: apply in place on a worker's fragment slice.
+pub fn delay_compensate_inplace(
+    theta_local: &mut [f32],
+    theta_g: &[f32],
+    theta_tp: &[f32],
+    tau: f32,
+    h: f32,
+    lambda: f32,
+) {
+    let inv_tau = 1.0 / tau;
+    let inv_h = 1.0 / h;
+    for i in 0..theta_local.len() {
+        let g = (theta_local[i] - theta_tp[i]) * inv_tau;
+        let g_corr = g + lambda * g * g * (theta_g[i] - theta_tp[i]) * inv_h;
+        theta_local[i] = theta_g[i] + g_corr * tau;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed, 0);
+        (0..n).map(|_| r.next_gaussian() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn lambda_zero_is_linear_extrapolation() {
+        let (g, tl, tp) = (randv(64, 1), randv(64, 2), randv(64, 3));
+        let mut out = vec![0.0; 64];
+        delay_compensate(&mut out, &g, &tl, &tp, 5.0, 100.0, 0.0);
+        for i in 0..64 {
+            let want = g[i] + (tl[i] - tp[i]);
+            assert!((out[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn no_local_movement_adopts_global() {
+        let g = randv(32, 4);
+        let tl = randv(32, 5);
+        let mut out = vec![0.0; 32];
+        delay_compensate(&mut out, &g, &tl, &tl, 5.0, 100.0, 0.5);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn correction_pulls_toward_global_divergence() {
+        // One coordinate, local rate g=1, global ahead of snapshot by d:
+        // out = theta_g + tau*(g + lam*g^2*d/H).
+        let theta_g = [2.0f32];
+        let theta_tp = [0.0f32];
+        let theta_tl = [5.0f32]; // g = 1.0 over tau=5
+        let mut out = [0.0f32];
+        delay_compensate(&mut out, &theta_g, &theta_tl, &theta_tp, 5.0, 100.0, 0.5);
+        let g = 1.0f32;
+        let want = 2.0 + 5.0 * (g + 0.5 * g * g * (2.0 - 0.0) / 100.0);
+        assert!((out[0] - want).abs() < 1e-6, "{} vs {want}", out[0]);
+    }
+
+    #[test]
+    fn inplace_matches_out_of_place() {
+        let (g, tl, tp) = (randv(128, 7), randv(128, 8), randv(128, 9));
+        let mut out = vec![0.0; 128];
+        delay_compensate(&mut out, &g, &tl, &tp, 3.0, 50.0, 0.7);
+        let mut local = tl.clone();
+        delay_compensate_inplace(&mut local, &g, &tp, 3.0, 50.0, 0.7);
+        assert_eq!(out, local);
+    }
+
+    #[test]
+    fn reduces_to_simple_cases_from_paper() {
+        // tau=1, H=1 is the classic DC-ASGD single-step compensation regime
+        // (paper §III-A: "prior methods ... specialized cases").
+        let (g, tl, tp) = (randv(16, 10), randv(16, 11), randv(16, 12));
+        let mut out = vec![0.0; 16];
+        delay_compensate(&mut out, &g, &tl, &tp, 1.0, 1.0, 1.0);
+        for i in 0..16 {
+            let gr = tl[i] - tp[i];
+            let want = g[i] + gr + gr * gr * (g[i] - tp[i]);
+            assert!((out[i] - want).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! DiLoCo baseline (Douillard et al.): every H local steps, a *blocking*
+//! all-reduce of the full pseudo-gradient, outer Nesterov step, and adoption
+//! of the new global state by every worker. Compute and communication are
+//! strictly serialized — the resource underutilization the paper's §I
+//! motivates against — which the virtual clock charges as a stall.
+
+use super::allreduce::mean_pseudo_gradients;
+use super::strategy::{SyncCtx, SyncStrategy};
+
+#[derive(Debug, Default)]
+pub struct Diloco {
+    rounds: usize,
+}
+
+impl Diloco {
+    pub fn new() -> Self {
+        Diloco { rounds: 0 }
+    }
+}
+
+impl SyncStrategy for Diloco {
+    fn post_step(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        if step == 0 || step % ctx.cfg.h_steps != 0 {
+            return Ok(());
+        }
+        self.rounds += 1;
+        // Blocking full-model ring all-reduce: charge the WAN and stall.
+        let now = ctx.clock.now();
+        let bytes = ctx.cfg.compression.wire_bytes(ctx.frags.total_params());
+        let transfer = ctx.net.schedule_allreduce(now, bytes);
+        ctx.clock.stall_until(transfer.finish);
+        ctx.stats.bytes += bytes;
+        ctx.stats.syncs_initiated += ctx.frags.k();
+        ctx.stats.syncs_completed += ctx.frags.k();
+
+        // Per fragment: Δ^g = mean(θ^m − θ^g); outer step; adopt.
+        for p in 0..ctx.frags.k() {
+            let frag = ctx.frags.get(p);
+            let theta_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
+            let mut delta = mean_pseudo_gradients(ctx.workers, frag, &theta_g);
+            ctx.cfg.compression.round_trip(&mut delta);
+            ctx.outer_step(p, &delta)?;
+            ctx.stats.per_fragment[p] += 1;
+            let new_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
+            for w in ctx.workers.iter_mut() {
+                w.params[frag.range()].copy_from_slice(&new_g);
+            }
+        }
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        0 // blocking: nothing is ever in flight after post_step returns
+    }
+
+    fn name(&self) -> &'static str {
+        "diloco"
+    }
+}

@@ -1,0 +1,131 @@
+//! Fragment table: resolves the strided depth shards (Streaming DiLoCo's
+//! partitioning, shared by CoCoDC) into contiguous ranges of the flat
+//! parameter vector, as laid out by python/compile/config.flat_layout.
+
+use crate::runtime::Meta;
+
+/// One fragment's contiguous range in the flat vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fragment {
+    pub index: usize,
+    pub offset: usize,
+    pub size: usize,
+}
+
+impl Fragment {
+    #[inline]
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+    pub fn bytes(&self) -> f64 {
+        self.size as f64 * 4.0
+    }
+}
+
+/// All K fragments of a model.
+#[derive(Debug, Clone)]
+pub struct FragmentTable {
+    frags: Vec<Fragment>,
+    total: usize,
+}
+
+impl FragmentTable {
+    pub fn from_meta(meta: &Meta) -> Self {
+        let frags = meta
+            .fragments
+            .iter()
+            .map(|f| Fragment { index: f.index, offset: f.offset, size: f.size })
+            .collect();
+        FragmentTable { frags, total: meta.param_count }
+    }
+
+    /// Build directly from sizes (tests / benches without artifacts).
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        let mut frags = Vec::with_capacity(sizes.len());
+        let mut off = 0;
+        for (i, &s) in sizes.iter().enumerate() {
+            assert!(s > 0, "fragments must be non-empty");
+            frags.push(Fragment { index: i, offset: off, size: s });
+            off += s;
+        }
+        FragmentTable { frags, total: off }
+    }
+
+    pub fn k(&self) -> usize {
+        self.frags.len()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.total
+    }
+
+    pub fn get(&self, index: usize) -> Fragment {
+        self.frags[index]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Fragment> + '_ {
+        self.frags.iter().copied()
+    }
+
+    /// Slice a flat vector to fragment `index`.
+    pub fn slice<'a>(&self, flat: &'a [f32], index: usize) -> &'a [f32] {
+        &flat[self.frags[index].range()]
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], index: usize) -> &'a mut [f32] {
+        &mut flat[self.frags[index].range()]
+    }
+
+    /// Mean fragment size (drives the adaptive scheduler's T_s estimate).
+    pub fn mean_bytes(&self) -> f64 {
+        self.frags.iter().map(|f| f.bytes()).sum::<f64>() / self.k() as f64
+    }
+
+    /// The evenly-spread round-robin initiation offsets Streaming DiLoCo
+    /// uses within each H-step period: fragment p fires at local step
+    /// `t > 0` with `t % H == offset(p)`, offsets `floor((p+1)*H/K)` (mod H).
+    pub fn streaming_offsets(&self, h: u32) -> Vec<u32> {
+        let k = self.k() as u32;
+        (0..k).map(|p| ((p + 1) * h / k) % h).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_sizes_tiles_the_vector() {
+        let t = FragmentTable::from_sizes(&[5, 3, 8]);
+        assert_eq!(t.k(), 3);
+        assert_eq!(t.total_params(), 16);
+        assert_eq!(t.get(1), Fragment { index: 1, offset: 5, size: 3 });
+        let flat: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        assert_eq!(t.slice(&flat, 1), &[5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn slice_mut_edits_only_fragment() {
+        let t = FragmentTable::from_sizes(&[2, 2]);
+        let mut flat = vec![0.0f32; 4];
+        t.slice_mut(&mut flat, 1).fill(9.0);
+        assert_eq!(flat, vec![0.0, 0.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn streaming_offsets_spread_within_h() {
+        let t = FragmentTable::from_sizes(&[1, 1, 1, 1]);
+        assert_eq!(t.streaming_offsets(100), vec![25, 50, 75, 0]);
+        // K=3, H=100 -> uneven but within [0, H)
+        let t3 = FragmentTable::from_sizes(&[1, 1, 1]);
+        for off in t3.streaming_offsets(100) {
+            assert!(off < 100);
+        }
+    }
+
+    #[test]
+    fn mean_bytes() {
+        let t = FragmentTable::from_sizes(&[10, 30]);
+        assert_eq!(t.mean_bytes(), 80.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's L3 contribution: fragment-wise cross-region synchronization.
+//!
+//! * [`fragments`] — strided depth partition of the flat parameter vector.
+//! * [`allreduce`] — pseudo-gradient averaging across simulated DCs.
+//! * [`outer_opt`] — Nesterov outer optimizer (Eq. 2).
+//! * [`delay_comp`] — Taylor delay compensation (Alg. 1, Eqs. 4/7/8).
+//! * [`strategy`] — the `SyncStrategy` trait + shared sync context.
+//! * [`diloco`] / [`streaming`] / [`cocodc`] — the three methods compared in
+//!   the paper's evaluation (Figs. 1-2, Table I).
+
+pub mod allreduce;
+pub mod cocodc;
+pub mod delay_comp;
+pub mod diloco;
+pub mod fragments;
+pub mod outer_opt;
+pub mod streaming;
+pub mod strategy;
+
+pub use cocodc::Cocodc;
+pub use diloco::Diloco;
+pub use fragments::FragmentTable;
+pub use strategy::{GlobalState, SyncStats, SyncStrategy, make_strategy};
+pub use streaming::StreamingDiloco;

@@ -1,0 +1,109 @@
+//! The `SyncStrategy` trait: how a cross-region method reacts after each
+//! lockstep local training step, plus the state shared by all methods.
+
+use crate::config::{MethodKind, RunConfig};
+use crate::coordinator::fragments::FragmentTable;
+use crate::coordinator::{cocodc::Cocodc, diloco::Diloco, streaming::StreamingDiloco};
+use crate::network::WanSimulator;
+use crate::runtime::{Engine, TrainState};
+use crate::simclock::VirtualClock;
+
+/// Consensus state shared (deterministically replicated) by all workers:
+/// the last-synchronized global fragment states θ_p^g and the outer
+/// optimizer's momentum buffers.
+#[derive(Debug, Clone)]
+pub struct GlobalState {
+    /// θ^g as one flat vector (fragment-major, same layout as params).
+    pub theta_g: Vec<f32>,
+    /// Nesterov momentum, same layout.
+    pub outer_momentum: Vec<f32>,
+}
+
+impl GlobalState {
+    pub fn new(init_params: &[f32]) -> Self {
+        GlobalState {
+            theta_g: init_params.to_vec(),
+            outer_momentum: vec![0.0; init_params.len()],
+        }
+    }
+}
+
+/// Counters every strategy maintains (reported in run summaries and used by
+/// the γ-ablation).
+#[derive(Debug, Clone, Default)]
+pub struct SyncStats {
+    pub syncs_initiated: usize,
+    pub syncs_completed: usize,
+    /// Per-fragment completed-sync counts.
+    pub per_fragment: Vec<usize>,
+    /// Total bytes charged to the WAN (per worker, one direction).
+    pub bytes: f64,
+    /// Times the staleness guard (Alg. 2 line 2) fired.
+    pub staleness_guard_hits: usize,
+    /// Times a worker stalled waiting for an overdue fragment.
+    pub apply_stalls: usize,
+}
+
+impl SyncStats {
+    pub fn new(k: usize) -> Self {
+        SyncStats { per_fragment: vec![0; k], ..Default::default() }
+    }
+}
+
+/// Everything a strategy can see/touch after a step. Borrows are split so
+/// strategies can mutate workers and global state independently.
+pub struct SyncCtx<'a> {
+    pub workers: &'a mut [TrainState],
+    pub global: &'a mut GlobalState,
+    pub net: &'a mut WanSimulator,
+    pub clock: &'a mut VirtualClock,
+    /// Engine for the HLO fragment-op path (None in pure-simulation tests).
+    pub engine: Option<&'a Engine>,
+    pub cfg: &'a RunConfig,
+    pub frags: &'a FragmentTable,
+    pub stats: &'a mut SyncStats,
+}
+
+impl<'a> SyncCtx<'a> {
+    /// Nesterov outer step on fragment `p` with averaged pseudo-gradient
+    /// `delta`, via the HLO artifact or the native rust twin.
+    pub fn outer_step(&mut self, p: usize, delta: &[f32]) -> anyhow::Result<()> {
+        let frag = self.frags.get(p);
+        let (lr, mu) = (self.cfg.outer_lr, self.cfg.outer_momentum);
+        if self.cfg.use_hlo_fragment_ops {
+            if let Some(engine) = self.engine {
+                let tg = self.frags.slice(&self.global.theta_g, p);
+                let mom = self.frags.slice(&self.global.outer_momentum, p);
+                let (t2, m2) = engine.outer_step_hlo(p, tg, delta, mom, lr, mu)?;
+                self.global.theta_g[frag.range()].copy_from_slice(&t2);
+                self.global.outer_momentum[frag.range()].copy_from_slice(&m2);
+                return Ok(());
+            }
+        }
+        let tg = &mut self.global.theta_g[frag.range()];
+        let mom = &mut self.global.outer_momentum[frag.range()];
+        super::outer_opt::outer_step(tg, delta, mom, lr, mu);
+        Ok(())
+    }
+}
+
+/// A cross-region synchronization method (one of the paper's three).
+pub trait SyncStrategy: Send {
+    /// Called after every lockstep local step; `step` is the number of
+    /// completed local steps (1-based).
+    fn post_step(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()>;
+
+    /// Number of in-flight fragment synchronizations.
+    fn pending(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate the configured method.
+pub fn make_strategy(cfg: &RunConfig, frags: &FragmentTable) -> Box<dyn SyncStrategy> {
+    match cfg.method {
+        MethodKind::Diloco => Box::new(Diloco::new()),
+        MethodKind::StreamingDiloco => Box::new(StreamingDiloco::new(cfg, frags)),
+        MethodKind::Cocodc => Box::new(Cocodc::new(cfg, frags)),
+    }
+}

@@ -1,0 +1,160 @@
+//! Streaming DiLoCo (Douillard et al. 2025): fragment-wise round-robin
+//! synchronization overlapped with continued local training.
+//!
+//! At its scheduled step t_p, fragment p's pseudo-gradient
+//! Δθ_p^m = θ_{p,t_p}^m − θ_p^g is captured and a non-blocking ring
+//! all-reduce starts; training continues. τ steps later (fixed, or derived
+//! from the WAN simulator) the averaged Δθ_p^g is applied through the outer
+//! optimizer and the refreshed global fragment is *blended* into each
+//! worker's live parameters with mixing factor α (Eq. 3):
+//!
+//!   θ_{p,t_l}^m ← (1−α)·θ_{p,t_l}^m + α·θ_{p,t_p}^g
+//!
+//! This is precisely where staleness (τ-step-old consensus) and
+//! inconsistency (only fragment p refreshed) enter — the effects CoCoDC
+//! compensates for.
+
+use crate::config::TauMode;
+use crate::config::RunConfig;
+use crate::coordinator::fragments::FragmentTable;
+
+use super::allreduce::mean_pseudo_gradients_from_snapshots;
+use super::strategy::{SyncCtx, SyncStrategy};
+
+/// An in-flight fragment synchronization.
+#[derive(Debug)]
+pub(crate) struct Pending {
+    pub frag: usize,
+    /// Initiation step t_p.
+    pub t_init: u32,
+    /// Local step t_l at which the result is applied (t_p + τ).
+    pub apply_step: u32,
+    /// Virtual time the all-reduce finishes (for stall accounting).
+    pub finish_time: f64,
+    /// Averaged pseudo-gradient Δθ_p^g (computed at initiation: the data is
+    /// fixed once the transfer starts).
+    pub delta_avg: Vec<f32>,
+    /// Per-worker parameter snapshots θ_{p,t_p}^m (needed by CoCoDC's
+    /// delay compensation; None for plain streaming to save memory).
+    pub snapshots: Option<Vec<Vec<f32>>>,
+}
+
+pub struct StreamingDiloco {
+    offsets: Vec<u32>,
+    pending: Vec<Pending>,
+}
+
+impl StreamingDiloco {
+    pub fn new(cfg: &RunConfig, frags: &FragmentTable) -> Self {
+        StreamingDiloco {
+            offsets: frags.streaming_offsets(cfg.h_steps),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Shared by CoCoDC: start a sync of fragment `p` at step `t`.
+    pub(crate) fn initiate(
+        p: usize,
+        t: u32,
+        keep_snapshots: bool,
+        ctx: &mut SyncCtx,
+    ) -> Pending {
+        let frag = ctx.frags.get(p);
+        let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
+        let snaps: Vec<Vec<f32>> = ctx
+            .workers
+            .iter()
+            .map(|w| w.params[frag.range()].to_vec())
+            .collect();
+        let mut delta_avg = mean_pseudo_gradients_from_snapshots(&snaps, theta_g);
+        // What the wire would carry: round-trip through the codec and pay
+        // for the compressed size (Streaming DiLoCo ships quantized
+        // pseudo-gradients; the optimizer sees the dequantized values).
+        ctx.cfg.compression.round_trip(&mut delta_avg);
+        let wire = ctx.cfg.compression.wire_bytes(frag.size);
+        let transfer = ctx.net.schedule_allreduce(ctx.clock.now(), wire);
+        ctx.stats.bytes += wire;
+        ctx.stats.syncs_initiated += 1;
+        let tau = match ctx.cfg.tau {
+            TauMode::Fixed { tau } => tau,
+            TauMode::Network => ctx.net.tau_steps(
+                ctx.clock.now(),
+                transfer.finish,
+                ctx.cfg.network.step_compute_s,
+            ),
+        };
+        Pending {
+            frag: p,
+            t_init: t,
+            apply_step: t + tau,
+            finish_time: transfer.finish,
+            delta_avg,
+            snapshots: if keep_snapshots { Some(snaps) } else { None },
+        }
+    }
+
+    /// Complete every pending sync due at `step`: outer step + α-blend.
+    fn complete_due(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        let due: Vec<Pending> = {
+            let mut rest = Vec::new();
+            let mut due = Vec::new();
+            for p in self.pending.drain(..) {
+                if p.apply_step <= step {
+                    due.push(p);
+                } else {
+                    rest.push(p);
+                }
+            }
+            self.pending = rest;
+            due
+        };
+        for pend in due {
+            // If the simulated transfer has not actually finished by now,
+            // the apply blocks on it (honest wall-clock accounting).
+            if pend.finish_time > ctx.clock.now() {
+                ctx.clock.stall_until(pend.finish_time);
+                ctx.stats.apply_stalls += 1;
+            }
+            let p = pend.frag;
+            let frag = ctx.frags.get(p);
+            ctx.outer_step(p, &pend.delta_avg)?;
+            ctx.stats.syncs_completed += 1;
+            ctx.stats.per_fragment[p] += 1;
+            let new_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
+            let alpha = ctx.cfg.alpha;
+            for w in ctx.workers.iter_mut() {
+                for (x, &g) in w.params[frag.range()].iter_mut().zip(&new_g) {
+                    *x = (1.0 - alpha) * *x + alpha * g;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SyncStrategy for StreamingDiloco {
+    fn post_step(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        self.complete_due(step, ctx)?;
+        if step == 0 {
+            return Ok(());
+        }
+        let h = ctx.cfg.h_steps;
+        for p in 0..ctx.frags.k() {
+            if step % h == self.offsets[p]
+                && !self.pending.iter().any(|q| q.frag == p)
+            {
+                let pend = Self::initiate(p, step, false, ctx);
+                self.pending.push(pend);
+            }
+        }
+        Ok(())
+    }
+
+    fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "streaming_diloco"
+    }
+}

@@ -1,0 +1,35 @@
+//! # CoCoDC — cross-region model training with communication-computation
+//! overlapping and delay compensation
+//!
+//! Rust reproduction of *"Cross-region Model Training with
+//! Communication-Computation Overlapping and Delay Compensation"*
+//! (Zhu et al., CS.DC 2025) on a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: M simulated
+//!   datacenter workers, a WAN simulator with a ring all-reduce cost model,
+//!   fragment-wise synchronization strategies (DiLoCo, Streaming DiLoCo,
+//!   CoCoDC), Taylor-based delay compensation (Alg. 1) and adaptive fragment
+//!   transmission (Alg. 2), plus the Nesterov outer optimizer.
+//! * **L2/L1 (build time)** — a LLaMA-style transformer train step written in
+//!   JAX calling Pallas kernels, AOT-lowered to HLO text under
+//!   `artifacts/<preset>/` by `make artifacts`. Python never runs at
+//!   training time: this crate loads the artifacts through the PJRT C API
+//!   (`xla` crate) and drives them from the hot loop.
+//!
+//! Entry points: [`trainer::Trainer`] (library), `cocodc` (CLI binary) and
+//! `experiments` (paper table/figure regeneration).
+
+pub mod checkpoint;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod simclock;
+pub mod trainer;
+pub mod util;
+
+pub use config::{MethodKind, RunConfig};
+pub use trainer::{TrainOutcome, Trainer};

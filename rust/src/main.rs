@@ -1,0 +1,206 @@
+//! `cocodc` CLI — leader entrypoint for cross-region training runs.
+//!
+//! ```text
+//! cocodc train --preset exp --method cocodc --steps 1200       # one run
+//! cocodc compare --preset exp --steps 1200                     # all three
+//! cocodc info --preset exp                                     # artifacts
+//! cocodc emit-config > run.json                                # template
+//! cocodc train --config run.json                               # from file
+//! ```
+
+use std::path::PathBuf;
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::metrics::{table1, write_curves_csv};
+use cocodc::runtime::Engine;
+use cocodc::util::cli::Args;
+use cocodc::Trainer;
+
+const USAGE: &str = "\
+cocodc — CoCoDC cross-region training coordinator
+
+USAGE: cocodc <train|compare|info|emit-config> [flags]
+
+common flags:
+  --artifacts DIR     artifacts directory (default: artifacts)
+  --preset NAME       artifact preset (tiny|exp|e2e; default: exp)
+
+train/compare flags:
+  --config FILE       load RunConfig JSON (other flags override)
+  --method M          diloco|streaming|cocodc (train only; default cocodc)
+  --steps N           total local steps
+  --workers M         number of simulated datacenters (default 4)
+  --h N               local computation period H (default 100)
+  --tau N             fixed overlap depth (default 5)
+  --tau-network       derive tau from the WAN simulator
+  --alpha X --lambda X --gamma X --seed N --eval-every N
+  --codec C           pseudo-gradient wire codec: none|int8|int4
+  --hlo-fragment-ops  run outer/delay-comp through Pallas artifacts
+  --out FILE          write validation curve CSV
+  --save FILE         write final checkpoint (train only)
+  --ppl X             PPL threshold for the comparison table (default 20)
+  --quiet             suppress per-eval logging
+";
+
+const BOOL_FLAGS: &[&str] = &["tau-network", "hlo-fragment-ops", "quiet"];
+
+fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_json_file(path)?,
+        None => RunConfig::paper(
+            args.get("preset").unwrap_or("exp"),
+            MethodKind::parse(args.get("method").unwrap_or("cocodc"))?,
+        ),
+    };
+    if args.get("config").is_some() {
+        if let Some(p) = args.get("preset") {
+            cfg.preset = p.to_string();
+        }
+        if let Some(m) = args.get("method") {
+            cfg.method = MethodKind::parse(m)?;
+        }
+    }
+    if let Some(v) = args.get_parse::<u32>("steps")? {
+        cfg.total_steps = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_parse::<u32>("h")? {
+        cfg.h_steps = v;
+    }
+    if args.switch("tau-network") {
+        cfg.tau = TauMode::Network;
+    } else if let Some(v) = args.get_parse::<u32>("tau")? {
+        cfg.tau = TauMode::Fixed { tau: v };
+    }
+    if let Some(v) = args.get_parse::<f32>("alpha")? {
+        cfg.alpha = v;
+    }
+    if let Some(v) = args.get_parse::<f32>("lambda")? {
+        cfg.lambda = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("gamma")? {
+        cfg.gamma = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_parse::<u32>("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if args.switch("hlo-fragment-ops") {
+        cfg.use_hlo_fragment_ops = true;
+    }
+    if let Some(c) = args.get("codec") {
+        cfg.compression = cocodc::compression::Codec::parse(c)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn summarize(o: &cocodc::TrainOutcome) {
+    println!(
+        "[{}] steps={} wall={:.1}s (compute {:.1}s, stall {:.1}s) syncs={}/{} \
+         guard_hits={} stalls={} sent={:.1}MB final_val_ppl={:.3} real={:.1}s",
+        o.method,
+        o.curve.points.last().map(|p| p.step).unwrap_or(0),
+        o.wall_s,
+        o.compute_s,
+        o.comm_stall_s,
+        o.syncs_completed,
+        o.syncs_initiated,
+        o.staleness_guard_hits,
+        o.apply_stalls,
+        o.bytes_sent / 1e6,
+        o.curve.final_ppl().unwrap_or(f64::NAN),
+        o.real_s,
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(BOOL_FLAGS)?;
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    match cmd.as_str() {
+        "train" => {
+            let cfg = build_config(&args)?;
+            let engine = Engine::load(&artifacts, &cfg.preset)?;
+            eprintln!(
+                "loaded preset '{}' on {} ({} params, K={})",
+                cfg.preset,
+                engine.platform(),
+                engine.meta().param_count,
+                engine.meta().n_fragments
+            );
+            let mut tr = Trainer::new(&engine, cfg)?;
+            tr.verbose = !args.switch("quiet");
+            let out = tr.run()?;
+            summarize(&out);
+            if let Some(path) = args.get("out") {
+                write_curves_csv(path, std::slice::from_ref(&out.curve))?;
+                eprintln!("curve written to {path}");
+            }
+            if let Some(path) = args.get("save") {
+                tr.save_checkpoint(
+                    path,
+                    out.curve.points.last().map(|p| p.step).unwrap_or(0),
+                )?;
+                eprintln!("checkpoint written to {path}");
+            }
+            args.finish()?;
+        }
+        "compare" => {
+            let base = build_config(&args)?;
+            let ppl = args.get_or::<f64>("ppl", 20.0)?;
+            let engine = Engine::load(&artifacts, &base.preset)?;
+            let mut curves = Vec::new();
+            for method in MethodKind::all() {
+                let mut cfg = base.clone();
+                cfg.method = method;
+                let mut tr = Trainer::new(&engine, cfg)?;
+                tr.verbose = !args.switch("quiet");
+                let out = tr.run()?;
+                summarize(&out);
+                curves.push(out.curve);
+            }
+            println!("\n{}", table1(&curves, ppl));
+            if let Some(path) = args.get("out") {
+                write_curves_csv(path, &curves)?;
+                eprintln!("curves written to {path}");
+            }
+            args.finish()?;
+        }
+        "info" => {
+            let preset = args.get("preset").unwrap_or("exp").to_string();
+            args.finish()?;
+            let engine = Engine::load(&artifacts, &preset)?;
+            let meta = engine.meta();
+            println!("preset:     {}", meta.preset);
+            println!("platform:   {}", engine.platform());
+            println!(
+                "model:      {} layers, d={}, heads={}, vocab={}, seq={}, batch={}",
+                meta.model.n_layers, meta.model.d_model, meta.model.n_heads,
+                meta.model.vocab_size, meta.model.seq_len, meta.model.batch_size
+            );
+            println!("params:     {}", meta.param_count);
+            println!("fragments:  K={}", meta.n_fragments);
+            for f in &meta.fragments {
+                println!(
+                    "  [{}] offset={:>9} size={:>9} ({:.2} MB)",
+                    f.index, f.offset, f.size,
+                    f.size as f64 * 4.0 / 1e6
+                );
+            }
+        }
+        "emit-config" => {
+            args.finish()?;
+            println!("{}", RunConfig::default().to_json_string());
+        }
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Metrics: validation curves, steps-to-threshold (Table I's convergence
+//! criterion), CSV/JSONL emission, and run summaries.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One validation measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    /// Local training step at which the evaluation ran.
+    pub step: u32,
+    /// Virtual wall-clock seconds (WAN-accounted).
+    pub wall_s: f64,
+    pub loss: f64,
+    pub ppl: f64,
+}
+
+/// A full validation curve for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Curve {
+    pub method: String,
+    pub points: Vec<EvalPoint>,
+}
+
+impl Curve {
+    pub fn new(method: &str) -> Self {
+        Curve { method: method.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: u32, wall_s: f64, loss: f64) {
+        self.points.push(EvalPoint { step, wall_s, loss, ppl: loss.exp() });
+    }
+
+    /// First step at which PPL <= thr, linearly interpolated between the
+    /// two bracketing eval points (paper Table I: "Steps (PPL <= 20)").
+    pub fn steps_to_ppl(&self, thr: f64) -> Option<f64> {
+        let pts = &self.points;
+        for i in 0..pts.len() {
+            if pts[i].ppl <= thr {
+                if i == 0 {
+                    return Some(pts[0].step as f64);
+                }
+                let (a, b) = (&pts[i - 1], &pts[i]);
+                let f = (a.ppl - thr) / (a.ppl - b.ppl);
+                return Some(a.step as f64 + f * (b.step - a.step) as f64);
+            }
+        }
+        None
+    }
+
+    /// Same criterion against the virtual wall clock.
+    pub fn wall_to_ppl(&self, thr: f64) -> Option<f64> {
+        let pts = &self.points;
+        for i in 0..pts.len() {
+            if pts[i].ppl <= thr {
+                if i == 0 {
+                    return Some(pts[0].wall_s);
+                }
+                let (a, b) = (&pts[i - 1], &pts[i]);
+                let f = (a.ppl - thr) / (a.ppl - b.ppl);
+                return Some(a.wall_s + f * (b.wall_s - a.wall_s));
+            }
+        }
+        None
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    pub fn final_ppl(&self) -> Option<f64> {
+        self.points.last().map(|p| p.ppl)
+    }
+
+    /// Minimum PPL seen over the run (robust to end-of-run noise).
+    pub fn best_ppl(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.ppl).min_by(|a, b| a.total_cmp(b))
+    }
+}
+
+/// Write multiple curves as a long-format CSV:
+/// `method,step,wall_s,loss,ppl` (one row per eval point).
+pub fn write_curves_csv<P: AsRef<Path>>(path: P, curves: &[Curve]) -> anyhow::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "method,step,wall_s,loss,ppl")?;
+    for c in curves {
+        for p in &c.points {
+            writeln!(f, "{},{},{:.6},{:.6},{:.6}", c.method, p.step, p.wall_s,
+                     p.loss, p.ppl)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load curves back from the long-format CSV (used by the report generator).
+pub fn read_curves_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<Curve>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut curves: Vec<Curve> = Vec::new();
+    for line in text.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 5 {
+            continue;
+        }
+        let method = cols[0];
+        if curves.last().map(|c| c.method.as_str()) != Some(method) {
+            if let Some(c) = curves.iter_mut().find(|c| c.method == method) {
+                c.points.push(EvalPoint {
+                    step: cols[1].parse()?,
+                    wall_s: cols[2].parse()?,
+                    loss: cols[3].parse()?,
+                    ppl: cols[4].parse()?,
+                });
+                continue;
+            }
+            curves.push(Curve::new(method));
+        }
+        curves.last_mut().unwrap().points.push(EvalPoint {
+            step: cols[1].parse()?,
+            wall_s: cols[2].parse()?,
+            loss: cols[3].parse()?,
+            ppl: cols[4].parse()?,
+        });
+    }
+    Ok(curves)
+}
+
+/// Render a Table-I-style comparison from curves.
+pub fn table1(curves: &[Curve], ppl_thr: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<18} {:>8} {:>9} {:>16} {:>14}\n",
+        "Method", "Loss", "PPL", &format!("Steps(PPL<={ppl_thr})"), "Wall-clock(s)"
+    ));
+    for c in curves {
+        let steps = c
+            .steps_to_ppl(ppl_thr)
+            .map(|s| format!("{s:.0}"))
+            .unwrap_or_else(|| "-".into());
+        let wall = c
+            .wall_to_ppl(ppl_thr)
+            .map(|s| format!("{s:.1}"))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:<18} {:>8.4} {:>9.4} {:>16} {:>14}\n",
+            c.method,
+            c.final_loss().unwrap_or(f64::NAN),
+            c.final_ppl().unwrap_or(f64::NAN),
+            steps,
+            wall,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(vals: &[(u32, f64)]) -> Curve {
+        let mut c = Curve::new("test");
+        for &(s, loss) in vals {
+            c.push(s, s as f64 * 0.1, loss);
+        }
+        c
+    }
+
+    #[test]
+    fn steps_to_ppl_interpolates() {
+        // loss ln(30)≈3.401 at step 0, ln(10)≈2.303 at step 100.
+        let c = curve(&[(0, 30f64.ln()), (100, 10f64.ln())]);
+        let s = c.steps_to_ppl(20.0).unwrap();
+        assert!(s > 0.0 && s < 100.0);
+        // PPL=20 is crossed halfway in PPL-space: (30-20)/(30-10)=0.5.
+        assert!((s - 50.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn steps_to_ppl_none_if_never_reached() {
+        let c = curve(&[(0, 30f64.ln()), (100, 25f64.ln())]);
+        assert!(c.steps_to_ppl(20.0).is_none());
+    }
+
+    #[test]
+    fn immediate_crossing_returns_first_step() {
+        let c = curve(&[(0, 5f64.ln())]);
+        assert_eq!(c.steps_to_ppl(20.0), Some(0.0));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("cocodc_metrics_test");
+        let path = dir.join("curves.csv");
+        let mut a = curve(&[(0, 3.0), (10, 2.5)]);
+        a.method = "diloco".into();
+        let mut b = curve(&[(0, 3.1), (10, 2.4)]);
+        b.method = "cocodc".into();
+        write_curves_csv(&path, &[a.clone(), b.clone()]).unwrap();
+        let back = read_curves_csv(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].method, "diloco");
+        assert_eq!(back[1].points.len(), 2);
+        assert!((back[1].points[1].loss - 2.4).abs() < 1e-6);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn table_renders_all_methods() {
+        let mut a = curve(&[(0, 3.0), (10, 2.5)]);
+        a.method = "diloco".into();
+        let t = table1(&[a], 20.0);
+        assert!(t.contains("diloco"));
+        assert!(t.contains("Steps(PPL<=20)"));
+    }
+}

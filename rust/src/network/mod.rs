@@ -1,0 +1,204 @@
+//! WAN simulator: ring all-reduce cost model + a serialized inter-DC link
+//! timeline (transfers queue behind each other, matching the paper's
+//! streaming schedule where one fragment is in flight at a time).
+
+pub mod ring;
+
+use crate::config::NetworkConfig;
+use crate::util::Rng;
+
+/// A scheduled collective transfer on the simulated WAN.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    /// Virtual time the transfer was requested.
+    pub requested: f64,
+    /// Virtual time it actually started (>= requested; queueing).
+    pub start: f64,
+    /// Virtual time the all-reduce completes on every worker.
+    pub finish: f64,
+    pub bytes: f64,
+}
+
+impl Transfer {
+    pub fn duration(&self) -> f64 {
+        self.finish - self.start
+    }
+    pub fn queue_delay(&self) -> f64 {
+        self.start - self.requested
+    }
+}
+
+/// Simulated WAN shared by the M datacenters.
+///
+/// The model: all-reduce of S bytes over an M-node ring costs
+/// `2(M-1)·L + 2·((M-1)/M)·S/B` (reduce-scatter + all-gather, each of the
+/// 2(M-1) rounds moving S/M bytes per link at latency L). Concurrent
+/// requests serialize on the inter-DC links — the bandwidth term queues,
+/// which is exactly the congestion the paper's γ factor guards against.
+#[derive(Debug)]
+pub struct WanSimulator {
+    cfg: NetworkConfig,
+    workers: usize,
+    busy_until: f64,
+    rng: Rng,
+    /// Total bytes moved per link (for utilization reporting).
+    pub bytes_sent: f64,
+    pub transfers: usize,
+}
+
+impl WanSimulator {
+    pub fn new(cfg: NetworkConfig, workers: usize, seed: u64) -> Self {
+        WanSimulator {
+            cfg,
+            workers,
+            busy_until: 0.0,
+            rng: Rng::new(seed, 0xC0C0),
+            bytes_sent: 0.0,
+            transfers: 0,
+        }
+    }
+
+    /// Pure cost of one ring all-reduce of `bytes` (no queueing/jitter).
+    pub fn ring_time(&self, bytes: f64) -> f64 {
+        ring::ring_allreduce_time(
+            bytes,
+            self.workers,
+            self.cfg.latency_s,
+            self.cfg.bandwidth_bps,
+        )
+    }
+
+    /// Schedule an all-reduce at virtual time `now`; returns its timeline.
+    pub fn schedule_allreduce(&mut self, now: f64, bytes: f64) -> Transfer {
+        let start = now.max(self.busy_until);
+        let mut dur = self.ring_time(bytes);
+        if self.cfg.jitter > 0.0 {
+            // Multiplicative jitter in [1-j, 1+j], deterministic per seed.
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            dur *= 1.0 + self.cfg.jitter * u;
+        }
+        let t = Transfer {
+            requested: now,
+            start,
+            finish: start + dur,
+            bytes,
+        };
+        self.busy_until = t.finish;
+        self.bytes_sent += bytes;
+        self.transfers += 1;
+        t
+    }
+
+    /// Effective overlap depth in steps for a transfer completing at
+    /// `finish`, given per-step compute time: τ_eff = ceil((finish-now)/T_c).
+    pub fn tau_steps(&self, now: f64, finish: f64, step_compute_s: f64) -> u32 {
+        (((finish - now) / step_compute_s).ceil()).max(1.0) as u32
+    }
+
+    /// Average single-fragment sync time T_s for the adaptive scheduler
+    /// (Eq. 9): the pure ring time of a fragment of `bytes`.
+    pub fn t_sync(&self, bytes: f64) -> f64 {
+        self.ring_time(bytes)
+    }
+
+    /// Failure injection: take the inter-DC links down until `until`
+    /// (virtual time). Transfers requested during the outage queue behind
+    /// it — with TauMode::Network the effective τ stretches, and blocking
+    /// methods stall; used by robustness tests.
+    pub fn inject_outage_until(&mut self, until: f64) {
+        self.busy_until = self.busy_until.max(until);
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn config(&self) -> &NetworkConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkConfig {
+        NetworkConfig {
+            latency_s: 0.05,
+            bandwidth_bps: 125e6,
+            jitter: 0.0,
+            step_compute_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn ring_time_monotone_in_size_latency_and_inverse_bandwidth() {
+        let w = WanSimulator::new(net(), 4, 0);
+        assert!(w.ring_time(2e6) > w.ring_time(1e6));
+        let mut hi_lat = net();
+        hi_lat.latency_s = 0.2;
+        let w2 = WanSimulator::new(hi_lat, 4, 0);
+        assert!(w2.ring_time(1e6) > w.ring_time(1e6));
+        let mut lo_bw = net();
+        lo_bw.bandwidth_bps = 10e6;
+        let w3 = WanSimulator::new(lo_bw, 4, 0);
+        assert!(w3.ring_time(1e6) > w.ring_time(1e6));
+    }
+
+    #[test]
+    fn transfers_queue_on_the_link() {
+        let mut w = WanSimulator::new(net(), 4, 0);
+        let t1 = w.schedule_allreduce(0.0, 1e6);
+        let t2 = w.schedule_allreduce(0.0, 1e6);
+        assert_eq!(t1.start, 0.0);
+        assert!((t2.start - t1.finish).abs() < 1e-12);
+        assert!(t2.queue_delay() > 0.0);
+        assert_eq!(w.transfers, 2);
+    }
+
+    #[test]
+    fn idle_link_starts_immediately() {
+        let mut w = WanSimulator::new(net(), 4, 0);
+        let t1 = w.schedule_allreduce(0.0, 1e3);
+        let t2 = w.schedule_allreduce(t1.finish + 10.0, 1e3);
+        assert_eq!(t2.start, t2.requested);
+        assert_eq!(t2.queue_delay(), 0.0);
+    }
+
+    #[test]
+    fn tau_steps_ceil() {
+        let w = WanSimulator::new(net(), 4, 0);
+        assert_eq!(w.tau_steps(0.0, 0.45, 0.1), 5);
+        assert_eq!(w.tau_steps(0.0, 0.5, 0.1), 5);
+        assert_eq!(w.tau_steps(0.0, 0.0001, 0.1), 1);
+    }
+
+    #[test]
+    fn outage_queues_transfers_behind_it() {
+        let mut w = WanSimulator::new(net(), 4, 0);
+        w.inject_outage_until(100.0);
+        let t = w.schedule_allreduce(10.0, 1e6);
+        assert_eq!(t.start, 100.0);
+        assert!(t.queue_delay() >= 90.0);
+        // Outage never shortens an existing queue.
+        w.inject_outage_until(50.0);
+        let t2 = w.schedule_allreduce(10.0, 1e6);
+        assert!(t2.start >= t.finish);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let mut cfg = net();
+        cfg.jitter = 0.2;
+        let mut a = WanSimulator::new(cfg, 4, 9);
+        let mut b = WanSimulator::new(cfg, 4, 9);
+        let base = a.ring_time(1e6);
+        for i in 0..50 {
+            let ta = a.schedule_allreduce(i as f64 * 100.0, 1e6);
+            let tb = b.schedule_allreduce(i as f64 * 100.0, 1e6);
+            assert_eq!(ta, tb);
+            assert!(ta.duration() >= base * 0.8 - 1e-9);
+            assert!(ta.duration() <= base * 1.2 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Ring all-reduce: the analytic cost model plus a faithful data-path
+//! implementation (reduce-scatter + all-gather over chunked slices).
+//!
+//! The trainer's strategies average pseudo-gradients with a direct mean
+//! (numerically identical, see `ring_allreduce_matches_mean` below); the
+//! chunked implementation here exists to validate that equivalence, to model
+//! the exact per-round traffic the cost model charges for, and for
+//! `bench_allreduce`.
+
+/// Analytic completion time of a ring all-reduce of `bytes` over `m` nodes:
+/// 2(m-1) rounds, each moving `bytes/m` per link at latency `l` and
+/// bandwidth `b` ⇒ `2(m-1)·l + 2·((m-1)/m)·bytes/b`.
+pub fn ring_allreduce_time(bytes: f64, m: usize, l: f64, b: f64) -> f64 {
+    if m <= 1 {
+        return 0.0;
+    }
+    let m_f = m as f64;
+    2.0 * (m_f - 1.0) * l + 2.0 * ((m_f - 1.0) / m_f) * bytes / b
+}
+
+/// In-place ring all-reduce (average) over equal-length worker buffers.
+///
+/// Exactly the reduce-scatter + all-gather schedule: each of the `m` chunks
+/// travels around the ring accumulating, then circulates again fully
+/// reduced. After return every buffer holds the element-wise mean.
+pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let m = buffers.len();
+    assert!(m >= 1);
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n), "equal lengths required");
+    if m == 1 {
+        return;
+    }
+    // Chunk boundaries: chunk c covers [bounds[c], bounds[c+1]).
+    let bounds: Vec<usize> = (0..=m).map(|c| c * n / m).collect();
+
+    // Reduce-scatter: round r, node i sends chunk (i - r) mod m to node i+1.
+    for r in 0..m - 1 {
+        // Compute the transfers of this round before mutating (the real
+        // network does them concurrently).
+        let sends: Vec<(usize, usize, Vec<f32>)> = (0..m)
+            .map(|i| {
+                let c = (i + m - r) % m;
+                let (lo, hi) = (bounds[c], bounds[c + 1]);
+                ((i + 1) % m, c, buffers[i][lo..hi].to_vec())
+            })
+            .collect();
+        for (dst, c, data) in sends {
+            let (lo, hi) = (bounds[c], bounds[c + 1]);
+            for (x, y) in buffers[dst][lo..hi].iter_mut().zip(&data) {
+                *x += *y;
+            }
+        }
+    }
+    // After reduce-scatter, node i owns fully-reduced chunk (i + 1) mod m.
+    // Scale to mean, then all-gather.
+    let inv = 1.0 / m as f32;
+    for i in 0..m {
+        let c = (i + 1) % m;
+        let (lo, hi) = (bounds[c], bounds[c + 1]);
+        for x in buffers[i][lo..hi].iter_mut() {
+            *x *= inv;
+        }
+    }
+    for r in 0..m - 1 {
+        let sends: Vec<(usize, usize, Vec<f32>)> = (0..m)
+            .map(|i| {
+                let c = (i + 1 + m - r) % m;
+                let (lo, hi) = (bounds[c], bounds[c + 1]);
+                ((i + 1) % m, c, buffers[i][lo..hi].to_vec())
+            })
+            .collect();
+        for (dst, c, data) in sends {
+            let (lo, hi) = (bounds[c], bounds[c + 1]);
+            buffers[dst][lo..hi].copy_from_slice(&data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn time_model_zero_for_single_node() {
+        assert_eq!(ring_allreduce_time(1e9, 1, 0.05, 1e8), 0.0);
+    }
+
+    #[test]
+    fn time_model_latency_and_bandwidth_terms() {
+        // Pure latency: tiny payload.
+        let t = ring_allreduce_time(1.0, 4, 0.05, 1e12);
+        assert!((t - 2.0 * 3.0 * 0.05).abs() < 1e-6);
+        // Pure bandwidth: zero latency.
+        let t = ring_allreduce_time(1e8, 4, 0.0, 1e8);
+        assert!((t - 2.0 * 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_allreduce_matches_mean() {
+        let mut rng = Rng::new(11, 0);
+        for &(m, n) in &[(2usize, 10usize), (3, 7), (4, 1000), (5, 13), (4, 3)] {
+            let orig: Vec<Vec<f32>> = (0..m)
+                .map(|_| (0..n).map(|_| rng.next_gaussian() as f32).collect())
+                .collect();
+            let mean: Vec<f32> = (0..n)
+                .map(|j| orig.iter().map(|b| b[j]).sum::<f32>() / m as f32)
+                .collect();
+            let mut bufs = orig.clone();
+            ring_allreduce_mean(&mut bufs);
+            for b in &bufs {
+                for (x, y) in b.iter().zip(&mean) {
+                    assert!((x - y).abs() < 1e-5, "m={m} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let mut bufs = vec![vec![1.0f32, 2.0, 3.0]];
+        ring_allreduce_mean(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+    }
+}

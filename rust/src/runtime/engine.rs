@@ -1,0 +1,237 @@
+//! The execution engine: compiled artifacts + typed wrappers around their
+//! calling conventions.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::meta::Meta;
+
+/// PJRT executables are not marked Send/Sync by the `xla` crate (raw FFI
+/// handles), but the underlying XLA CPU client explicitly supports
+/// concurrent `Execute` calls from multiple threads, and our usage never
+/// mutates an executable after compilation. This wrapper asserts that.
+struct SendExec(PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+unsafe impl Sync for SendExec {}
+
+/// Per-worker mutable training state (host-resident flat vectors).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Flat parameter vector θ (fragment-major layout, see meta.leaves).
+    pub params: Vec<f32>,
+    /// AdamW first moment.
+    pub m: Vec<f32>,
+    /// AdamW second moment.
+    pub v: Vec<f32>,
+    /// Local step counter (drives the in-artifact LR schedule).
+    pub step: u32,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>) -> Self {
+        let n = params.len();
+        TrainState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// Compiled artifact set for one preset.
+pub struct Engine {
+    client: PjRtClient,
+    meta: Meta,
+    dir: PathBuf,
+    train: SendExec,
+    eval: SendExec,
+    grad: Option<SendExec>,
+    /// fragment index -> (delay_comp, outer_step) executables.
+    frag_ops: HashMap<usize, (SendExec, SendExec)>,
+}
+
+// Engine is shared read-only across worker threads (see SendExec).
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+fn compile(client: &PjRtClient, path: &Path) -> anyhow::Result<SendExec> {
+    let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+        anyhow::anyhow!("loading HLO text {}: {e}", path.display())
+    })?;
+    let comp = XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| {
+        anyhow::anyhow!("compiling {}: {e}", path.display())
+    })?;
+    Ok(SendExec(exe))
+}
+
+impl Engine {
+    /// Load and compile every artifact under `artifacts_dir/preset`.
+    pub fn load(artifacts_dir: &Path, preset: &str) -> anyhow::Result<Engine> {
+        let dir = artifacts_dir.join(preset);
+        let meta = Meta::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let art = |stem: &str| dir.join(stem);
+
+        let train = compile(&client, &art(&meta.artifacts["train_step"]))?;
+        let eval = compile(&client, &art(&meta.artifacts["eval_step"]))?;
+        let grad = match meta.artifacts.get("grad_step") {
+            Some(p) => Some(compile(&client, &art(p))?),
+            None => None,
+        };
+        let mut frag_ops = HashMap::new();
+        for i in 0..meta.n_fragments {
+            let fa = &meta.fragment_artifacts[&i.to_string()];
+            let dc = compile(&client, &art(&format!("{}.hlo.txt", fa.delay_comp)))?;
+            let os = compile(&client, &art(&format!("{}.hlo.txt", fa.outer_step)))?;
+            frag_ops.insert(i, (dc, os));
+        }
+        Ok(Engine { client, meta, dir, train, eval, grad, frag_ops })
+    }
+
+    pub fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Initial flat parameters as dumped by the AOT pipeline.
+    pub fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        let path = self.dir.join("init_params.bin");
+        let bytes = std::fs::read(&path)?;
+        anyhow::ensure!(
+            bytes.len() == self.meta.param_count * 4,
+            "init_params.bin size mismatch"
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn lit_f32(&self, data: &[f32]) -> Literal {
+        Literal::vec1(data)
+    }
+
+    fn lit_tokens(&self, data: &[i32]) -> anyhow::Result<Literal> {
+        let (b, t) = (self.meta.model.batch_size as i64, self.meta.model.seq_len as i64);
+        anyhow::ensure!(data.len() as i64 == b * t, "batch shape mismatch");
+        Ok(Literal::vec1(data).reshape(&[b, t])?)
+    }
+
+    /// One local training step: runs the train_step artifact in place over
+    /// `state` with the given batch; returns the training loss.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<f32> {
+        let args = [
+            self.lit_f32(&state.params),
+            self.lit_f32(&state.m),
+            self.lit_f32(&state.v),
+            Literal::scalar(state.step as f32),
+            self.lit_tokens(tokens)?,
+            self.lit_tokens(targets)?,
+        ];
+        let result = self.train.0.execute(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 4, "train_step must return 4 outputs");
+        outs[0].copy_raw_to(&mut state.params)?;
+        outs[1].copy_raw_to(&mut state.m)?;
+        outs[2].copy_raw_to(&mut state.v)?;
+        let loss: f32 = outs[3].get_first_element()?;
+        state.step += 1;
+        Ok(loss)
+    }
+
+    /// Validation loss of `params` on one batch.
+    pub fn eval_loss(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<f32> {
+        let args = [
+            self.lit_f32(params),
+            self.lit_tokens(tokens)?,
+            self.lit_tokens(targets)?,
+        ];
+        let result = self.eval.0.execute(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.get_first_element()?)
+    }
+
+    /// Loss + flat gradient (ablation/testing path; not used by training).
+    pub fn grad_step(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<(f32, Vec<f32>)> {
+        let exec = self
+            .grad
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("grad_step artifact not built for this preset"))?;
+        let args = [
+            self.lit_f32(params),
+            self.lit_tokens(tokens)?,
+            self.lit_tokens(targets)?,
+        ];
+        let result = exec.0.execute(&args)?[0][0].to_literal_sync()?;
+        let (loss_l, grad_l) = result.to_tuple2()?;
+        let loss: f32 = loss_l.get_first_element()?;
+        let grad: Vec<f32> = grad_l.to_vec()?;
+        Ok((loss, grad))
+    }
+
+    /// CoCoDC Alg. 1 via the Pallas/HLO artifact (per fragment).
+    /// Matches `coordinator::delay_comp::delay_compensate` bit-for-bit
+    /// (within f32 rounding); see bench_delay_comp.
+    pub fn delay_comp_hlo(
+        &self,
+        fragment: usize,
+        theta_g: &[f32],
+        theta_tl: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let (dc, _) = &self.frag_ops[&fragment];
+        let args = [
+            self.lit_f32(theta_g),
+            self.lit_f32(theta_tl),
+            self.lit_f32(theta_tp),
+            Literal::scalar(tau),
+            Literal::scalar(h),
+            Literal::scalar(lambda),
+        ];
+        let result = dc.0.execute(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec()?)
+    }
+
+    /// Nesterov outer step via the Pallas/HLO artifact (per fragment).
+    pub fn outer_step_hlo(
+        &self,
+        fragment: usize,
+        theta_g: &[f32],
+        delta: &[f32],
+        momentum_buf: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (_, os) = &self.frag_ops[&fragment];
+        let args = [
+            self.lit_f32(theta_g),
+            self.lit_f32(delta),
+            self.lit_f32(momentum_buf),
+            Literal::scalar(lr),
+            Literal::scalar(momentum),
+        ];
+        let result = os.0.execute(&args)?[0][0].to_literal_sync()?;
+        let (t, m) = result.to_tuple2()?;
+        Ok((t.to_vec()?, m.to_vec()?))
+    }
+}

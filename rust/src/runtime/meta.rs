@@ -1,0 +1,276 @@
+//! `artifacts/<preset>/meta.json` — the contract between the python AOT
+//! pipeline (python/compile/aot.py) and this runtime: parameter layout,
+//! fragment table, model/train hyperparameters and artifact file names.
+//! Parsed with the in-tree `util::json` (offline build, no serde).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub use_pallas_attention: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainMeta {
+    pub lr: f64,
+    pub warmup_steps: u32,
+    pub total_steps: u32,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub min_lr_ratio: f64,
+}
+
+/// One parameter leaf inside the flat vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeafMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub fragment: usize,
+}
+
+/// One contiguous fragment (strided depth shard) of the flat vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FragmentMeta {
+    pub index: usize,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Artifact stems for a fragment's delay-comp / outer-step kernels.
+#[derive(Debug, Clone)]
+pub struct FragArtifacts {
+    pub delay_comp: String,
+    pub outer_step: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub preset: String,
+    pub model: ModelMeta,
+    pub train: TrainMeta,
+    pub param_count: usize,
+    pub n_fragments: usize,
+    pub seed: u64,
+    pub leaves: Vec<LeafMeta>,
+    pub fragments: Vec<FragmentMeta>,
+    pub fragment_artifacts: HashMap<String, FragArtifacts>,
+    pub artifacts: HashMap<String, String>,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> anyhow::Result<Meta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let meta = Self::from_json(&Json::parse(&text)?)?;
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Meta> {
+        let m = j.field("model")?;
+        let model = ModelMeta {
+            vocab_size: m.field("vocab_size")?.as_usize()?,
+            d_model: m.field("d_model")?.as_usize()?,
+            n_layers: m.field("n_layers")?.as_usize()?,
+            n_heads: m.field("n_heads")?.as_usize()?,
+            d_ff: m.field("d_ff")?.as_usize()?,
+            seq_len: m.field("seq_len")?.as_usize()?,
+            batch_size: m.field("batch_size")?.as_usize()?,
+            use_pallas_attention: m.field("use_pallas_attention")?.as_bool()?,
+        };
+        let t = j.field("train")?;
+        let train = TrainMeta {
+            lr: t.field("lr")?.as_f64()?,
+            warmup_steps: t.field("warmup_steps")?.as_u64()? as u32,
+            total_steps: t.field("total_steps")?.as_u64()? as u32,
+            weight_decay: t.field("weight_decay")?.as_f64()?,
+            beta1: t.field("beta1")?.as_f64()?,
+            beta2: t.field("beta2")?.as_f64()?,
+            eps: t.field("eps")?.as_f64()?,
+            min_lr_ratio: t.field("min_lr_ratio")?.as_f64()?,
+        };
+        let leaves = j
+            .field("leaves")?
+            .as_arr()?
+            .iter()
+            .map(|l| -> anyhow::Result<LeafMeta> {
+                Ok(LeafMeta {
+                    name: l.field("name")?.as_str()?.to_string(),
+                    shape: l
+                        .field("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<anyhow::Result<_>>()?,
+                    offset: l.field("offset")?.as_usize()?,
+                    size: l.field("size")?.as_usize()?,
+                    fragment: l.field("fragment")?.as_usize()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let fragments = j
+            .field("fragments")?
+            .as_arr()?
+            .iter()
+            .map(|f| -> anyhow::Result<FragmentMeta> {
+                Ok(FragmentMeta {
+                    index: f.field("index")?.as_usize()?,
+                    offset: f.field("offset")?.as_usize()?,
+                    size: f.field("size")?.as_usize()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut fragment_artifacts = HashMap::new();
+        for (k, v) in j.field("fragment_artifacts")?.as_obj()? {
+            fragment_artifacts.insert(
+                k.clone(),
+                FragArtifacts {
+                    delay_comp: v.field("delay_comp")?.as_str()?.to_string(),
+                    outer_step: v.field("outer_step")?.as_str()?.to_string(),
+                },
+            );
+        }
+        let mut artifacts = HashMap::new();
+        for (k, v) in j.field("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), v.as_str()?.to_string());
+        }
+        Ok(Meta {
+            preset: j.field("preset")?.as_str()?.to_string(),
+            model,
+            train,
+            param_count: j.field("param_count")?.as_usize()?,
+            n_fragments: j.field("n_fragments")?.as_usize()?,
+            seed: j.field("seed")?.as_u64()?,
+            leaves,
+            fragments,
+            fragment_artifacts,
+            artifacts,
+        })
+    }
+
+    /// Structural invariants the rust side depends on.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut off = 0usize;
+        anyhow::ensure!(self.fragments.len() == self.n_fragments, "fragment count");
+        for (i, f) in self.fragments.iter().enumerate() {
+            anyhow::ensure!(f.index == i, "fragment indices must be ordered");
+            anyhow::ensure!(f.offset == off, "fragments must tile the vector");
+            anyhow::ensure!(f.size > 0, "empty fragment {i}");
+            off += f.size;
+        }
+        anyhow::ensure!(off == self.param_count, "fragments must cover all params");
+        let leaf_total: usize = self.leaves.iter().map(|l| l.size).sum();
+        anyhow::ensure!(leaf_total == self.param_count, "leaves must cover all params");
+        for l in &self.leaves {
+            let f = &self.fragments[l.fragment];
+            anyhow::ensure!(
+                l.offset >= f.offset && l.offset + l.size <= f.offset + f.size,
+                "leaf {} escapes its fragment",
+                l.name
+            );
+            let elems: usize = l.shape.iter().product();
+            anyhow::ensure!(elems == l.size, "leaf {} shape/size mismatch", l.name);
+        }
+        for i in 0..self.n_fragments {
+            anyhow::ensure!(
+                self.fragment_artifacts.contains_key(&i.to_string()),
+                "missing fragment artifact entry {i}"
+            );
+        }
+        for key in ["train_step", "eval_step"] {
+            anyhow::ensure!(self.artifacts.contains_key(key), "missing artifact {key}");
+        }
+        Ok(())
+    }
+
+    /// Fragment byte size (f32) — what one fragment all-reduce moves per
+    /// worker, the S in the ring cost model.
+    pub fn fragment_bytes(&self, index: usize) -> f64 {
+        self.fragments[index].size as f64 * 4.0
+    }
+
+    pub fn full_bytes(&self) -> f64 {
+        self.param_count as f64 * 4.0
+    }
+
+    pub fn batch_elems(&self) -> usize {
+        self.model.batch_size * self.model.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const MINI: &str = r#"{
+        "preset":"t",
+        "model":{"vocab_size":8,"d_model":4,"n_layers":2,"n_heads":2,
+                 "d_ff":8,"seq_len":4,"batch_size":2,
+                 "use_pallas_attention":true},
+        "train":{"lr":0.001,"warmup_steps":1,"total_steps":10,
+                 "weight_decay":0.1,"beta1":0.9,"beta2":0.999,"eps":1e-8,
+                 "min_lr_ratio":0.1},
+        "param_count":10,"n_fragments":2,"seed":0,
+        "leaves":[
+          {"name":"a","shape":[6],"offset":0,"size":6,"fragment":0},
+          {"name":"b","shape":[4],"offset":6,"size":4,"fragment":1}],
+        "fragments":[{"index":0,"offset":0,"size":6},
+                     {"index":1,"offset":6,"size":4}],
+        "fragment_artifacts":{"0":{"delay_comp":"d0","outer_step":"o0"},
+                              "1":{"delay_comp":"d1","outer_step":"o1"}},
+        "artifacts":{"train_step":"train_step.hlo.txt",
+                     "eval_step":"eval_step.hlo.txt"}
+    }"#;
+
+    fn mini_meta() -> Meta {
+        Meta::from_json(&Json::parse(MINI).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn valid_meta_passes() {
+        mini_meta().validate().unwrap();
+        assert_eq!(mini_meta().fragment_bytes(1), 16.0);
+        assert_eq!(mini_meta().full_bytes(), 40.0);
+        assert_eq!(mini_meta().batch_elems(), 8);
+    }
+
+    #[test]
+    fn gap_in_fragments_rejected() {
+        let mut m = mini_meta();
+        m.fragments[1].offset = 7;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn leaf_escaping_fragment_rejected() {
+        let mut m = mini_meta();
+        m.leaves[0].size = 7;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn shape_size_mismatch_rejected() {
+        let mut m = mini_meta();
+        m.leaves[1].shape = vec![5];
+        assert!(m.validate().is_err());
+    }
+}

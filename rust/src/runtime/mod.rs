@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<preset>/*.hlo.txt`)
+//! and executes them on the XLA CPU client from the coordinator's hot loop.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so results come back as one tuple literal.
+
+pub mod engine;
+pub mod meta;
+
+pub use engine::{Engine, TrainState};
+pub use meta::{FragmentMeta, LeafMeta, Meta};

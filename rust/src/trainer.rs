@@ -1,0 +1,263 @@
+//! The training orchestrator: drives M simulated datacenter workers in
+//! lockstep local steps (each a PJRT execution of the train_step artifact),
+//! hands control to the configured [`SyncStrategy`] after every step, and
+//! accounts virtual wall-clock through the WAN simulator.
+//!
+//! Worker steps run on parallel OS threads (the XLA CPU client supports
+//! concurrent executions); communication never runs Python — the entire hot
+//! loop is rust + compiled HLO.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::checkpoint::Checkpoint;
+use crate::config::RunConfig;
+use crate::coordinator::{
+    make_strategy, FragmentTable, GlobalState, SyncStats, SyncStrategy,
+};
+use crate::coordinator::strategy::SyncCtx;
+use crate::data::batches::{Batch, BatchStream};
+use crate::data::Split;
+use crate::metrics::Curve;
+use crate::network::WanSimulator;
+use crate::runtime::{Engine, TrainState};
+use crate::simclock::VirtualClock;
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub method: String,
+    pub curve: Curve,
+    pub syncs_initiated: usize,
+    pub syncs_completed: usize,
+    pub per_fragment_syncs: Vec<usize>,
+    pub staleness_guard_hits: usize,
+    pub apply_stalls: usize,
+    pub bytes_sent: f64,
+    /// Virtual (WAN-accounted) seconds.
+    pub wall_s: f64,
+    pub compute_s: f64,
+    pub comm_stall_s: f64,
+    /// Real elapsed seconds of the simulation itself.
+    pub real_s: f64,
+    pub final_train_loss: f32,
+}
+
+/// One full cross-region training run.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: RunConfig,
+    workers: Vec<TrainState>,
+    global: GlobalState,
+    frags: FragmentTable,
+    net: WanSimulator,
+    clock: VirtualClock,
+    strategy: Box<dyn SyncStrategy>,
+    streams: Vec<BatchStream>,
+    val_batches: Vec<Batch>,
+    stats: SyncStats,
+    pub verbose: bool,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: RunConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let meta = engine.meta();
+        let frags = FragmentTable::from_meta(meta);
+        let init = engine.init_params()?;
+        let workers: Vec<TrainState> =
+            (0..cfg.workers).map(|_| TrainState::new(init.clone())).collect();
+        let global = GlobalState::new(&init);
+        let net = WanSimulator::new(cfg.network, cfg.workers, cfg.seed);
+        let strategy = make_strategy(&cfg, &frags);
+        let streams: Vec<BatchStream> = (0..cfg.workers)
+            .map(|m| {
+                BatchStream::new(
+                    meta.model.vocab_size,
+                    cfg.data,
+                    cfg.seed,
+                    Split::Train { worker: m, workers: cfg.workers },
+                    meta.model.batch_size,
+                    meta.model.seq_len,
+                )
+            })
+            .collect();
+        let mut val_stream = BatchStream::new(
+            meta.model.vocab_size,
+            cfg.data,
+            cfg.seed,
+            Split::Validation,
+            meta.model.batch_size,
+            meta.model.seq_len,
+        );
+        let val_batches = val_stream.take_batches(cfg.eval_batches);
+        let stats = SyncStats::new(frags.k());
+        Ok(Trainer {
+            engine,
+            cfg,
+            workers,
+            global,
+            frags,
+            net,
+            clock: VirtualClock::new(),
+            strategy,
+            streams,
+            val_batches,
+            stats,
+            verbose: false,
+        })
+    }
+
+    /// Validation loss of the current consensus (mean of worker params).
+    pub fn validation_loss(&self) -> anyhow::Result<f64> {
+        let n = self.workers[0].params.len();
+        let mut mean = vec![0.0f32; n];
+        for w in &self.workers {
+            for (a, &x) in mean.iter_mut().zip(&w.params) {
+                *a += x;
+            }
+        }
+        let inv = 1.0 / self.workers.len() as f32;
+        for a in mean.iter_mut() {
+            *a *= inv;
+        }
+        let mut total = 0.0f64;
+        for b in &self.val_batches {
+            total += self.engine.eval_loss(&mean, &b.tokens, &b.targets)? as f64;
+        }
+        Ok(total / self.val_batches.len() as f64)
+    }
+
+    /// Execute one lockstep round of local steps on all workers.
+    fn step_all(&mut self) -> anyhow::Result<f32> {
+        let engine = self.engine;
+        let batches: Vec<Batch> =
+            self.streams.iter_mut().map(|s| s.next_batch()).collect();
+        let losses: Vec<anyhow::Result<f32>> = if self.cfg.parallel_workers && self.workers.len() > 1 {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .zip(&batches)
+                    .map(|(w, b)| {
+                        scope.spawn(move || engine.train_step(w, &b.tokens, &b.targets))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker thread")).collect()
+            })
+        } else {
+            self.workers
+                .iter_mut()
+                .zip(&batches)
+                .map(|(w, b)| engine.train_step(w, &b.tokens, &b.targets))
+                .collect()
+        };
+        let mut mean = 0.0f32;
+        for l in losses {
+            mean += l? / self.workers.len() as f32;
+        }
+        Ok(mean)
+    }
+
+    /// Run `cfg.total_steps` local steps; returns the outcome with the
+    /// validation curve (evaluated every `cfg.eval_every` steps).
+    pub fn run(&mut self) -> anyhow::Result<TrainOutcome> {
+        let t0 = Instant::now();
+        let mut curve = Curve::new(self.strategy.name());
+        let v0 = self.validation_loss()?;
+        curve.push(0, 0.0, v0);
+        if self.verbose {
+            eprintln!(
+                "[{}] step 0 val_loss={v0:.4} ppl={:.2}",
+                self.strategy.name(),
+                v0.exp()
+            );
+        }
+        let mut last_train_loss = f32::NAN;
+        for step in 1..=self.cfg.total_steps {
+            last_train_loss = self.step_all()?;
+            self.clock.advance_compute(self.cfg.network.step_compute_s);
+            let mut ctx = SyncCtx {
+                workers: &mut self.workers,
+                global: &mut self.global,
+                net: &mut self.net,
+                clock: &mut self.clock,
+                engine: Some(self.engine),
+                cfg: &self.cfg,
+                frags: &self.frags,
+                stats: &mut self.stats,
+            };
+            self.strategy.post_step(step, &mut ctx)?;
+            if step % self.cfg.eval_every == 0 || step == self.cfg.total_steps {
+                let v = self.validation_loss()?;
+                curve.push(step, self.clock.now(), v);
+                if self.verbose {
+                    eprintln!(
+                        "[{}] step {step} wall={:.1}s train_loss={last_train_loss:.4} val_loss={v:.4} ppl={:.2}",
+                        self.strategy.name(),
+                        self.clock.now(),
+                        v.exp()
+                    );
+                }
+            }
+        }
+        Ok(TrainOutcome {
+            method: self.strategy.name().to_string(),
+            curve,
+            syncs_initiated: self.stats.syncs_initiated,
+            syncs_completed: self.stats.syncs_completed,
+            per_fragment_syncs: self.stats.per_fragment.clone(),
+            staleness_guard_hits: self.stats.staleness_guard_hits,
+            apply_stalls: self.stats.apply_stalls,
+            bytes_sent: self.stats.bytes,
+            wall_s: self.clock.now(),
+            compute_s: self.clock.compute_s(),
+            comm_stall_s: self.clock.comm_stall_s(),
+            real_s: t0.elapsed().as_secs_f64(),
+            final_train_loss: last_train_loss,
+        })
+    }
+
+    /// Snapshot the full training state.
+    pub fn checkpoint(&self, step: u32) -> Checkpoint {
+        let mut ck = Checkpoint::new(step);
+        ck.insert("global/theta_g", self.global.theta_g.clone());
+        ck.insert("global/outer_momentum", self.global.outer_momentum.clone());
+        for (i, w) in self.workers.iter().enumerate() {
+            ck.insert(&format!("worker{i}/params"), w.params.clone());
+            ck.insert(&format!("worker{i}/m"), w.m.clone());
+            ck.insert(&format!("worker{i}/v"), w.v.clone());
+            ck.insert(&format!("worker{i}/step"), vec![w.step as f32]);
+        }
+        ck
+    }
+
+    /// Restore from a checkpoint produced by [`Trainer::checkpoint`].
+    pub fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let need = |name: &str| {
+            ck.get(name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing section {name}"))
+        };
+        self.global.theta_g = need("global/theta_g")?.to_vec();
+        self.global.outer_momentum = need("global/outer_momentum")?.to_vec();
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            w.params = need(&format!("worker{i}/params"))?.to_vec();
+            w.m = need(&format!("worker{i}/m"))?.to_vec();
+            w.v = need(&format!("worker{i}/v"))?.to_vec();
+            w.step = need(&format!("worker{i}/step"))?[0] as u32;
+        }
+        Ok(())
+    }
+
+    pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P, step: u32) -> anyhow::Result<()> {
+        self.checkpoint(step).save(path)
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn workers(&self) -> &[TrainState] {
+        &self.workers
+    }
+}

@@ -1,0 +1,85 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 and a black_box to stop
+//! the optimizer from deleting the measured work. Used by every target in
+//! rust/benches/ (all `harness = false`).
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after `warmup` iterations) and report.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    };
+    println!(
+        "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+        r.name, r.iters, r.mean, r.p50, r.p95, r.min
+    );
+    r
+}
+
+/// Convenience wrapper returning a value so closures can keep state alive.
+pub fn bench_with_result<T, F: FnMut() -> T>(
+    name: &str,
+    warmup: usize,
+    budget: Duration,
+    mut f: F,
+) -> BenchResult {
+    bench(name, warmup, budget, || {
+        bb(f());
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, Duration::from_millis(20), || {
+            bb((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal `--flag value` / `--flag` CLI parser (no clap offline).
+//!
+//! Supports long flags with values (`--steps 100`), boolean switches
+//! (`--tau-network`), and positional arguments. Unknown flags error with
+//! the set of known ones.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of args (without argv[0]). `bool_flags` lists
+    /// the switches that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        bool_flags: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                if bool_flags.contains(&name.as_str()) {
+                    anyhow::ensure!(inline.is_none(), "--{name} takes no value");
+                    out.switches.push(name);
+                } else if let Some(v) = inline {
+                    out.flags.insert(name, v);
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("--{name} expects a value")
+                    })?;
+                    out.flags.insert(name, v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on any flag the caller never looked at (catches typos).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            anyhow::ensure!(
+                seen.iter().any(|s| s == k),
+                "unknown flag --{k} (known: {})",
+                seen.join(", ")
+            );
+        }
+        for k in &self.switches {
+            anyhow::ensure!(seen.iter().any(|s| s == k), "unknown switch --{k}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = Args::parse(argv("train --steps 100 --tau-network --out x.csv"),
+                            &["tau-network"]).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get_or::<u32>("steps", 0).unwrap(), 100);
+        assert!(a.switch("tau-network"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(argv("--steps=42"), &[]).unwrap();
+        assert_eq!(a.get_or::<u32>("steps", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(argv("--bogus 1"), &[]).unwrap();
+        let _ = a.get("steps");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("--steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_flag() {
+        let a = Args::parse(argv("--steps abc"), &[]).unwrap();
+        let e = a.get_parse::<u32>("steps").unwrap_err().to_string();
+        assert!(e.contains("steps"));
+    }
+}

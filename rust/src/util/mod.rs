@@ -1,0 +1,13 @@
+//! Small shared utilities, all dependency-free (this build is offline):
+//! a deterministic splittable RNG, dense vector helpers, a minimal JSON
+//! parser/serializer, a CLI flag parser, a micro-benchmark harness and a
+//! property-testing driver.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod vecops;
+
+pub use rng::Rng;

@@ -1,0 +1,72 @@
+//! Property-testing driver (the proptest crate is unavailable offline).
+//!
+//! `forall(cases, |rng| ...)` runs a property over `cases` deterministic
+//! random inputs; on failure it reports the case seed so the exact input
+//! reproduces with `forall_seeded(seed, 1, ...)`. Used by the coordinator
+//! invariant tests (routing/batching/state, per the dist-train guide).
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` deterministic cases. `prop` returns Err(msg) to
+/// signal a counterexample.
+pub fn forall<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    forall_seeded(0xC0C0DC, cases, &mut prop);
+}
+
+pub fn forall_seeded<F>(base_seed: u64, cases: u64, prop: &mut F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on case {case} (seed {base_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Helpers for common generators.
+impl Rng {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next_gaussian() as f32 * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(32, |rng| {
+            count += 1;
+            let n = rng.usize_in(1, 10);
+            let v = rng.f32_vec(n, 1.0);
+            if v.is_empty() {
+                return Err("empty".into());
+            }
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(8, |rng| {
+            if rng.usize_in(0, 4) == 0 {
+                Err("hit zero".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

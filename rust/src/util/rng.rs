@@ -1,0 +1,156 @@
+//! Deterministic splittable RNG: splitmix64 seeding + xoshiro256++ core.
+//!
+//! Every stochastic choice in the system (corpus generation, shard draws,
+//! network jitter) flows through this so that a (seed, stream) pair fully
+//! determines a run — the paper's experiments are seed-controlled and so are
+//! ours.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Construct from a seed; `stream` decorrelates parallel consumers
+    /// (e.g. per-worker data shards) drawn from the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed ^ stream.wrapping_mul(0xA0761D6478BD642F);
+        let mut s = [0u64; 4];
+        for x in s.iter_mut() {
+            *x = splitmix64(&mut sm);
+        }
+        // xoshiro must not start at all-zero state.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless method is overkill here; modulo bias
+        // is negligible for n << 2^64 and determinism is what matters.
+        self.next_u64() % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple and
+    /// deterministic).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fork an independent stream (for nested deterministic consumers).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15), tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42, 7);
+        let mut b = Rng::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_decorrelate() {
+        let mut a = Rng::new(42, 0);
+        let mut b = Rng::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(1, 0);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(2, 0);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_entries() {
+        let mut r = Rng::new(3, 0);
+        let w = [0.0, 1.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[2] > 8 * counts[1] / 2, "{counts:?}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(4, 0);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+        assert_eq!(r.below(1), 0);
+    }
+}

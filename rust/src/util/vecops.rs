@@ -1,0 +1,91 @@
+//! Dense f32 vector kernels used by the coordinator hot paths (pseudo-
+//! gradient computation, averaging, outer optimization, delay compensation).
+//!
+//! These are written as straight slice loops: LLVM auto-vectorizes them, and
+//! the delay-comp/outer-step loops have HLO-artifact twins (Pallas kernels
+//! dispatched via PJRT) that `bench_delay_comp` compares against.
+
+/// out[i] = a[i] - b[i]
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// acc[i] += x[i]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// acc[i] *= s
+pub fn scale(acc: &mut [f32], s: f32) {
+    for a in acc.iter_mut() {
+        *a *= s;
+    }
+}
+
+/// Euclidean norm (f64 accumulation for stability on large fragments).
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Mean of `rows` (equal-length slices) written into `out`.
+pub fn mean_of(out: &mut [f32], rows: &[&[f32]]) {
+    assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f32;
+    out.copy_from_slice(rows[0]);
+    for r in &rows[1..] {
+        add_assign(out, r);
+    }
+    scale(out, inv);
+}
+
+/// max_i |a[i] - b[i]|
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sub_and_add_roundtrip() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![0.5f32, 1.0, -1.0];
+        let mut d = vec![0.0; 3];
+        sub(&mut d, &a, &b);
+        assert_eq!(d, vec![0.5, 1.0, 4.0]);
+        let mut acc = b.clone();
+        add_assign(&mut acc, &d);
+        assert_eq!(acc, a);
+    }
+
+    #[test]
+    fn mean_matches_manual() {
+        let r1 = vec![1.0f32, 2.0];
+        let r2 = vec![3.0f32, 6.0];
+        let mut out = vec![0.0; 2];
+        mean_of(&mut out, &[&r1, &r2]);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn l2_norm_known_value() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+}
