@@ -16,6 +16,7 @@ use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
 use cocodc::network::WanSimulator;
 use cocodc::runtime::TrainState;
 use cocodc::simclock::VirtualClock;
+use cocodc::util::pool::BufferPool;
 use cocodc::util::Rng;
 
 fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usize>, usize)> {
@@ -36,6 +37,7 @@ fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usi
     let mut net = WanSimulator::new(cfg.network, cfg.workers, 7);
     let mut clock = VirtualClock::new();
     let mut stats = SyncStats::new(frags.k());
+    let mut pool = BufferPool::new();
     let mut strategy = make_strategy(&cfg, &frags);
     let mut rng = Rng::new(42, 0);
 
@@ -61,6 +63,8 @@ fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usi
             cfg: &cfg,
             frags: &frags,
             stats: &mut stats,
+            pool: &mut pool,
+            threads: None,
         };
         strategy.post_step(step, &mut ctx)?;
     }

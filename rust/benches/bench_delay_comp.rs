@@ -9,13 +9,14 @@ use std::time::Duration;
 use cocodc::coordinator::delay_comp::delay_compensate;
 use cocodc::coordinator::outer_opt::outer_step;
 use cocodc::runtime::Engine;
-use cocodc::util::bench::{bench, black_box};
+use cocodc::util::bench::{bench, black_box, HotpathReport};
 use cocodc::util::Rng;
 
 fn main() {
     println!("== bench_delay_comp (rust vs Pallas/HLO artifact) ==");
     let budget = Duration::from_millis(400);
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut report = HotpathReport::new();
 
     for preset in ["tiny", "exp"] {
         if !dir.join(preset).join("meta.json").exists() {
@@ -57,15 +58,17 @@ fn main() {
             "    -> rust is {:.1}x faster at this fragment size",
             r_hlo.mean.as_secs_f64() / r_rust.mean.as_secs_f64()
         );
+        report.push("delay_comp_rust", n, (4 * n) as f64 * 4.0, &r_rust);
+        report.push("delay_comp_hlo_pjrt", n, (4 * n) as f64 * 4.0, &r_hlo);
 
         let delta = rng.f32_vec(n, 0.01);
         let mut theta = tg.clone();
         let mut mom = vec![0.0f32; n];
-        bench(&format!("[{preset}] outer_step rust (S={n})"), 3, budget, || {
+        let r_os = bench(&format!("[{preset}] outer_step rust (S={n})"), 3, budget, || {
             outer_step(&mut theta, black_box(&delta), &mut mom, 0.7, 0.9);
             black_box(&theta);
         });
-        bench(
+        let r_os_hlo = bench(
             &format!("[{preset}] outer_step HLO/PJRT (S={n})"),
             3,
             budget,
@@ -75,5 +78,11 @@ fn main() {
                 );
             },
         );
+        report.push("outer_step_rust", n, (5 * n) as f64 * 4.0, &r_os);
+        report.push("outer_step_hlo_pjrt", n, (5 * n) as f64 * 4.0, &r_os_hlo);
     }
+
+    let path = HotpathReport::default_path();
+    report.write(&path).expect("write BENCH_hotpath.json");
+    println!("report -> {}", path.display());
 }

@@ -12,6 +12,7 @@ use cocodc::network::WanSimulator;
 use cocodc::runtime::TrainState;
 use cocodc::simclock::VirtualClock;
 use cocodc::util::bench::black_box;
+use cocodc::util::pool::BufferPool;
 use cocodc::util::Rng;
 use cocodc::Trainer;
 
@@ -63,6 +64,7 @@ fn main() {
         let mut net = WanSimulator::new(cfg.network, 4, 1);
         let mut clock = VirtualClock::new();
         let mut stats = SyncStats::new(frags.k());
+        let mut pool = BufferPool::new();
         let mut strategy = make_strategy(&cfg, &frags);
         let mut rng = Rng::new(4, 0);
         let steps = 400u32;
@@ -85,6 +87,8 @@ fn main() {
                 cfg: &cfg,
                 frags: &frags,
                 stats: &mut stats,
+                pool: &mut pool,
+                threads: None,
             };
             strategy.post_step(step, &mut ctx).unwrap();
             black_box(&workers);

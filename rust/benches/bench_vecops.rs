@@ -1,0 +1,197 @@
+//! Bench: fused/unrolled vecops kernels vs the seed scalar loops, single-
+//! threaded and fanned out over the persistent worker pool.
+//!
+//! Emits machine-readable rows into `BENCH_hotpath.json` (schema
+//! `cocodc-bench-hotpath-v1`, see DESIGN.md §Hot path): per-op
+//! (n, ns/elem, GB/s) plus `*_speedup` rows of best-fused vs seed-scalar
+//! mean time — the numbers the perf acceptance gate tracks across PRs.
+
+use std::time::Duration;
+
+use cocodc::util::bench::{bench, black_box, BenchResult, HotpathReport};
+use cocodc::util::vecops::{self, reference};
+use cocodc::util::{Rng, ScopedTask, WorkerPool};
+
+/// Workers M, paper §IV-A.
+const M: usize = 4;
+
+/// Split `n` into per-thread ranges of this pool.
+fn chunk_len(pool: &WorkerPool, n: usize) -> usize {
+    n.div_ceil(pool.threads().max(1)).max(1)
+}
+
+/// Multi-threaded fused pseudo-gradient mean: contiguous chunks, one task
+/// per chunk. Elementwise, so bit-identical to the single-threaded kernel.
+fn par_pseudo_mean(pool: &WorkerPool, out: &mut [f32], rows: &[&[f32]], theta_g: &[f32]) {
+    let chunk = chunk_len(pool, out.len());
+    let tasks: Vec<ScopedTask<'_>> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(ci, oc)| {
+            let lo = ci * chunk;
+            let hi = lo + oc.len();
+            Box::new(move || {
+                let views: Vec<&[f32]> = rows.iter().map(|r| &r[lo..hi]).collect();
+                vecops::fused_pseudo_mean(oc, &views, &theta_g[lo..hi]);
+            }) as ScopedTask<'_>
+        })
+        .collect();
+    pool.scoped(tasks);
+}
+
+/// Multi-threaded fused delay compensation (out-of-place).
+fn par_delay_comp(
+    pool: &WorkerPool,
+    out: &mut [f32],
+    theta_g: &[f32],
+    theta_tl: &[f32],
+    theta_tp: &[f32],
+    tau: f32,
+    h: f32,
+    lambda: f32,
+) {
+    let chunk = chunk_len(pool, out.len());
+    let tasks: Vec<ScopedTask<'_>> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(ci, oc)| {
+            let lo = ci * chunk;
+            let hi = lo + oc.len();
+            Box::new(move || {
+                vecops::fused_delay_comp_into(
+                    oc,
+                    &theta_g[lo..hi],
+                    &theta_tl[lo..hi],
+                    &theta_tp[lo..hi],
+                    tau,
+                    h,
+                    lambda,
+                );
+            }) as ScopedTask<'_>
+        })
+        .collect();
+    pool.scoped(tasks);
+}
+
+fn speedup(baseline: &BenchResult, fused: &BenchResult) -> f64 {
+    baseline.mean.as_secs_f64() / fused.mean.as_secs_f64()
+}
+
+fn main() {
+    println!("== bench_vecops (fused/unrolled vs seed scalar loops) ==");
+    let budget = Duration::from_millis(250);
+    let mut report = HotpathReport::new();
+    let pool = WorkerPool::with_default_size(8);
+    println!("worker pool: {} threads\n", pool.threads());
+
+    for &n in &[1usize << 10, 1 << 16, 1 << 20] {
+        let mut rng = Rng::new(7, 0);
+        let rows: Vec<Vec<f32>> = (0..M).map(|_| rng.f32_vec(n, 0.5)).collect();
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let theta_g = rng.f32_vec(n, 0.5);
+        let theta_tl = rng.f32_vec(n, 0.5);
+        let theta_tp = rng.f32_vec(n, 0.5);
+        let mut out = vec![0.0f32; n];
+
+        // ---- pseudo-gradient mean (M rows + theta_g read, out write) ----
+        let bytes_pm = ((M + 2) * n) as f64 * 4.0;
+        let r_seed = bench(&format!("pseudo_mean seed-scalar  n={n}"), 3, budget, || {
+            reference::mean_pseudo_gradients_seed(
+                &mut out,
+                black_box(&row_refs),
+                black_box(&theta_g),
+            );
+            black_box(&out);
+        });
+        let r_fused = bench(&format!("pseudo_mean fused        n={n}"), 3, budget, || {
+            vecops::fused_pseudo_mean(&mut out, black_box(&row_refs), black_box(&theta_g));
+            black_box(&out);
+        });
+        let r_mt = bench(&format!("pseudo_mean fused-mt     n={n}"), 3, budget, || {
+            par_pseudo_mean(&pool, &mut out, black_box(&row_refs), black_box(&theta_g));
+            black_box(&out);
+        });
+        report.push("pseudo_mean_scalar", n, bytes_pm, &r_seed);
+        report.push("pseudo_mean_fused", n, bytes_pm, &r_fused);
+        report.push("pseudo_mean_fused_mt", n, bytes_pm, &r_mt);
+        let best = if r_mt.mean < r_fused.mean { &r_mt } else { &r_fused };
+        report.push_speedup("pseudo_mean_speedup", n, speedup(&r_seed, best));
+        println!("    -> pseudo_mean speedup vs seed: {:.2}x\n", speedup(&r_seed, best));
+
+        // ---- delay compensation (3 reads + 1 write) ----
+        let bytes_dc = (4 * n) as f64 * 4.0;
+        let r_seed = bench(&format!("delay_comp seed-scalar   n={n}"), 3, budget, || {
+            reference::delay_compensate(
+                &mut out,
+                black_box(&theta_g),
+                &theta_tl,
+                &theta_tp,
+                5.0,
+                100.0,
+                0.5,
+            );
+            black_box(&out);
+        });
+        let r_fused = bench(&format!("delay_comp fused         n={n}"), 3, budget, || {
+            vecops::fused_delay_comp_into(
+                &mut out,
+                black_box(&theta_g),
+                &theta_tl,
+                &theta_tp,
+                5.0,
+                100.0,
+                0.5,
+            );
+            black_box(&out);
+        });
+        let r_mt = bench(&format!("delay_comp fused-mt      n={n}"), 3, budget, || {
+            par_delay_comp(&pool, &mut out, &theta_g, &theta_tl, &theta_tp, 5.0, 100.0, 0.5);
+            black_box(&out);
+        });
+        report.push("delay_comp_scalar", n, bytes_dc, &r_seed);
+        report.push("delay_comp_fused", n, bytes_dc, &r_fused);
+        report.push("delay_comp_fused_mt", n, bytes_dc, &r_mt);
+        let best = if r_mt.mean < r_fused.mean { &r_mt } else { &r_fused };
+        report.push_speedup("delay_comp_speedup", n, speedup(&r_seed, best));
+        println!("    -> delay_comp speedup vs seed: {:.2}x\n", speedup(&r_seed, best));
+
+        // ---- outer step (theta+mom read/write, delta read) ----
+        let bytes_os = (5 * n) as f64 * 4.0;
+        let delta = rng.f32_vec(n, 0.01);
+        let mut tg1 = theta_g.clone();
+        let mut mom1 = vec![0.0f32; n];
+        let r_seed = bench(&format!("outer_step seed-scalar   n={n}"), 3, budget, || {
+            reference::outer_step(&mut tg1, black_box(&delta), &mut mom1, 0.7, 0.9);
+            black_box(&tg1);
+        });
+        let mut tg2 = theta_g.clone();
+        let mut mom2 = vec![0.0f32; n];
+        let r_fused = bench(&format!("outer_step fused         n={n}"), 3, budget, || {
+            vecops::fused_outer_step(&mut tg2, black_box(&delta), &mut mom2, 0.7, 0.9);
+            black_box(&tg2);
+        });
+        report.push("outer_step_scalar", n, bytes_os, &r_seed);
+        report.push("outer_step_fused", n, bytes_os, &r_fused);
+        report.push_speedup("outer_step_speedup", n, speedup(&r_seed, &r_fused));
+
+        // ---- alpha blend (x read/write, g read) ----
+        let bytes_ab = (3 * n) as f64 * 4.0;
+        let mut x = theta_tl.clone();
+        let r_seed = bench(&format!("alpha_blend seed-scalar  n={n}"), 3, budget, || {
+            reference::alpha_blend(&mut x, black_box(&theta_g), 0.5);
+            black_box(&x);
+        });
+        let r_fused = bench(&format!("alpha_blend fused        n={n}"), 3, budget, || {
+            vecops::fused_alpha_blend(&mut x, black_box(&theta_g), 0.5);
+            black_box(&x);
+        });
+        report.push("alpha_blend_scalar", n, bytes_ab, &r_seed);
+        report.push("alpha_blend_fused", n, bytes_ab, &r_fused);
+        report.push_speedup("alpha_blend_speedup", n, speedup(&r_seed, &r_fused));
+        println!();
+    }
+
+    let path = HotpathReport::default_path();
+    report.write(&path).expect("write BENCH_hotpath.json");
+    println!("report -> {}", path.display());
+}

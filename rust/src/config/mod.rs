@@ -248,6 +248,9 @@ impl RunConfig {
         ])
     }
 
+    // Deliberately fills in from defaults field-by-field so new fields stay
+    // backward compatible with older config files.
+    #[allow(clippy::field_reassign_with_default)]
     pub fn from_json(j: &Json) -> anyhow::Result<RunConfig> {
         let mut cfg = RunConfig::default();
         cfg.preset = j.field("preset")?.as_str()?.to_string();

@@ -10,23 +10,36 @@ use crate::coordinator::fragments::Fragment;
 use crate::runtime::TrainState;
 use crate::util::vecops;
 
-/// Δθ^g = mean_m(θ_p^m − θ_p^g) over one fragment (paper Eq. 1).
-/// `theta_g` is the fragment's last-synchronized global state.
+/// Δθ^g = mean_m(θ_p^m − θ_p^g) over one fragment (paper Eq. 1), written
+/// into a caller-provided (typically pooled) buffer — the zero-allocation
+/// hot-path entry. One fused memory pass per worker row
+/// ([`vecops::fused_pseudo_mean_iter`]): the mean is accumulated as
+/// `(Σ_m θ_m)·M⁻¹ − θ_g`, a ≤ 1-ulp-per-op reassociation of the historical
+/// per-worker subtraction order (see DESIGN.md §Hot path).
+pub fn mean_pseudo_gradients_into(
+    out: &mut [f32],
+    workers: &[TrainState],
+    frag: Fragment,
+    theta_g: &[f32],
+) {
+    assert!(!workers.is_empty());
+    assert_eq!(theta_g.len(), frag.size);
+    assert_eq!(out.len(), frag.size);
+    vecops::fused_pseudo_mean_iter(
+        out,
+        workers.iter().map(|w| &w.params[frag.range()]),
+        theta_g,
+    );
+}
+
+/// Allocating convenience wrapper around [`mean_pseudo_gradients_into`].
 pub fn mean_pseudo_gradients(
     workers: &[TrainState],
     frag: Fragment,
     theta_g: &[f32],
 ) -> Vec<f32> {
-    assert!(!workers.is_empty());
-    assert_eq!(theta_g.len(), frag.size);
     let mut acc = vec![0.0f32; frag.size];
-    for w in workers {
-        let local = &w.params[frag.range()];
-        for (a, (&l, &g)) in acc.iter_mut().zip(local.iter().zip(theta_g)) {
-            *a += l - g;
-        }
-    }
-    vecops::scale(&mut acc, 1.0 / workers.len() as f32);
+    mean_pseudo_gradients_into(&mut acc, workers, frag, theta_g);
     acc
 }
 
@@ -39,14 +52,11 @@ pub fn mean_pseudo_gradients_from_snapshots(
 ) -> Vec<f32> {
     assert!(!snapshots.is_empty());
     let n = theta_g.len();
-    let mut acc = vec![0.0f32; n];
     for snap in snapshots {
         assert_eq!(snap.len(), n);
-        for i in 0..n {
-            acc[i] += snap[i] - theta_g[i];
-        }
     }
-    vecops::scale(&mut acc, 1.0 / snapshots.len() as f32);
+    let mut acc = vec![0.0f32; n];
+    vecops::fused_pseudo_mean(&mut acc, snapshots, theta_g);
     acc
 }
 

@@ -16,11 +16,17 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::fragments::FragmentTable;
+use crate::runtime::Engine;
+use crate::util::threadpool::ScopedTask;
 use crate::util::vecops;
 
 use super::delay_comp::delay_compensate_inplace;
 use super::streaming::{Pending, StreamingDiloco};
 use super::strategy::{SyncCtx, SyncStrategy};
+
+/// Fan the per-worker delay-compensation out to the worker pool only when
+/// the fragment is big enough that the memory pass dominates the handoff.
+const PAR_FRAGMENT_MIN: usize = 1 << 13;
 
 pub struct Cocodc {
     pending: Vec<Pending>,
@@ -82,14 +88,19 @@ impl Cocodc {
             })
     }
 
+    /// Drain due syncs in place (stable order, no queue rebuild) and apply
+    /// Alg. 1 per worker — fanned out on the persistent worker pool when a
+    /// pool is attached and the fragment is large enough to pay for it
+    /// (elementwise per-worker work, so serial and parallel results are
+    /// bit-identical).
     fn complete_due(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
-        let due: Vec<Pending> = {
-            let (due, rest): (Vec<_>, Vec<_>) =
-                self.pending.drain(..).partition(|p| p.apply_step <= step);
-            self.pending = rest;
-            due
-        };
-        for pend in due {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].apply_step > step {
+                i += 1;
+                continue;
+            }
+            let pend = self.pending.remove(i);
             if pend.finish_time > ctx.clock.now() {
                 ctx.clock.stall_until(pend.finish_time);
                 ctx.stats.apply_stalls += 1;
@@ -106,29 +117,92 @@ impl Cocodc {
             self.change_rate[p] = vecops::l2_norm(&pend.delta_avg) / i_p;
             self.last_completed[p] = step;
 
-            // Alg. 1 per worker: delay-compensated adoption.
+            // Alg. 1 per worker: delay-compensated adoption, straight from
+            // the (disjointly borrowed) global fragment slice.
             let tau = (step - pend.t_init).max(1) as f32;
             let h = ctx.cfg.h_steps as f32;
             let lambda = ctx.cfg.lambda;
-            let new_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
             let snaps = pend
                 .snapshots
                 .as_ref()
                 .expect("CoCoDC pendings always carry snapshots");
-            let use_hlo = ctx.cfg.use_hlo_fragment_ops && ctx.engine.is_some();
-            for (w, snap) in ctx.workers.iter_mut().zip(snaps) {
-                let local = &mut w.params[frag.range()];
-                if use_hlo {
-                    let engine = ctx.engine.unwrap();
-                    let out = engine
-                        .delay_comp_hlo(p, &new_g, local, snap, tau, h, lambda)?;
-                    local.copy_from_slice(&out);
-                } else {
-                    delay_compensate_inplace(local, &new_g, snap, tau, h, lambda);
+            let engine = if ctx.cfg.use_hlo_fragment_ops { ctx.engine } else { None };
+            {
+                let new_g: &[f32] = &ctx.global.theta_g[frag.range()];
+                let workers = &mut *ctx.workers;
+                match ctx.threads {
+                    Some(tp) if workers.len() > 1 && frag.size >= PAR_FRAGMENT_MIN => {
+                        let mut results: Vec<Option<anyhow::Result<()>>> =
+                            workers.iter().map(|_| None).collect();
+                        let tasks: Vec<ScopedTask<'_>> = workers
+                            .iter_mut()
+                            .zip(snaps.iter())
+                            .zip(results.iter_mut())
+                            .map(|((w, snap), slot)| {
+                                let range = frag.range();
+                                Box::new(move || {
+                                    *slot = Some(apply_delay_comp(
+                                        engine,
+                                        p,
+                                        new_g,
+                                        &mut w.params[range],
+                                        snap,
+                                        tau,
+                                        h,
+                                        lambda,
+                                    ));
+                                }) as ScopedTask<'_>
+                            })
+                            .collect();
+                        tp.scoped(tasks);
+                        for r in results {
+                            r.expect("pool ran every task")?;
+                        }
+                    }
+                    _ => {
+                        for (w, snap) in workers.iter_mut().zip(snaps.iter()) {
+                            apply_delay_comp(
+                                engine,
+                                p,
+                                new_g,
+                                &mut w.params[frag.range()],
+                                snap,
+                                tau,
+                                h,
+                                lambda,
+                            )?;
+                        }
+                    }
                 }
             }
+            pend.recycle(ctx.pool);
         }
         Ok(())
+    }
+}
+
+/// One worker's delay-compensated adoption (Alg. 1 line 3): the fused
+/// in-place kernel, or the Pallas/HLO artifact writing straight back into
+/// the live fragment slice.
+#[allow(clippy::too_many_arguments)]
+fn apply_delay_comp(
+    engine: Option<&Engine>,
+    fragment: usize,
+    new_g: &[f32],
+    local: &mut [f32],
+    snap: &[f32],
+    tau: f32,
+    h: f32,
+    lambda: f32,
+) -> anyhow::Result<()> {
+    match engine {
+        Some(engine) => {
+            engine.delay_comp_hlo_inplace(fragment, new_g, local, snap, tau, h, lambda)
+        }
+        None => {
+            delay_compensate_inplace(local, new_g, snap, tau, h, lambda);
+            Ok(())
+        }
     }
 }
 

@@ -20,7 +20,12 @@
 //! The Pallas/HLO twin (`Engine::delay_comp_hlo`) implements the identical
 //! math; integration tests assert agreement to f32 rounding.
 
+use crate::util::vecops;
+
 /// Compensated target state, written into `out` (Alg. 1 line 3 output).
+/// Thin wrapper over the unrolled [`vecops::fused_delay_comp_into`] kernel
+/// (bit-identical to the historical scalar loop, preserved as
+/// `vecops::reference::delay_compensate`).
 pub fn delay_compensate(
     out: &mut [f32],
     theta_g: &[f32],
@@ -34,13 +39,7 @@ pub fn delay_compensate(
     debug_assert_eq!(out.len(), theta_tl.len());
     debug_assert_eq!(out.len(), theta_tp.len());
     debug_assert!(tau > 0.0 && h > 0.0);
-    let inv_tau = 1.0 / tau;
-    let inv_h = 1.0 / h;
-    for i in 0..out.len() {
-        let g = (theta_tl[i] - theta_tp[i]) * inv_tau;
-        let g_corr = g + lambda * g * g * (theta_g[i] - theta_tp[i]) * inv_h;
-        out[i] = theta_g[i] + g_corr * tau;
-    }
+    vecops::fused_delay_comp_into(out, theta_g, theta_tl, theta_tp, tau, h, lambda);
 }
 
 /// Convenience: apply in place on a worker's fragment slice.
@@ -52,13 +51,7 @@ pub fn delay_compensate_inplace(
     h: f32,
     lambda: f32,
 ) {
-    let inv_tau = 1.0 / tau;
-    let inv_h = 1.0 / h;
-    for i in 0..theta_local.len() {
-        let g = (theta_local[i] - theta_tp[i]) * inv_tau;
-        let g_corr = g + lambda * g * g * (theta_g[i] - theta_tp[i]) * inv_h;
-        theta_local[i] = theta_g[i] + g_corr * tau;
-    }
+    vecops::fused_delay_comp(theta_local, theta_g, theta_tp, tau, h, lambda);
 }
 
 #[cfg(test)]

@@ -4,12 +4,13 @@
 //! strictly serialized — the resource underutilization the paper's §I
 //! motivates against — which the virtual clock charges as a stall.
 
-use super::allreduce::mean_pseudo_gradients;
+use super::allreduce::mean_pseudo_gradients_into;
 use super::strategy::{SyncCtx, SyncStrategy};
 
 #[derive(Debug, Default)]
 pub struct Diloco {
-    rounds: usize,
+    /// Completed blocking outer rounds.
+    pub rounds: usize,
 }
 
 impl Diloco {
@@ -33,18 +34,26 @@ impl SyncStrategy for Diloco {
         ctx.stats.syncs_initiated += ctx.frags.k();
         ctx.stats.syncs_completed += ctx.frags.k();
 
-        // Per fragment: Δ^g = mean(θ^m − θ^g); outer step; adopt.
+        // Per fragment: Δ^g = mean(θ^m − θ^g); outer step; adopt. The delta
+        // lives in a pooled buffer and θ_g is read/adopted through borrows
+        // of the disjoint SyncCtx fields — no fragment copies.
         for p in 0..ctx.frags.k() {
             let frag = ctx.frags.get(p);
-            let theta_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
-            let mut delta = mean_pseudo_gradients(ctx.workers, frag, &theta_g);
+            let mut delta = ctx.pool.take(frag.size);
+            {
+                let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
+                mean_pseudo_gradients_into(&mut delta, ctx.workers, frag, theta_g);
+            }
             ctx.cfg.compression.round_trip(&mut delta);
             ctx.outer_step(p, &delta)?;
             ctx.stats.per_fragment[p] += 1;
-            let new_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
-            for w in ctx.workers.iter_mut() {
-                w.params[frag.range()].copy_from_slice(&new_g);
+            {
+                let new_g = &ctx.global.theta_g[frag.range()];
+                for w in ctx.workers.iter_mut() {
+                    w.params[frag.range()].copy_from_slice(new_g);
+                }
             }
+            ctx.pool.put(delta);
         }
         Ok(())
     }

@@ -7,10 +7,16 @@
 //! `Engine::outer_step_hlo`; `tests/integration.rs` and `bench_delay_comp`
 //! check the two agree.
 
+use crate::util::vecops;
+
 /// In-place Nesterov outer step on one fragment.
 ///
 /// theta_g <- theta_g - lr * (grad + mu * mom'),  mom' = mu * mom + grad,
 /// with grad = -delta.
+///
+/// Thin wrapper over the 8-lane unrolled [`vecops::fused_outer_step`]
+/// kernel (bit-identical to the historical scalar loop, which lives on as
+/// `vecops::reference::outer_step`).
 pub fn outer_step(
     theta_g: &mut [f32],
     delta: &[f32],
@@ -20,12 +26,7 @@ pub fn outer_step(
 ) {
     debug_assert_eq!(theta_g.len(), delta.len());
     debug_assert_eq!(theta_g.len(), momentum_buf.len());
-    for i in 0..theta_g.len() {
-        let grad = -delta[i];
-        let m2 = momentum * momentum_buf[i] + grad;
-        momentum_buf[i] = m2;
-        theta_g[i] -= lr * (grad + momentum * m2);
-    }
+    vecops::fused_outer_step(theta_g, delta, momentum_buf, lr, momentum);
 }
 
 #[cfg(test)]

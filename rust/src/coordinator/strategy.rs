@@ -7,6 +7,8 @@ use crate::coordinator::{cocodc::Cocodc, diloco::Diloco, streaming::StreamingDil
 use crate::network::WanSimulator;
 use crate::runtime::{Engine, TrainState};
 use crate::simclock::VirtualClock;
+use crate::util::pool::BufferPool;
+use crate::util::threadpool::WorkerPool;
 
 /// Consensus state shared (deterministically replicated) by all workers:
 /// the last-synchronized global fragment states θ_p^g and the outer
@@ -62,21 +64,34 @@ pub struct SyncCtx<'a> {
     pub cfg: &'a RunConfig,
     pub frags: &'a FragmentTable,
     pub stats: &'a mut SyncStats,
+    /// Recycled fragment-sized buffers — snapshots, pseudo-gradients and
+    /// HLO scratch come from here, so steady-state syncs never allocate.
+    pub pool: &'a mut BufferPool,
+    /// Persistent worker threads for per-worker fan-out (None = serial;
+    /// results are bit-identical either way, fan-out is elementwise).
+    pub threads: Option<&'a WorkerPool>,
 }
 
 impl<'a> SyncCtx<'a> {
     /// Nesterov outer step on fragment `p` with averaged pseudo-gradient
-    /// `delta`, via the HLO artifact or the native rust twin.
+    /// `delta`, via the HLO artifact or the native rust twin. The HLO path
+    /// reads results back into pooled scratch instead of fresh vectors.
     pub fn outer_step(&mut self, p: usize, delta: &[f32]) -> anyhow::Result<()> {
         let frag = self.frags.get(p);
         let (lr, mu) = (self.cfg.outer_lr, self.cfg.outer_momentum);
         if self.cfg.use_hlo_fragment_ops {
             if let Some(engine) = self.engine {
-                let tg = self.frags.slice(&self.global.theta_g, p);
-                let mom = self.frags.slice(&self.global.outer_momentum, p);
-                let (t2, m2) = engine.outer_step_hlo(p, tg, delta, mom, lr, mu)?;
+                let mut t2 = self.pool.take(frag.size);
+                let mut m2 = self.pool.take(frag.size);
+                {
+                    let tg = self.frags.slice(&self.global.theta_g, p);
+                    let mom = self.frags.slice(&self.global.outer_momentum, p);
+                    engine.outer_step_hlo_into(p, tg, delta, mom, lr, mu, &mut t2, &mut m2)?;
+                }
                 self.global.theta_g[frag.range()].copy_from_slice(&t2);
                 self.global.outer_momentum[frag.range()].copy_from_slice(&m2);
+                self.pool.put(t2);
+                self.pool.put(m2);
                 return Ok(());
             }
         }

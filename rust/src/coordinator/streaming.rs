@@ -13,15 +13,25 @@
 //! This is precisely where staleness (τ-step-old consensus) and
 //! inconsistency (only fragment p refreshed) enter — the effects CoCoDC
 //! compensates for.
+//!
+//! Hot-path discipline (see DESIGN.md §Hot path): snapshots and the
+//! averaged pseudo-gradient live in pooled buffers recycled across syncs,
+//! the averaging itself is the fused one-pass-per-worker kernel, the blend
+//! is the fused α-kernel over a borrowed θ_g slice (no fragment copy), and
+//! due entries drain from the pending queue in place — steady state does
+//! zero heap allocations per initiate/complete cycle.
 
-use crate::config::TauMode;
 use crate::config::RunConfig;
+use crate::config::TauMode;
 use crate::coordinator::fragments::FragmentTable;
+use crate::util::pool::BufferPool;
+use crate::util::vecops;
 
-use super::allreduce::mean_pseudo_gradients_from_snapshots;
 use super::strategy::{SyncCtx, SyncStrategy};
 
-/// An in-flight fragment synchronization.
+/// An in-flight fragment synchronization. `delta_avg` and `snapshots` are
+/// checked out of the [`BufferPool`] at initiation and must be returned
+/// via [`Pending::recycle`] on completion.
 #[derive(Debug)]
 pub(crate) struct Pending {
     pub frag: usize,
@@ -39,6 +49,16 @@ pub(crate) struct Pending {
     pub snapshots: Option<Vec<Vec<f32>>>,
 }
 
+impl Pending {
+    /// Hand every buffer back to the pool.
+    pub(crate) fn recycle(self, pool: &mut BufferPool) {
+        pool.put(self.delta_avg);
+        if let Some(snaps) = self.snapshots {
+            pool.put_shell(snaps);
+        }
+    }
+}
+
 pub struct StreamingDiloco {
     offsets: Vec<u32>,
     pending: Vec<Pending>,
@@ -52,7 +72,8 @@ impl StreamingDiloco {
         }
     }
 
-    /// Shared by CoCoDC: start a sync of fragment `p` at step `t`.
+    /// Shared by CoCoDC: start a sync of fragment `p` at step `t`. All
+    /// buffers come from (and eventually return to) `ctx.pool`.
     pub(crate) fn initiate(
         p: usize,
         t: u32,
@@ -60,13 +81,17 @@ impl StreamingDiloco {
         ctx: &mut SyncCtx,
     ) -> Pending {
         let frag = ctx.frags.get(p);
-        let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
-        let snaps: Vec<Vec<f32>> = ctx
-            .workers
-            .iter()
-            .map(|w| w.params[frag.range()].to_vec())
-            .collect();
-        let mut delta_avg = mean_pseudo_gradients_from_snapshots(&snaps, theta_g);
+        let mut snaps = ctx.pool.take_shell();
+        for w in ctx.workers.iter() {
+            let mut buf = ctx.pool.take(frag.size);
+            buf.copy_from_slice(&w.params[frag.range()]);
+            snaps.push(buf);
+        }
+        let mut delta_avg = ctx.pool.take(frag.size);
+        {
+            let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
+            vecops::fused_pseudo_mean(&mut delta_avg, &snaps, theta_g);
+        }
         // What the wire would carry: round-trip through the codec and pay
         // for the compressed size (Streaming DiLoCo ships quantized
         // pseudo-gradients; the optimizer sees the dequantized values).
@@ -83,32 +108,33 @@ impl StreamingDiloco {
                 ctx.cfg.network.step_compute_s,
             ),
         };
+        let snapshots = if keep_snapshots {
+            Some(snaps)
+        } else {
+            ctx.pool.put_shell(snaps);
+            None
+        };
         Pending {
             frag: p,
             t_init: t,
             apply_step: t + tau,
             finish_time: transfer.finish,
             delta_avg,
-            snapshots: if keep_snapshots { Some(snaps) } else { None },
+            snapshots,
         }
     }
 
     /// Complete every pending sync due at `step`: outer step + α-blend.
+    /// Due entries are extracted in place (stable order) — the pending
+    /// queue is never rebuilt.
     fn complete_due(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
-        let due: Vec<Pending> = {
-            let mut rest = Vec::new();
-            let mut due = Vec::new();
-            for p in self.pending.drain(..) {
-                if p.apply_step <= step {
-                    due.push(p);
-                } else {
-                    rest.push(p);
-                }
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].apply_step > step {
+                i += 1;
+                continue;
             }
-            self.pending = rest;
-            due
-        };
-        for pend in due {
+            let pend = self.pending.remove(i);
             // If the simulated transfer has not actually finished by now,
             // the apply blocks on it (honest wall-clock accounting).
             if pend.finish_time > ctx.clock.now() {
@@ -120,13 +146,16 @@ impl StreamingDiloco {
             ctx.outer_step(p, &pend.delta_avg)?;
             ctx.stats.syncs_completed += 1;
             ctx.stats.per_fragment[p] += 1;
-            let new_g = ctx.frags.slice(&ctx.global.theta_g, p).to_vec();
             let alpha = ctx.cfg.alpha;
-            for w in ctx.workers.iter_mut() {
-                for (x, &g) in w.params[frag.range()].iter_mut().zip(&new_g) {
-                    *x = (1.0 - alpha) * *x + alpha * g;
+            {
+                // θ_g and worker params are disjoint SyncCtx fields: blend
+                // straight from the global slice, no fragment copy.
+                let new_g = &ctx.global.theta_g[frag.range()];
+                for w in ctx.workers.iter_mut() {
+                    vecops::fused_alpha_blend(&mut w.params[frag.range()], new_g, alpha);
                 }
             }
+            pend.recycle(ctx.pool);
         }
         Ok(())
     }

@@ -19,6 +19,11 @@
 //! Entry points: [`trainer::Trainer`] (library), `cocodc` (CLI binary) and
 //! `experiments` (paper table/figure regeneration).
 
+// The fragment-op signatures intentionally mirror the paper's notation
+// (θ_g, θ_tl, θ_tp, τ, H, λ, ...); folding them into parameter structs
+// would obscure the Alg. 1/Eq. 2 correspondence the code is documented by.
+#![allow(clippy::too_many_arguments)]
+
 pub mod checkpoint;
 pub mod compression;
 pub mod config;

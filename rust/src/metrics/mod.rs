@@ -130,9 +130,10 @@ pub fn read_curves_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<Curve>> {
 /// Render a Table-I-style comparison from curves.
 pub fn table1(curves: &[Curve], ppl_thr: f64) -> String {
     let mut out = String::new();
+    let steps_hdr = format!("Steps(PPL<={ppl_thr})");
     out.push_str(&format!(
         "{:<18} {:>8} {:>9} {:>16} {:>14}\n",
-        "Method", "Loss", "PPL", &format!("Steps(PPL<={ppl_thr})"), "Wall-clock(s)"
+        "Method", "Loss", "PPL", steps_hdr, "Wall-clock(s)"
     ));
     for c in curves {
         let steps = c

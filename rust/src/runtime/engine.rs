@@ -186,9 +186,41 @@ impl Engine {
         Ok((loss, grad))
     }
 
-    /// CoCoDC Alg. 1 via the Pallas/HLO artifact (per fragment).
+    /// CoCoDC Alg. 1 via the Pallas/HLO artifact (per fragment), applied
+    /// *in place*: `theta_local` is read as θ_tl (argument literals are
+    /// marshalled before execution) and overwritten with the compensated
+    /// state. The result is copied straight from the output literal — no
+    /// fresh `Vec` per call, so the coordinator's pooled hot path stays
+    /// allocation-free on the rust side. (The Literal marshalling round
+    /// trip itself still copies — tracked in ROADMAP "Open items".)
     /// Matches `coordinator::delay_comp::delay_compensate` bit-for-bit
     /// (within f32 rounding); see bench_delay_comp.
+    pub fn delay_comp_hlo_inplace(
+        &self,
+        fragment: usize,
+        theta_g: &[f32],
+        theta_local: &mut [f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) -> anyhow::Result<()> {
+        let (dc, _) = &self.frag_ops[&fragment];
+        let args = [
+            self.lit_f32(theta_g),
+            self.lit_f32(theta_local),
+            self.lit_f32(theta_tp),
+            Literal::scalar(tau),
+            Literal::scalar(h),
+            Literal::scalar(lambda),
+        ];
+        let result = dc.0.execute(&args)?[0][0].to_literal_sync()?;
+        result.to_tuple1()?.copy_raw_to(theta_local)?;
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper around [`Engine::delay_comp_hlo_inplace`]
+    /// (benches/tests).
     pub fn delay_comp_hlo(
         &self,
         fragment: usize,
@@ -199,21 +231,15 @@ impl Engine {
         h: f32,
         lambda: f32,
     ) -> anyhow::Result<Vec<f32>> {
-        let (dc, _) = &self.frag_ops[&fragment];
-        let args = [
-            self.lit_f32(theta_g),
-            self.lit_f32(theta_tl),
-            self.lit_f32(theta_tp),
-            Literal::scalar(tau),
-            Literal::scalar(h),
-            Literal::scalar(lambda),
-        ];
-        let result = dc.0.execute(&args)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec()?)
+        let mut out = theta_tl.to_vec();
+        self.delay_comp_hlo_inplace(fragment, theta_g, &mut out, theta_tp, tau, h, lambda)?;
+        Ok(out)
     }
 
-    /// Nesterov outer step via the Pallas/HLO artifact (per fragment).
-    pub fn outer_step_hlo(
+    /// Nesterov outer step via the Pallas/HLO artifact (per fragment),
+    /// writing the updated state into caller-provided (typically pooled)
+    /// buffers.
+    pub fn outer_step_hlo_into(
         &self,
         fragment: usize,
         theta_g: &[f32],
@@ -221,7 +247,9 @@ impl Engine {
         momentum_buf: &[f32],
         lr: f32,
         momentum: f32,
-    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        theta_out: &mut [f32],
+        momentum_out: &mut [f32],
+    ) -> anyhow::Result<()> {
         let (_, os) = &self.frag_ops[&fragment];
         let args = [
             self.lit_f32(theta_g),
@@ -232,6 +260,24 @@ impl Engine {
         ];
         let result = os.0.execute(&args)?[0][0].to_literal_sync()?;
         let (t, m) = result.to_tuple2()?;
-        Ok((t.to_vec()?, m.to_vec()?))
+        t.copy_raw_to(theta_out)?;
+        m.copy_raw_to(momentum_out)?;
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper around [`Engine::outer_step_hlo_into`].
+    pub fn outer_step_hlo(
+        &self,
+        fragment: usize,
+        theta_g: &[f32],
+        delta: &[f32],
+        momentum_buf: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let mut t = vec![0.0f32; theta_g.len()];
+        let mut m = vec![0.0f32; momentum_buf.len()];
+        self.outer_step_hlo_into(fragment, theta_g, delta, momentum_buf, lr, momentum, &mut t, &mut m)?;
+        Ok((t, m))
     }
 }

@@ -3,9 +3,13 @@
 //! hands control to the configured [`SyncStrategy`] after every step, and
 //! accounts virtual wall-clock through the WAN simulator.
 //!
-//! Worker steps run on parallel OS threads (the XLA CPU client supports
-//! concurrent executions); communication never runs Python — the entire hot
-//! loop is rust + compiled HLO.
+//! Worker steps run on a *persistent* worker thread pool (the XLA CPU
+//! client supports concurrent executions) instead of spawning fresh OS
+//! threads every round; the same pool serves CoCoDC's per-worker
+//! delay-compensation fan-out and parallel validation batches.
+//! Communication never runs Python — the entire hot loop is rust +
+//! compiled HLO, and the sync path recycles all fragment-sized buffers
+//! through a [`BufferPool`] (zero steady-state allocations).
 
 use std::path::Path;
 use std::time::Instant;
@@ -22,6 +26,9 @@ use crate::metrics::Curve;
 use crate::network::WanSimulator;
 use crate::runtime::{Engine, TrainState};
 use crate::simclock::VirtualClock;
+use crate::util::pool::BufferPool;
+use crate::util::threadpool::{ScopedTask, WorkerPool};
+use crate::util::vecops;
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
@@ -56,6 +63,11 @@ pub struct Trainer<'e> {
     streams: Vec<BatchStream>,
     val_batches: Vec<Batch>,
     stats: SyncStats,
+    /// Recycled fragment-sized buffers for the sync hot path.
+    bufs: BufferPool,
+    /// Persistent worker threads (None when `cfg.parallel_workers` is off
+    /// or the host/run has nothing to parallelize).
+    threads: Option<WorkerPool>,
     pub verbose: bool,
 }
 
@@ -92,6 +104,17 @@ impl<'e> Trainer<'e> {
         );
         let val_batches = val_stream.take_batches(cfg.eval_batches);
         let stats = SyncStats::new(frags.k());
+        let threads = if cfg.parallel_workers {
+            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let want = cfg.workers.max(cfg.eval_batches).min(hw).min(32);
+            if want > 1 {
+                Some(WorkerPool::new(want))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         Ok(Trainer {
             engine,
             cfg,
@@ -104,57 +127,89 @@ impl<'e> Trainer<'e> {
             streams,
             val_batches,
             stats,
+            bufs: BufferPool::new(),
+            threads,
             verbose: false,
         })
     }
 
     /// Validation loss of the current consensus (mean of worker params).
+    /// Eval batches fan out on the persistent pool; losses are summed in
+    /// batch order, so the result is identical to the serial path.
     pub fn validation_loss(&self) -> anyhow::Result<f64> {
+        let engine = self.engine;
         let n = self.workers[0].params.len();
         let mut mean = vec![0.0f32; n];
-        for w in &self.workers {
-            for (a, &x) in mean.iter_mut().zip(&w.params) {
-                *a += x;
+        {
+            let rows: Vec<&[f32]> =
+                self.workers.iter().map(|w| w.params.as_slice()).collect();
+            vecops::mean_of(&mut mean, &rows);
+        }
+        let mut losses: Vec<Option<anyhow::Result<f32>>> =
+            self.val_batches.iter().map(|_| None).collect();
+        match &self.threads {
+            Some(tp) if self.val_batches.len() > 1 => {
+                let mean_ref: &[f32] = &mean;
+                let tasks: Vec<ScopedTask<'_>> = self
+                    .val_batches
+                    .iter()
+                    .zip(losses.iter_mut())
+                    .map(|(b, slot)| {
+                        Box::new(move || {
+                            *slot = Some(engine.eval_loss(mean_ref, &b.tokens, &b.targets));
+                        }) as ScopedTask<'_>
+                    })
+                    .collect();
+                tp.scoped(tasks);
+            }
+            _ => {
+                for (b, slot) in self.val_batches.iter().zip(losses.iter_mut()) {
+                    *slot = Some(engine.eval_loss(&mean, &b.tokens, &b.targets));
+                }
             }
         }
-        let inv = 1.0 / self.workers.len() as f32;
-        for a in mean.iter_mut() {
-            *a *= inv;
-        }
         let mut total = 0.0f64;
-        for b in &self.val_batches {
-            total += self.engine.eval_loss(&mean, &b.tokens, &b.targets)? as f64;
+        for l in losses {
+            total += l.expect("eval ran for every batch")? as f64;
         }
         Ok(total / self.val_batches.len() as f64)
     }
 
-    /// Execute one lockstep round of local steps on all workers.
+    /// Execute one lockstep round of local steps on all workers, reusing
+    /// the persistent worker pool (no per-step thread spawn).
     fn step_all(&mut self) -> anyhow::Result<f32> {
         let engine = self.engine;
+        let m = self.workers.len();
         let batches: Vec<Batch> =
             self.streams.iter_mut().map(|s| s.next_batch()).collect();
-        let losses: Vec<anyhow::Result<f32>> = if self.cfg.parallel_workers && self.workers.len() > 1 {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
+        let mut losses: Vec<Option<anyhow::Result<f32>>> =
+            (0..m).map(|_| None).collect();
+        match &self.threads {
+            Some(tp) if m > 1 => {
+                let tasks: Vec<ScopedTask<'_>> = self
                     .workers
                     .iter_mut()
                     .zip(&batches)
-                    .map(|(w, b)| {
-                        scope.spawn(move || engine.train_step(w, &b.tokens, &b.targets))
+                    .zip(losses.iter_mut())
+                    .map(|((w, b), slot)| {
+                        Box::new(move || {
+                            *slot = Some(engine.train_step(w, &b.tokens, &b.targets));
+                        }) as ScopedTask<'_>
                     })
                     .collect();
-                handles.into_iter().map(|h| h.join().expect("worker thread")).collect()
-            })
-        } else {
-            self.workers
-                .iter_mut()
-                .zip(&batches)
-                .map(|(w, b)| engine.train_step(w, &b.tokens, &b.targets))
-                .collect()
-        };
+                tp.scoped(tasks);
+            }
+            _ => {
+                for ((w, b), slot) in
+                    self.workers.iter_mut().zip(&batches).zip(losses.iter_mut())
+                {
+                    *slot = Some(engine.train_step(w, &b.tokens, &b.targets));
+                }
+            }
+        }
         let mut mean = 0.0f32;
         for l in losses {
-            mean += l? / self.workers.len() as f32;
+            mean += l.expect("every worker stepped")? / m as f32;
         }
         Ok(mean)
     }
@@ -186,6 +241,8 @@ impl<'e> Trainer<'e> {
                 cfg: &self.cfg,
                 frags: &self.frags,
                 stats: &mut self.stats,
+                pool: &mut self.bufs,
+                threads: self.threads.as_ref(),
             };
             self.strategy.post_step(step, &mut ctx)?;
             if step % self.cfg.eval_every == 0 || step == self.cfg.total_steps {

@@ -3,9 +3,16 @@
 //! Warmup + timed iterations with mean / p50 / p95 and a black_box to stop
 //! the optimizer from deleting the measured work. Used by every target in
 //! rust/benches/ (all `harness = false`).
+//!
+//! [`HotpathReport`] additionally persists kernel measurements to
+//! `BENCH_hotpath.json` next to Cargo.toml so the hot-path perf trajectory
+//! is machine-readable across PRs (see DESIGN.md §Hot path for the schema).
 
 use std::hint::black_box as bb;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::{num, obj, s, Json};
 
 pub use std::hint::black_box;
 
@@ -70,6 +77,90 @@ pub fn bench_with_result<T, F: FnMut() -> T>(
     })
 }
 
+/// Accumulates hot-path kernel measurements and merges them into
+/// `BENCH_hotpath.json` (schema `cocodc-bench-hotpath-v1`):
+///
+/// ```json
+/// { "schema": "cocodc-bench-hotpath-v1",
+///   "entries": [ { "op": "pseudo_mean_fused", "n": 65536,
+///                  "ns_per_elem": 0.21, "gb_per_s": 93.4,
+///                  "mean_ns": 13762.0, "iters": 18031 },
+///                { "op": "pseudo_mean_speedup", "n": 65536,
+///                  "speedup": 2.6 } ] }
+/// ```
+///
+/// Entries are keyed by `(op, n)`: re-running a bench replaces its own rows
+/// and leaves rows written by other benches intact, so `bench_vecops` and
+/// `bench_delay_comp` share one file.
+#[derive(Debug, Default)]
+pub struct HotpathReport {
+    entries: Vec<(String, usize, Json)>,
+}
+
+impl HotpathReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one kernel measurement. `bytes_per_iter` is the total memory
+    /// traffic (reads + writes) of one iteration, used for GB/s.
+    pub fn push(&mut self, op: &str, n: usize, bytes_per_iter: f64, r: &BenchResult) {
+        let mean_s = r.mean.as_secs_f64();
+        let row = obj(vec![
+            ("op", s(op)),
+            ("n", num(n as f64)),
+            ("ns_per_elem", num(mean_s * 1e9 / n.max(1) as f64)),
+            ("gb_per_s", num(bytes_per_iter / mean_s / 1e9)),
+            ("mean_ns", num(mean_s * 1e9)),
+            ("iters", num(r.iters as f64)),
+        ]);
+        self.entries.push((op.to_string(), n, row));
+    }
+
+    /// Record a derived ratio (e.g. fused-vs-seed-scalar speedup).
+    pub fn push_speedup(&mut self, op: &str, n: usize, speedup: f64) {
+        let row = obj(vec![("op", s(op)), ("n", num(n as f64)), ("speedup", num(speedup))]);
+        self.entries.push((op.to_string(), n, row));
+    }
+
+    /// `<crate root>/BENCH_hotpath.json`.
+    pub fn default_path() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json")
+    }
+
+    /// Merge this report into `path`, replacing rows with matching (op, n).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        let mut rows: Vec<Json> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(old) = Json::parse(&text) {
+                if let Some(Json::Arr(entries)) = old.get("entries") {
+                    for e in entries {
+                        let replaced = match (e.get("op"), e.get("n")) {
+                            (Some(Json::Str(op)), Some(Json::Num(n))) => self
+                                .entries
+                                .iter()
+                                .any(|(o, nn, _)| o == op && *nn == *n as usize),
+                            // Rows we can't key by (op, n) aren't ours to
+                            // replace — keep them.
+                            _ => false,
+                        };
+                        if !replaced {
+                            rows.push(e.clone());
+                        }
+                    }
+                }
+            }
+        }
+        rows.extend(self.entries.iter().map(|(_, _, row)| row.clone()));
+        let doc = obj(vec![
+            ("schema", s("cocodc-bench-hotpath-v1")),
+            ("entries", Json::Arr(rows)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +172,37 @@ mod tests {
         });
         assert!(r.iters >= 5);
         assert!(r.min <= r.p50 && r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn hotpath_report_merges_by_op_and_n() {
+        let path = std::env::temp_dir().join("cocodc_bench_hotpath_test.json");
+        std::fs::remove_file(&path).ok();
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_nanos(1000),
+            p50: Duration::from_nanos(1000),
+            p95: Duration::from_nanos(1000),
+            min: Duration::from_nanos(1000),
+        };
+        let mut a = HotpathReport::new();
+        a.push("op_a", 64, 64.0 * 4.0, &r);
+        a.push_speedup("op_a_speedup", 64, 2.5);
+        a.write(&path).unwrap();
+        // Second report: replaces op_a@64, keeps the speedup row.
+        let mut b = HotpathReport::new();
+        b.push("op_a", 64, 64.0 * 4.0, &r);
+        b.push("op_b", 128, 128.0 * 4.0, &r);
+        b.write(&path).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let entries = doc.field("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 3, "{entries:?}");
+        let ops: Vec<&str> = entries
+            .iter()
+            .map(|e| e.field("op").unwrap().as_str().unwrap())
+            .collect();
+        assert!(ops.contains(&"op_a") && ops.contains(&"op_b") && ops.contains(&"op_a_speedup"));
+        std::fs::remove_file(&path).ok();
     }
 }

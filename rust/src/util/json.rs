@@ -378,7 +378,7 @@ mod tests {
         assert_eq!(v.field("c").unwrap().as_str().unwrap(), "x");
         let arr = v.field("a").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 3);
-        assert_eq!(arr[2].field("b").unwrap().as_bool().unwrap(), false);
+        assert!(!arr[2].field("b").unwrap().as_bool().unwrap());
     }
 
     #[test]

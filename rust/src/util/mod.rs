@@ -1,13 +1,18 @@
 //! Small shared utilities, all dependency-free (this build is offline):
-//! a deterministic splittable RNG, dense vector helpers, a minimal JSON
-//! parser/serializer, a CLI flag parser, a micro-benchmark harness and a
-//! property-testing driver.
+//! a deterministic splittable RNG, dense vector kernels (fused/unrolled),
+//! a fragment-buffer recycling pool, a persistent worker thread pool, a
+//! minimal JSON parser/serializer, a CLI flag parser, a micro-benchmark
+//! harness and a property-testing driver.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod threadpool;
 pub mod vecops;
 
+pub use pool::{BufferPool, PoolStats};
 pub use rng::Rng;
+pub use threadpool::{ScopedTask, WorkerPool};

@@ -1,0 +1,159 @@
+//! Fragment-sized `Vec<f32>` recycling for the sync hot path.
+//!
+//! Before this pool, every sync initiation heap-allocated M per-worker
+//! snapshots plus the averaged pseudo-gradient, and every completion
+//! allocated fragment copies of θ_g — per fragment, per sync, forever. The
+//! pool turns those into one-time allocations: buffers are checked out with
+//! [`BufferPool::take`], fully overwritten by the caller, and handed back
+//! with [`BufferPool::put`] when the sync completes. In steady state a full
+//! initiate/complete cycle performs **zero** heap allocations
+//! (tests/alloc_steady_state.rs asserts this with a counting global
+//! allocator; tests/hotpath.rs asserts it via [`PoolStats`]).
+//!
+//! Buffers are bucketed by exact length — fragment sizes are few and fixed
+//! per run, so buckets stay small and lookups are a cheap BTreeMap probe.
+
+use std::collections::BTreeMap;
+
+/// Counters describing pool behavior since construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers created fresh because no recycled one was available.
+    pub fresh: usize,
+    /// Takes served from the free lists.
+    pub reused: usize,
+    /// Buffers handed back via [`BufferPool::put`].
+    pub returned: usize,
+    /// Buffers currently checked out.
+    pub outstanding: usize,
+}
+
+/// Recycling pool for fragment-sized f32 buffers (and the outer
+/// `Vec<Vec<f32>>` snapshot shells).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    buckets: BTreeMap<usize, Vec<Vec<f32>>>,
+    shells: Vec<Vec<Vec<f32>>>,
+    stats: PoolStats,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a buffer of exactly `n` elements.
+    ///
+    /// Contents are unspecified — recycled buffers keep their stale values;
+    /// callers must fully overwrite before reading (every hot-path use
+    /// writes via `copy_from_slice` or a fused kernel).
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        self.stats.outstanding += 1;
+        if let Some(buf) = self.buckets.get_mut(&n).and_then(|b| b.pop()) {
+            self.stats.reused += 1;
+            debug_assert_eq!(buf.len(), n);
+            return buf;
+        }
+        self.stats.fresh += 1;
+        vec![0.0; n]
+    }
+
+    /// Return a buffer for reuse. Buffers that never allocated (capacity 0)
+    /// are dropped.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        self.stats.returned += 1;
+        self.stats.outstanding = self.stats.outstanding.saturating_sub(1);
+        if buf.capacity() == 0 {
+            return;
+        }
+        self.buckets.entry(buf.len()).or_default().push(buf);
+    }
+
+    /// Check out an empty outer vector for a per-worker snapshot set; its
+    /// capacity is retained across syncs.
+    pub fn take_shell(&mut self) -> Vec<Vec<f32>> {
+        self.shells.pop().unwrap_or_default()
+    }
+
+    /// Return a snapshot set: inner buffers go back to their buckets, the
+    /// shell keeps its capacity for the next initiation.
+    pub fn put_shell(&mut self, mut shell: Vec<Vec<f32>>) {
+        for buf in shell.drain(..) {
+            self.put(buf);
+        }
+        self.shells.push(shell);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Buffers currently parked in the free lists.
+    pub fn idle(&self) -> usize {
+        self.buckets.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_take_reuses_the_buffer() {
+        let mut pool = BufferPool::new();
+        let mut a = pool.take(16);
+        assert_eq!(a.len(), 16);
+        a[0] = 7.0;
+        let ptr = a.as_ptr();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take(16);
+        assert_eq!(b.as_ptr(), ptr, "same backing buffer must come back");
+        let s = pool.stats();
+        assert_eq!((s.fresh, s.reused, s.returned, s.outstanding), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_sizes_use_distinct_buckets() {
+        let mut pool = BufferPool::new();
+        let a = pool.take(8);
+        let b = pool.take(4);
+        pool.put(a);
+        pool.put(b);
+        assert_eq!(pool.take(4).len(), 4);
+        assert_eq!(pool.take(8).len(), 8);
+        assert_eq!(pool.stats().fresh, 2);
+        assert_eq!(pool.stats().reused, 2);
+    }
+
+    #[test]
+    fn fresh_buffers_are_zeroed_reused_are_not_required_to_be() {
+        let mut pool = BufferPool::new();
+        let a = pool.take(4);
+        assert!(a.iter().all(|&x| x == 0.0));
+        pool.put(a);
+    }
+
+    #[test]
+    fn shells_recycle_inner_buffers() {
+        let mut pool = BufferPool::new();
+        let mut shell = pool.take_shell();
+        shell.push(pool.take(10));
+        shell.push(pool.take(10));
+        pool.put_shell(shell);
+        assert_eq!(pool.idle(), 2);
+        assert_eq!(pool.stats().outstanding, 0);
+        // Shell comes back with retained capacity.
+        let shell2 = pool.take_shell();
+        assert!(shell2.capacity() >= 2);
+        assert!(shell2.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_dropped() {
+        let mut pool = BufferPool::new();
+        pool.put(Vec::new());
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.stats().returned, 1);
+    }
+}

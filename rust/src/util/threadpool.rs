@@ -1,0 +1,256 @@
+//! Persistent worker thread pool for the trainer's fan-out points.
+//!
+//! The seed `Trainer::step_all` spawned fresh OS threads via
+//! `std::thread::scope` on *every* lockstep round — thousands of
+//! spawn/join cycles per run. This pool spawns its threads once and reuses
+//! them for local train steps, CoCoDC's per-worker delay-compensation
+//! fan-out and parallel validation batches.
+//!
+//! [`WorkerPool::scoped`] gives `thread::scope` semantics on pooled
+//! threads: tasks may borrow from the caller's stack because the call
+//! blocks until every submitted task has finished (a guard decrements the
+//! completion count even on panic, and the first panic payload is re-thrown
+//! on the caller thread). While waiting, the caller helps drain the queue,
+//! so a pool of N threads actually applies N+1 workers and a task running
+//! on the caller can never deadlock the scope.
+//!
+//! Do not call [`WorkerPool::scoped`] from *inside* a pool task: nested
+//! scopes on the same pool can exhaust the threads and (with an empty
+//! queue) wait on tasks that can no longer be scheduled. The trainer only
+//! fans out from the coordinator thread.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A borrowed task submitted to [`WorkerPool::scoped`].
+pub type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+}
+
+struct ScopeState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Fixed-size pool of persistent worker threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` persistent workers (at least one).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("cocodc-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Pool sized to the host: one thread per available core, capped.
+    pub fn with_default_size(cap: usize) -> WorkerPool {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::new(hw.min(cap.max(1)))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every task to completion, blocking the caller until all are done
+    /// (the caller participates in draining the queue). Panics inside tasks
+    /// are re-thrown here after the scope has fully quiesced.
+    pub fn scoped<'scope>(&self, tasks: Vec<ScopedTask<'scope>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let state = Arc::new(ScopeState {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            for task in tasks {
+                // SAFETY: `scoped` does not return until `remaining` hits
+                // zero, and `run_one` decrements it for every task — on the
+                // success path and on panic alike. No task (or borrow it
+                // captures) can therefore outlive this call, which is
+                // exactly the guarantee the 'scope lifetime needs; the
+                // transmute only erases that lifetime so the task can sit
+                // in the 'static queue.
+                let task: Job = unsafe {
+                    std::mem::transmute::<ScopedTask<'scope>, ScopedTask<'static>>(task)
+                };
+                let st = Arc::clone(&state);
+                q.jobs.push_back(Box::new(move || run_one(task, &st)));
+            }
+            self.shared.available.notify_all();
+        }
+        // Help drain the queue while waiting.
+        loop {
+            let job = {
+                let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+                q.jobs.pop_front()
+            };
+            match job {
+                Some(job) => job(),
+                None => break,
+            }
+        }
+        let mut remaining = state.remaining.lock().expect("scope state poisoned");
+        while *remaining > 0 {
+            remaining = state.done.wait(remaining).expect("scope state poisoned");
+        }
+        drop(remaining);
+        if let Some(payload) = state.panic.lock().expect("scope state poisoned").take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+fn run_one(task: Job, st: &ScopeState) {
+    let result = catch_unwind(AssertUnwindSafe(task));
+    if let Err(payload) = result {
+        let mut slot = st.panic.lock().expect("scope state poisoned");
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    let mut remaining = st.remaining.lock().expect("scope state poisoned");
+    *remaining -= 1;
+    if *remaining == 0 {
+        st.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).expect("pool queue poisoned");
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn tasks_borrow_and_fill_disjoint_slots() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0usize; 64];
+        let tasks: Vec<ScopedTask<'_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| Box::new(move || *slot = i * i) as ScopedTask<'_>)
+            .collect();
+        pool.scoped(tasks);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn pool_threads_are_reused_across_scopes() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let tasks: Vec<ScopedTask<'_>> = (0..8)
+                .map(|_| {
+                    let c = &counter;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.scoped(tasks);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 400);
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn single_thread_pool_still_completes_scopes() {
+        let pool = WorkerPool::new(1);
+        let mut xs = [0i64; 16];
+        let tasks: Vec<ScopedTask<'_>> = xs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, x)| Box::new(move || *x = i as i64 + 1) as ScopedTask<'_>)
+            .collect();
+        pool.scoped(tasks);
+        assert_eq!(xs.iter().sum::<i64>(), (1..=16).sum::<i64>());
+    }
+
+    #[test]
+    fn empty_scope_is_a_no_op() {
+        let pool = WorkerPool::new(2);
+        pool.scoped(Vec::new());
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(vec![Box::new(|| panic!("task exploded")) as ScopedTask<'_>]);
+        }));
+        assert!(result.is_err());
+        // The pool must still be usable after a panicked scope.
+        let done = AtomicUsize::new(0);
+        pool.scoped(vec![Box::new(|| {
+            done.fetch_add(1, Ordering::Relaxed);
+        }) as ScopedTask<'_>]);
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+}

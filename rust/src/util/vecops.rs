@@ -1,15 +1,46 @@
-//! Dense f32 vector kernels used by the coordinator hot paths (pseudo-
-//! gradient computation, averaging, outer optimization, delay compensation).
+//! Dense f32 vector kernels for the coordinator hot paths (pseudo-gradient
+//! averaging, outer optimization, delay compensation, α-blending).
 //!
-//! These are written as straight slice loops: LLVM auto-vectorizes them, and
-//! the delay-comp/outer-step loops have HLO-artifact twins (Pallas kernels
-//! dispatched via PJRT) that `bench_delay_comp` compares against.
+//! Everything here is written as 8-lane unrolled slice loops over
+//! `chunks_exact` with a scalar remainder — the shape LLVM reliably turns
+//! into plain SIMD without bounds checks — plus *fused* kernels that do in
+//! one memory pass what the seed implementation did in several:
+//!
+//! * [`fused_pseudo_mean`] — sub + accumulate + scale over all worker rows
+//!   (replaces the per-worker loops behind `allreduce::mean_pseudo_gradients*`),
+//! * [`fused_delay_comp`] / [`fused_delay_comp_into`] — Alg. 1 (Eqs. 4/7/8),
+//! * [`fused_outer_step`] — the Nesterov outer update (Eq. 2),
+//! * [`fused_alpha_blend`] — Streaming DiLoCo's mixing step (Eq. 3).
+//!
+//! Numerical contract: every fused/unrolled kernel performs the *same
+//! per-element operation sequence* as its scalar reference in
+//! [`reference`], so results agree bit-for-bit (tests/hotpath.rs asserts
+//! ≤ 1 ulp, and in practice exact equality). The one deliberate
+//! reassociation versus the seed code is pseudo-gradient averaging:
+//! `(Σ_m θ_m)·M⁻¹ − θ_g` instead of `Σ_m (θ_m − θ_g)·M⁻¹` — one pass per
+//! worker row instead of re-reading `θ_g` M times; the difference is a few
+//! ulps per element (documented tolerance, see DESIGN.md §Hot path).
+//!
+//! [`l2_norm`] stays a sequential f64 accumulation on purpose: it feeds the
+//! CoCoDC change-rate ranking (Eq. 11), where any reassociation could flip
+//! `total_cmp` ties and change fragment selection across builds.
+
+/// Unroll width of the fused kernels (8 f32 lanes = one AVX2 vector).
+pub const LANES: usize = 8;
 
 /// out[i] = a[i] - b[i]
 pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
     debug_assert_eq!(out.len(), a.len());
     debug_assert_eq!(out.len(), b.len());
-    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((o, x), y) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            o[l] = x[l] - y[l];
+        }
+    }
+    for ((o, x), y) in oc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder()) {
         *o = x - y;
     }
 }
@@ -17,40 +48,428 @@ pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
 /// acc[i] += x[i]
 pub fn add_assign(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
-    for (a, &b) in acc.iter_mut().zip(x) {
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut xc) {
+        for l in 0..LANES {
+            a[l] += b[l];
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
         *a += b;
     }
 }
 
 /// acc[i] *= s
 pub fn scale(acc: &mut [f32], s: f32) {
-    for a in acc.iter_mut() {
-        *a *= s;
+    let mut ac = acc.chunks_exact_mut(LANES);
+    for chunk in &mut ac {
+        for v in chunk.iter_mut() {
+            *v *= s;
+        }
+    }
+    for v in ac.into_remainder() {
+        *v *= s;
+    }
+}
+
+/// acc[i] = (acc[i] + x[i]) * s — fused tail pass of a mean reduction.
+fn add_scale(acc: &mut [f32], x: &[f32], s: f32) {
+    debug_assert_eq!(acc.len(), x.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut xc) {
+        for l in 0..LANES {
+            a[l] = (a[l] + b[l]) * s;
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a = (*a + b) * s;
+    }
+}
+
+/// out[i] = row[i] * s - g[i] — single-row tail of [`fused_pseudo_mean`].
+fn scale_sub_from(out: &mut [f32], row: &[f32], s: f32, g: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    debug_assert_eq!(out.len(), g.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut rc = row.chunks_exact(LANES);
+    let mut gc = g.chunks_exact(LANES);
+    for ((o, r), gg) in (&mut oc).zip(&mut rc).zip(&mut gc) {
+        for l in 0..LANES {
+            o[l] = r[l] * s - gg[l];
+        }
+    }
+    for ((o, r), gg) in oc.into_remainder().iter_mut().zip(rc.remainder()).zip(gc.remainder()) {
+        *o = r * s - gg;
+    }
+}
+
+/// acc[i] = (acc[i] + x[i]) * s - g[i] — fused final pass of
+/// [`fused_pseudo_mean`]: last accumulate, mean scale and θ_g subtraction
+/// in one sweep.
+fn add_scale_sub(acc: &mut [f32], x: &[f32], s: f32, g: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), g.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    let mut gc = g.chunks_exact(LANES);
+    for ((a, b), gg) in (&mut ac).zip(&mut xc).zip(&mut gc) {
+        for l in 0..LANES {
+            a[l] = (a[l] + b[l]) * s - gg[l];
+        }
+    }
+    for ((a, b), gg) in ac.into_remainder().iter_mut().zip(xc.remainder()).zip(gc.remainder()) {
+        *a = (*a + b) * s - gg;
     }
 }
 
 /// Euclidean norm (f64 accumulation for stability on large fragments).
+/// Deliberately sequential — see the module docs.
 pub fn l2_norm(x: &[f32]) -> f64 {
     x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
 }
 
-/// Mean of `rows` (equal-length slices) written into `out`.
+/// Mean of `rows` (equal-length slices) written into `out`. The scale pass
+/// is fused into the last accumulation.
 pub fn mean_of(out: &mut [f32], rows: &[&[f32]]) {
     assert!(!rows.is_empty());
-    let inv = 1.0 / rows.len() as f32;
+    let m = rows.len();
+    if m == 1 {
+        out.copy_from_slice(rows[0]);
+        return;
+    }
+    let inv = 1.0 / m as f32;
     out.copy_from_slice(rows[0]);
-    for r in &rows[1..] {
+    for r in &rows[1..m - 1] {
         add_assign(out, r);
     }
-    scale(out, inv);
+    add_scale(out, rows[m - 1], inv);
 }
 
-/// max_i |a[i] - b[i]|
+/// Averaged pseudo-gradient Δθ^g = mean_m(rows[m]) − θ_g (paper Eq. 1) in
+/// exactly `rows.len()` memory passes: copy, accumulate, and a final fused
+/// accumulate+scale+subtract.
+///
+/// `rows` are the per-worker fragment snapshots (anything slice-like, so
+/// both pooled `Vec<f32>` buffers and borrowed slices work without an
+/// intermediate ref vector).
+pub fn fused_pseudo_mean<R: AsRef<[f32]>>(out: &mut [f32], rows: &[R], theta_g: &[f32]) {
+    fused_pseudo_mean_iter(out, rows.iter().map(|r| r.as_ref()), theta_g);
+}
+
+/// Iterator-driven core of [`fused_pseudo_mean`] (lets callers stream
+/// worker slices without collecting references).
+pub fn fused_pseudo_mean_iter<'r, I>(out: &mut [f32], rows: I, theta_g: &[f32])
+where
+    I: ExactSizeIterator<Item = &'r [f32]>,
+{
+    let m = rows.len();
+    assert!(m > 0, "pseudo-gradient mean needs at least one worker row");
+    debug_assert_eq!(out.len(), theta_g.len());
+    let inv = 1.0 / m as f32;
+    for (k, row) in rows.enumerate() {
+        debug_assert_eq!(row.len(), out.len());
+        if k == 0 {
+            if m == 1 {
+                scale_sub_from(out, row, inv, theta_g);
+                return;
+            }
+            out.copy_from_slice(row);
+        } else if k + 1 == m {
+            add_scale_sub(out, row, inv, theta_g);
+        } else {
+            add_assign(out, row);
+        }
+    }
+}
+
+/// CoCoDC delay compensation (Alg. 1, Eqs. 4/7/8) applied in place on a
+/// worker's live fragment slice:
+///
+///   g      = (θ_local − θ_tp) / τ
+///   g_corr = g + λ · g² · (θ_g − θ_tp) / H
+///   θ_local ← θ_g + g_corr · τ
+pub fn fused_delay_comp(
+    theta_local: &mut [f32],
+    theta_g: &[f32],
+    theta_tp: &[f32],
+    tau: f32,
+    h: f32,
+    lambda: f32,
+) {
+    debug_assert_eq!(theta_local.len(), theta_g.len());
+    debug_assert_eq!(theta_local.len(), theta_tp.len());
+    debug_assert!(tau > 0.0 && h > 0.0);
+    let inv_tau = 1.0 / tau;
+    let inv_h = 1.0 / h;
+    let mut lc = theta_local.chunks_exact_mut(LANES);
+    let mut gc = theta_g.chunks_exact(LANES);
+    let mut pc = theta_tp.chunks_exact(LANES);
+    for ((lo, g), p) in (&mut lc).zip(&mut gc).zip(&mut pc) {
+        for i in 0..LANES {
+            let gr = (lo[i] - p[i]) * inv_tau;
+            let gcorr = gr + lambda * gr * gr * (g[i] - p[i]) * inv_h;
+            lo[i] = g[i] + gcorr * tau;
+        }
+    }
+    for ((lo, g), p) in lc.into_remainder().iter_mut().zip(gc.remainder()).zip(pc.remainder()) {
+        let gr = (*lo - p) * inv_tau;
+        let gcorr = gr + lambda * gr * gr * (g - p) * inv_h;
+        *lo = g + gcorr * tau;
+    }
+}
+
+/// Out-of-place variant of [`fused_delay_comp`] (θ_tl read separately).
+pub fn fused_delay_comp_into(
+    out: &mut [f32],
+    theta_g: &[f32],
+    theta_tl: &[f32],
+    theta_tp: &[f32],
+    tau: f32,
+    h: f32,
+    lambda: f32,
+) {
+    debug_assert_eq!(out.len(), theta_g.len());
+    debug_assert_eq!(out.len(), theta_tl.len());
+    debug_assert_eq!(out.len(), theta_tp.len());
+    debug_assert!(tau > 0.0 && h > 0.0);
+    let inv_tau = 1.0 / tau;
+    let inv_h = 1.0 / h;
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut tc = theta_tl.chunks_exact(LANES);
+    let mut gc = theta_g.chunks_exact(LANES);
+    let mut pc = theta_tp.chunks_exact(LANES);
+    for (((o, tl), g), p) in (&mut oc).zip(&mut tc).zip(&mut gc).zip(&mut pc) {
+        for i in 0..LANES {
+            let gr = (tl[i] - p[i]) * inv_tau;
+            let gcorr = gr + lambda * gr * gr * (g[i] - p[i]) * inv_h;
+            o[i] = g[i] + gcorr * tau;
+        }
+    }
+    for (((o, tl), g), p) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(tc.remainder())
+        .zip(gc.remainder())
+        .zip(pc.remainder())
+    {
+        let gr = (tl - p) * inv_tau;
+        let gcorr = gr + lambda * gr * gr * (g - p) * inv_h;
+        *o = g + gcorr * tau;
+    }
+}
+
+/// Nesterov outer step (paper Eq. 2) on one fragment, unrolled:
+///
+///   grad = −delta;  mom ← μ·mom + grad;  θ_g ← θ_g − lr·(grad + μ·mom)
+pub fn fused_outer_step(
+    theta_g: &mut [f32],
+    delta: &[f32],
+    momentum_buf: &mut [f32],
+    lr: f32,
+    momentum: f32,
+) {
+    debug_assert_eq!(theta_g.len(), delta.len());
+    debug_assert_eq!(theta_g.len(), momentum_buf.len());
+    let mut tc = theta_g.chunks_exact_mut(LANES);
+    let mut dc = delta.chunks_exact(LANES);
+    let mut mc = momentum_buf.chunks_exact_mut(LANES);
+    for ((t, d), mm) in (&mut tc).zip(&mut dc).zip(&mut mc) {
+        for i in 0..LANES {
+            let grad = -d[i];
+            let m2 = momentum * mm[i] + grad;
+            mm[i] = m2;
+            t[i] -= lr * (grad + momentum * m2);
+        }
+    }
+    for ((t, d), mm) in tc
+        .into_remainder()
+        .iter_mut()
+        .zip(dc.remainder())
+        .zip(mc.into_remainder().iter_mut())
+    {
+        let grad = -*d;
+        let m2 = momentum * *mm + grad;
+        *mm = m2;
+        *t -= lr * (grad + momentum * m2);
+    }
+}
+
+/// Streaming DiLoCo's mixing step (Eq. 3), fused:
+/// x[i] ← (1−α)·x[i] + α·g[i]
+pub fn fused_alpha_blend(x: &mut [f32], g: &[f32], alpha: f32) {
+    debug_assert_eq!(x.len(), g.len());
+    let om = 1.0 - alpha;
+    let mut xc = x.chunks_exact_mut(LANES);
+    let mut gc = g.chunks_exact(LANES);
+    for (xs, gs) in (&mut xc).zip(&mut gc) {
+        for i in 0..LANES {
+            xs[i] = om * xs[i] + alpha * gs[i];
+        }
+    }
+    for (xv, gv) in xc.into_remainder().iter_mut().zip(gc.remainder()) {
+        *xv = om * *xv + alpha * gv;
+    }
+}
+
+/// max_i |a[i] − b[i]|.
+///
+/// NaN-propagating: if any pairwise difference is NaN (poisoned input, or
+/// ∞−∞), the result is NaN. The previous `fold(0.0, f32::max)` silently
+/// dropped NaNs, so a poisoned fragment compared equal to a clean one.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| (x - y).abs())
-        .fold(0.0f32, f32::max)
+    debug_assert_eq!(a.len(), b.len());
+    let mut m = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = (x - y).abs();
+        if d.is_nan() {
+            return f32::NAN;
+        }
+        if d > m {
+            m = d;
+        }
+    }
+    m
+}
+
+/// Naive scalar references for the fused/unrolled kernels above.
+///
+/// These are the *seed implementations kept verbatim* (plus same-order
+/// scalar twins for the new fused ops). They are the ground truth for the
+/// 1-ulp property tests in tests/hotpath.rs and the before/after baselines
+/// in benches/bench_vecops.rs — do not "optimize" them.
+pub mod reference {
+    /// Seed `vecops::sub`.
+    pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x - y;
+        }
+    }
+
+    /// Seed `vecops::add_assign`.
+    pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+        for (a, &b) in acc.iter_mut().zip(x) {
+            *a += b;
+        }
+    }
+
+    /// Seed `vecops::scale`.
+    pub fn scale(acc: &mut [f32], s: f32) {
+        for a in acc.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Seed `vecops::mean_of`.
+    pub fn mean_of(out: &mut [f32], rows: &[&[f32]]) {
+        assert!(!rows.is_empty());
+        let inv = 1.0 / rows.len() as f32;
+        out.copy_from_slice(rows[0]);
+        for r in &rows[1..] {
+            add_assign(out, r);
+        }
+        scale(out, inv);
+    }
+
+    /// Scalar twin of `fused_pseudo_mean` (same association order).
+    pub fn pseudo_mean(out: &mut [f32], rows: &[&[f32]], theta_g: &[f32]) {
+        let m = rows.len();
+        assert!(m > 0);
+        let inv = 1.0 / m as f32;
+        if m == 1 {
+            for i in 0..out.len() {
+                out[i] = rows[0][i] * inv - theta_g[i];
+            }
+            return;
+        }
+        out.copy_from_slice(rows[0]);
+        for r in &rows[1..m - 1] {
+            for (o, &v) in out.iter_mut().zip(*r) {
+                *o += v;
+            }
+        }
+        for i in 0..out.len() {
+            out[i] = (out[i] + rows[m - 1][i]) * inv - theta_g[i];
+        }
+    }
+
+    /// Seed accumulation order of `allreduce::mean_pseudo_gradients*`:
+    /// Σ_m (θ_m − θ_g), then scale. Kept as the bench baseline and to
+    /// document the reassociation tolerance.
+    pub fn mean_pseudo_gradients_seed(acc: &mut [f32], rows: &[&[f32]], theta_g: &[f32]) {
+        assert!(!rows.is_empty());
+        acc.fill(0.0);
+        for snap in rows {
+            for i in 0..acc.len() {
+                acc[i] += snap[i] - theta_g[i];
+            }
+        }
+        let inv = 1.0 / rows.len() as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+    }
+
+    /// Seed `delay_comp::delay_compensate` (out-of-place scalar loop).
+    pub fn delay_compensate(
+        out: &mut [f32],
+        theta_g: &[f32],
+        theta_tl: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) {
+        let inv_tau = 1.0 / tau;
+        let inv_h = 1.0 / h;
+        for i in 0..out.len() {
+            let g = (theta_tl[i] - theta_tp[i]) * inv_tau;
+            let g_corr = g + lambda * g * g * (theta_g[i] - theta_tp[i]) * inv_h;
+            out[i] = theta_g[i] + g_corr * tau;
+        }
+    }
+
+    /// Seed `delay_comp::delay_compensate_inplace`.
+    pub fn delay_compensate_inplace(
+        theta_local: &mut [f32],
+        theta_g: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) {
+        let inv_tau = 1.0 / tau;
+        let inv_h = 1.0 / h;
+        for i in 0..theta_local.len() {
+            let g = (theta_local[i] - theta_tp[i]) * inv_tau;
+            let g_corr = g + lambda * g * g * (theta_g[i] - theta_tp[i]) * inv_h;
+            theta_local[i] = theta_g[i] + g_corr * tau;
+        }
+    }
+
+    /// Seed `outer_opt::outer_step`.
+    pub fn outer_step(
+        theta_g: &mut [f32],
+        delta: &[f32],
+        momentum_buf: &mut [f32],
+        lr: f32,
+        momentum: f32,
+    ) {
+        for i in 0..theta_g.len() {
+            let grad = -delta[i];
+            let m2 = momentum * momentum_buf[i] + grad;
+            momentum_buf[i] = m2;
+            theta_g[i] -= lr * (grad + momentum * m2);
+        }
+    }
+
+    /// Seed α-blend loop from `streaming.rs::complete_due`.
+    pub fn alpha_blend(x: &mut [f32], g: &[f32], alpha: f32) {
+        for (xv, &gv) in x.iter_mut().zip(g) {
+            *xv = (1.0 - alpha) * *xv + alpha * gv;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +506,68 @@ mod tests {
     #[test]
     fn max_abs_diff_works() {
         assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+
+    #[test]
+    fn max_abs_diff_propagates_nan() {
+        assert!(max_abs_diff(&[1.0, f32::NAN], &[1.0, 0.0]).is_nan());
+        // ∞ − ∞ poisons the comparison too.
+        assert!(max_abs_diff(&[f32::INFINITY], &[f32::INFINITY]).is_nan());
+        assert!(!max_abs_diff(&[1.0, 2.0], &[1.0, 2.0]).is_nan());
+    }
+
+    #[test]
+    fn fused_pseudo_mean_basic() {
+        // Two workers around theta_g: mean([2,4],[4,8])/1 - [1,1] = [2,5].
+        let r1 = vec![2.0f32, 4.0];
+        let r2 = vec![4.0f32, 8.0];
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0.0; 2];
+        fused_pseudo_mean(&mut out, &[r1, r2], &g);
+        assert_eq!(out, vec![2.0, 5.0]);
+        // Single row reduces to row - theta_g.
+        let mut out1 = vec![0.0; 2];
+        fused_pseudo_mean(&mut out1, &[vec![3.0f32, 3.0]], &g);
+        assert_eq!(out1, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn fused_alpha_blend_endpoints() {
+        let g = vec![10.0f32; 9];
+        let mut x = vec![2.0f32; 9];
+        fused_alpha_blend(&mut x, &g, 0.0);
+        assert_eq!(x, vec![2.0; 9]);
+        fused_alpha_blend(&mut x, &g, 1.0);
+        assert_eq!(x, vec![10.0; 9]);
+    }
+
+    #[test]
+    fn fused_outer_step_matches_reference() {
+        let delta = [0.3f32; 19];
+        let mut t1 = [1.0f32; 19];
+        let mut m1 = [0.1f32; 19];
+        let mut t2 = t1;
+        let mut m2 = m1;
+        fused_outer_step(&mut t1, &delta, &mut m1, 0.7, 0.9);
+        reference::outer_step(&mut t2, &delta, &mut m2, 0.7, 0.9);
+        assert_eq!(t1, t2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn fused_delay_comp_matches_reference_across_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 31, 64] {
+            let g: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+            let tl: Vec<f32> = (0..n).map(|i| 1.0 + i as f32 * 0.5).collect();
+            let tp: Vec<f32> = (0..n).map(|i| 0.5 - i as f32 * 0.125).collect();
+            let mut got = tl.clone();
+            fused_delay_comp(&mut got, &g, &tp, 5.0, 100.0, 0.5);
+            let mut want = tl.clone();
+            reference::delay_compensate_inplace(&mut want, &g, &tp, 5.0, 100.0, 0.5);
+            assert_eq!(got, want, "n={n}");
+            let mut out = vec![0.0; n];
+            fused_delay_comp_into(&mut out, &g, &tl, &tp, 5.0, 100.0, 0.5);
+            assert_eq!(out, want, "into n={n}");
+        }
     }
 }

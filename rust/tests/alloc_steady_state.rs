@@ -1,0 +1,138 @@
+//! Proof of the zero-allocation sync hot path: a counting global allocator
+//! wraps `System`, the streaming and CoCoDC strategies run through warm-up,
+//! and the test then asserts that further initiate/complete cycles perform
+//! **zero** heap allocations.
+//!
+//! This file intentionally contains a single test (plus the allocator):
+//! libtest runs tests in one binary concurrently, and any neighbour test
+//! allocating during the measured window would poison the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::coordinator::strategy::SyncCtx;
+use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
+use cocodc::network::WanSimulator;
+use cocodc::runtime::TrainState;
+use cocodc::simclock::VirtualClock;
+use cocodc::util::pool::BufferPool;
+use cocodc::util::Rng;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+struct Sim {
+    cfg: RunConfig,
+    frags: FragmentTable,
+    workers: Vec<TrainState>,
+    global: GlobalState,
+    net: WanSimulator,
+    clock: VirtualClock,
+    stats: SyncStats,
+    pool: BufferPool,
+    rng: Rng,
+}
+
+impl Sim {
+    fn new(method: MethodKind, k: usize, h: u32, tau: u32, workers: usize) -> Sim {
+        let frags = FragmentTable::from_sizes(&vec![256; k]);
+        let mut cfg = RunConfig::paper("sim", method);
+        cfg.workers = workers;
+        cfg.h_steps = h;
+        cfg.tau = TauMode::Fixed { tau };
+        let init = vec![0.0f32; frags.total_params()];
+        Sim {
+            workers: (0..workers).map(|_| TrainState::new(init.clone())).collect(),
+            global: GlobalState::new(&init),
+            net: WanSimulator::new(cfg.network, workers, 3),
+            clock: VirtualClock::new(),
+            stats: SyncStats::new(k),
+            pool: BufferPool::new(),
+            rng: Rng::new(41, 0),
+            cfg,
+            frags,
+        }
+    }
+
+    fn drift(&mut self, step: u32) {
+        for w in self.workers.iter_mut() {
+            for x in w.params.iter_mut() {
+                *x += 0.01 * self.rng.next_gaussian() as f32;
+            }
+            w.step = step;
+        }
+        self.clock.advance_compute(self.cfg.network.step_compute_s);
+    }
+
+    fn ctx(&mut self) -> SyncCtx<'_> {
+        SyncCtx {
+            workers: &mut self.workers,
+            global: &mut self.global,
+            net: &mut self.net,
+            clock: &mut self.clock,
+            engine: None,
+            cfg: &self.cfg,
+            frags: &self.frags,
+            stats: &mut self.stats,
+            pool: &mut self.pool,
+            threads: None,
+        }
+    }
+}
+
+#[test]
+fn sync_hot_path_is_allocation_free_in_steady_state() {
+    for method in [MethodKind::StreamingDiloco, MethodKind::Cocodc] {
+        let mut sim = Sim::new(method, 4, 20, 3, 4);
+        let mut strategy = make_strategy(&sim.cfg, &sim.frags);
+        // Warm-up: enough H windows that every buffer bucket, pending-queue
+        // slot and snapshot shell has reached its steady-state capacity.
+        for step in 1..=100 {
+            sim.drift(step);
+            strategy.post_step(step, &mut sim.ctx()).unwrap();
+        }
+        let completed_before = sim.stats.syncs_completed;
+
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        for step in 101..=400 {
+            sim.drift(step);
+            strategy.post_step(step, &mut sim.ctx()).unwrap();
+        }
+        let after = ALLOCATIONS.load(Ordering::SeqCst);
+
+        let completed = sim.stats.syncs_completed - completed_before;
+        assert!(completed > 10, "{method:?}: only {completed} syncs measured");
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: {} heap allocations across {completed} steady-state syncs",
+            after - before
+        );
+    }
+}

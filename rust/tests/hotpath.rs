@@ -1,0 +1,318 @@
+//! Hot-path correctness: property tests pinning every fused/unrolled
+//! vecops kernel to its naive scalar reference within 1 ulp (covering all
+//! remainder lanes 0..=64 and large random vectors), plus BufferPool
+//! steady-state behavior under the real streaming/CoCoDC strategies.
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::coordinator::strategy::SyncCtx;
+use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
+use cocodc::network::WanSimulator;
+use cocodc::runtime::TrainState;
+use cocodc::simclock::VirtualClock;
+use cocodc::util::pool::BufferPool;
+use cocodc::util::proptest::forall;
+use cocodc::util::vecops::{self, reference};
+use cocodc::util::Rng;
+
+// ---------------------------------------------------------------------
+// 1-ulp comparison
+// ---------------------------------------------------------------------
+
+/// Map a float to an integer whose ordering matches the float ordering, so
+/// adjacent representable values differ by exactly 1.
+fn ulp_key(x: f32) -> i64 {
+    let b = x.to_bits() as i64;
+    if b & 0x8000_0000 != 0 {
+        0x8000_0000 - b
+    } else {
+        b
+    }
+}
+
+fn ulp_check(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        if g.is_nan() && w.is_nan() {
+            continue;
+        }
+        if g.is_nan() != w.is_nan() {
+            return Err(format!("{what}: elem {i}: {g} vs {w} (NaN mismatch)"));
+        }
+        let d = (ulp_key(g) - ulp_key(w)).abs();
+        if d > 1 {
+            return Err(format!("{what}: elem {i}: {g} vs {w} differ by {d} ulp"));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// kernel property tests
+// ---------------------------------------------------------------------
+
+fn check_all_kernels(rng: &mut Rng, n: usize) -> Result<(), String> {
+    let a = rng.f32_vec(n, 1.0);
+    let b = rng.f32_vec(n, 1.0);
+    let (tau, h, lambda) = (
+        1.0 + rng.next_f64() as f32 * 9.0,
+        10.0 + rng.next_f64() as f32 * 90.0,
+        rng.next_f64() as f32,
+    );
+
+    // sub
+    let mut got = vec![0.0; n];
+    let mut want = vec![0.0; n];
+    vecops::sub(&mut got, &a, &b);
+    reference::sub(&mut want, &a, &b);
+    ulp_check(&got, &want, "sub")?;
+
+    // add_assign
+    let mut got = a.clone();
+    let mut want = a.clone();
+    vecops::add_assign(&mut got, &b);
+    reference::add_assign(&mut want, &b);
+    ulp_check(&got, &want, "add_assign")?;
+
+    // scale
+    let s = rng.next_f64() as f32 * 2.0 - 1.0;
+    let mut got = a.clone();
+    let mut want = a.clone();
+    vecops::scale(&mut got, s);
+    reference::scale(&mut want, s);
+    ulp_check(&got, &want, "scale")?;
+
+    // mean_of / fused_pseudo_mean over 1..=5 rows
+    let m = rng.usize_in(1, 5);
+    let rows: Vec<Vec<f32>> = (0..m).map(|_| rng.f32_vec(n, 1.0)).collect();
+    let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut got = vec![0.0; n];
+    let mut want = vec![0.0; n];
+    vecops::mean_of(&mut got, &row_refs);
+    reference::mean_of(&mut want, &row_refs);
+    ulp_check(&got, &want, "mean_of")?;
+
+    let theta_g = rng.f32_vec(n, 1.0);
+    let mut got = vec![0.0; n];
+    let mut want = vec![0.0; n];
+    vecops::fused_pseudo_mean(&mut got, &row_refs, &theta_g);
+    reference::pseudo_mean(&mut want, &row_refs, &theta_g);
+    ulp_check(&got, &want, "fused_pseudo_mean")?;
+
+    // The documented reassociation vs the seed accumulation order stays
+    // tiny (a few ulps per element; bound loosely here).
+    let mut seed_order = vec![0.0; n];
+    reference::mean_pseudo_gradients_seed(&mut seed_order, &row_refs, &theta_g);
+    for (i, (&x, &y)) in got.iter().zip(&seed_order).enumerate() {
+        if (x - y).abs() > 1e-5 * (1.0 + y.abs()) {
+            return Err(format!("pseudo_mean vs seed order: elem {i}: {x} vs {y}"));
+        }
+    }
+
+    // delay compensation, in place and out of place
+    let tl = rng.f32_vec(n, 1.0);
+    let tp = rng.f32_vec(n, 1.0);
+    let mut got = tl.clone();
+    let mut want = tl.clone();
+    vecops::fused_delay_comp(&mut got, &theta_g, &tp, tau, h, lambda);
+    reference::delay_compensate_inplace(&mut want, &theta_g, &tp, tau, h, lambda);
+    ulp_check(&got, &want, "fused_delay_comp")?;
+
+    let mut got = vec![0.0; n];
+    let mut want = vec![0.0; n];
+    vecops::fused_delay_comp_into(&mut got, &theta_g, &tl, &tp, tau, h, lambda);
+    reference::delay_compensate(&mut want, &theta_g, &tl, &tp, tau, h, lambda);
+    ulp_check(&got, &want, "fused_delay_comp_into")?;
+
+    // outer step (theta and momentum both checked)
+    let delta = rng.f32_vec(n, 0.1);
+    let mut tg_got = theta_g.clone();
+    let mut mom_got = rng.f32_vec(n, 0.1);
+    let mut tg_want = tg_got.clone();
+    let mut mom_want = mom_got.clone();
+    vecops::fused_outer_step(&mut tg_got, &delta, &mut mom_got, 0.7, 0.9);
+    reference::outer_step(&mut tg_want, &delta, &mut mom_want, 0.7, 0.9);
+    ulp_check(&tg_got, &tg_want, "fused_outer_step theta")?;
+    ulp_check(&mom_got, &mom_want, "fused_outer_step momentum")?;
+
+    // alpha blend
+    let alpha = rng.next_f64() as f32;
+    let mut got = tl.clone();
+    let mut want = tl.clone();
+    vecops::fused_alpha_blend(&mut got, &theta_g, alpha);
+    reference::alpha_blend(&mut want, &theta_g, alpha);
+    ulp_check(&got, &want, "fused_alpha_blend")?;
+
+    // max_abs_diff agrees with a scalar maximum on clean data
+    let mad = vecops::max_abs_diff(&a, &b);
+    let want_mad = a
+        .iter()
+        .zip(&b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    if mad != want_mad {
+        return Err(format!("max_abs_diff: {mad} vs {want_mad}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn kernels_match_reference_on_every_remainder_length() {
+    // Exhaustive over 0..=64: every possible 8-lane remainder, repeatedly.
+    let mut rng = Rng::new(0xFADE, 0);
+    for n in 0..=64usize {
+        check_all_kernels(&mut rng, n).unwrap_or_else(|e| panic!("n={n}: {e}"));
+    }
+}
+
+#[test]
+fn prop_kernels_match_reference_on_large_vectors() {
+    forall(24, |rng| {
+        let n = rng.usize_in(65, 8192);
+        check_all_kernels(rng, n)
+    });
+}
+
+#[test]
+fn max_abs_diff_nan_contract() {
+    // Documented behavior: a poisoned fragment must not compare clean.
+    assert!(vecops::max_abs_diff(&[0.0, f32::NAN, 1.0], &[0.0, 0.0, 1.0]).is_nan());
+    assert!(vecops::max_abs_diff(&[f32::INFINITY], &[f32::INFINITY]).is_nan());
+    // Clean data keeps the plain maximum (including infinities).
+    assert_eq!(
+        vecops::max_abs_diff(&[f32::INFINITY, 1.0], &[0.0, 1.0]),
+        f32::INFINITY
+    );
+}
+
+// ---------------------------------------------------------------------
+// BufferPool steady state under the real strategies
+// ---------------------------------------------------------------------
+
+struct Sim {
+    cfg: RunConfig,
+    frags: FragmentTable,
+    workers: Vec<TrainState>,
+    global: GlobalState,
+    net: WanSimulator,
+    clock: VirtualClock,
+    stats: SyncStats,
+    pool: BufferPool,
+    rng: Rng,
+}
+
+impl Sim {
+    fn new(method: MethodKind, k: usize, h: u32, tau: u32, workers: usize) -> Sim {
+        let frags = FragmentTable::from_sizes(&vec![64; k]);
+        let mut cfg = RunConfig::paper("sim", method);
+        cfg.workers = workers;
+        cfg.h_steps = h;
+        cfg.tau = TauMode::Fixed { tau };
+        let init = vec![0.0f32; frags.total_params()];
+        Sim {
+            workers: (0..workers).map(|_| TrainState::new(init.clone())).collect(),
+            global: GlobalState::new(&init),
+            net: WanSimulator::new(cfg.network, workers, 3),
+            clock: VirtualClock::new(),
+            stats: SyncStats::new(k),
+            pool: BufferPool::new(),
+            rng: Rng::new(23, 0),
+            cfg,
+            frags,
+        }
+    }
+
+    fn drift(&mut self, step: u32) {
+        for w in self.workers.iter_mut() {
+            for x in w.params.iter_mut() {
+                *x += 0.01 * self.rng.next_gaussian() as f32;
+            }
+            w.step = step;
+        }
+        self.clock.advance_compute(self.cfg.network.step_compute_s);
+    }
+
+    fn ctx(&mut self) -> SyncCtx<'_> {
+        SyncCtx {
+            workers: &mut self.workers,
+            global: &mut self.global,
+            net: &mut self.net,
+            clock: &mut self.clock,
+            engine: None,
+            cfg: &self.cfg,
+            frags: &self.frags,
+            stats: &mut self.stats,
+            pool: &mut self.pool,
+            threads: None,
+        }
+    }
+}
+
+#[test]
+fn pool_reaches_zero_fresh_allocations_after_warmup() {
+    for method in [MethodKind::StreamingDiloco, MethodKind::Cocodc] {
+        let mut sim = Sim::new(method, 4, 20, 3, 3);
+        let mut strategy = make_strategy(&sim.cfg, &sim.frags);
+        // Warm-up: several full H windows of initiate/complete cycles.
+        for step in 1..=80 {
+            sim.drift(step);
+            strategy.post_step(step, &mut sim.ctx()).unwrap();
+        }
+        let warm = sim.pool.stats();
+        assert!(warm.fresh > 0, "{method:?}: pool never used");
+        assert!(sim.stats.syncs_completed > 0, "{method:?}: no syncs during warm-up");
+        // Steady state: buffers must recycle, never allocate.
+        for step in 81..=320 {
+            sim.drift(step);
+            strategy.post_step(step, &mut sim.ctx()).unwrap();
+        }
+        let after = sim.pool.stats();
+        assert_eq!(
+            after.fresh, warm.fresh,
+            "{method:?}: fresh allocations grew after warm-up ({warm:?} -> {after:?})"
+        );
+        assert!(
+            after.reused > warm.reused,
+            "{method:?}: steady state did not reuse buffers"
+        );
+    }
+}
+
+#[test]
+fn pool_outstanding_matches_in_flight_syncs() {
+    // Every in-flight CoCoDC sync holds M snapshots + 1 delta buffer; when
+    // nothing is pending, nothing is outstanding.
+    let mut sim = Sim::new(MethodKind::Cocodc, 3, 12, 2, 4);
+    let mut strategy = make_strategy(&sim.cfg, &sim.frags);
+    for step in 1..=200 {
+        sim.drift(step);
+        strategy.post_step(step, &mut sim.ctx()).unwrap();
+        let expect = strategy.pending() * (sim.cfg.workers + 1);
+        assert_eq!(
+            sim.pool.stats().outstanding,
+            expect,
+            "step {step}: {} pendings",
+            strategy.pending()
+        );
+    }
+}
+
+#[test]
+fn strategies_behave_identically_with_shared_pool() {
+    // Two sims with identical drift, one pool fresh per run: the pooled
+    // path must not change the training math (bit-identical worker state).
+    let run = |steps: u32| {
+        let mut sim = Sim::new(MethodKind::Cocodc, 4, 16, 3, 3);
+        let mut strategy = make_strategy(&sim.cfg, &sim.frags);
+        for step in 1..=steps {
+            sim.drift(step);
+            strategy.post_step(step, &mut sim.ctx()).unwrap();
+        }
+        (sim.workers[0].params.clone(), sim.global.theta_g.clone())
+    };
+    let (w1, g1) = run(120);
+    let (w2, g2) = run(120);
+    assert_eq!(w1, w2);
+    assert_eq!(g1, g2);
+}

@@ -19,6 +19,7 @@ use cocodc::coordinator::{
 use cocodc::network::WanSimulator;
 use cocodc::runtime::{Engine, TrainState};
 use cocodc::simclock::VirtualClock;
+use cocodc::util::pool::BufferPool;
 use cocodc::util::proptest::forall;
 use cocodc::util::Rng;
 use cocodc::Trainer;
@@ -35,6 +36,7 @@ struct Sim {
     net: WanSimulator,
     clock: VirtualClock,
     stats: SyncStats,
+    pool: BufferPool,
     rng: Rng,
 }
 
@@ -52,6 +54,7 @@ impl Sim {
             net: WanSimulator::new(cfg.network, workers, 3),
             clock: VirtualClock::new(),
             stats: SyncStats::new(k),
+            pool: BufferPool::new(),
             rng: Rng::new(11, 0),
             cfg,
             frags,
@@ -79,6 +82,8 @@ impl Sim {
             cfg: &self.cfg,
             frags: &self.frags,
             stats: &mut self.stats,
+            pool: &mut self.pool,
+            threads: None,
         }
     }
 }

@@ -1,0 +1,134 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate.
+//!
+//! This build environment is fully offline (no crates.io registry), so the
+//! workspace vendors the small subset of `anyhow` the cocodc crate actually
+//! uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros
+//! and the blanket `From<E: std::error::Error + Send + Sync>` conversion
+//! that makes `?` work on io/parse/ffi errors. Swap the path dependency in
+//! `rust/Cargo.toml` for the real crate when a registry is available — no
+//! source changes required.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in subset of `anyhow::Error`: a message plus an optional source
+/// chain, cheap to construct from any std error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what the `anyhow!` macro uses).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Walk the source chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|e| e.as_ref() as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// std::error::Error — that is what keeps the blanket conversion below
+// coherent with the identity `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...", args)` — format a new [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// `bail!("...", args)` — early-return an error from a `Result` function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "...", args)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/cocodc")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+        assert!(err.chain().count() >= 1);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(e.to_string(), "plain 42");
+    }
+
+    #[test]
+    fn debug_includes_cause_chain() {
+        let err = io_fail().unwrap_err();
+        assert!(format!("{err:?}").contains("Caused by"));
+    }
+}

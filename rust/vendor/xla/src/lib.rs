@@ -1,0 +1,313 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links libxla/PJRT via FFI; this container images neither,
+//! so the stub keeps the cocodc runtime layer compiling against the same
+//! API. [`Literal`] is implemented for real (host-side typed buffers —
+//! useful on its own and required so argument marshalling type-checks);
+//! [`PjRtClient::cpu`] returns an error, which makes every execution path
+//! unreachable. The trainer's PJRT-backed tests and benches already skip
+//! when `artifacts/<preset>/meta.json` is absent, so a build against this
+//! stub runs the full pure-simulation tier.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs: displayable and a std error, so `?`
+/// converts it into `anyhow::Error` at call sites.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    fn unavailable() -> Error {
+        Error::new(
+            "PJRT runtime unavailable: this build uses the vendored xla stub \
+             (rust/vendor/xla); link the real xla-rs crate to execute HLO artifacts",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element kind of a [`Literal`] buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemKind {
+    F32,
+    I32,
+}
+
+/// Types storable in a [`Literal`].
+pub trait NativeType: Copy + 'static {
+    const KIND: ElemKind;
+    fn write_le(data: &[Self], out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    const KIND: ElemKind = ElemKind::F32;
+    fn write_le(data: &[Self], out: &mut Vec<u8>) {
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn read_le(bytes: &[u8]) -> Vec<Self> {
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+}
+
+impl NativeType for i32 {
+    const KIND: ElemKind = ElemKind::I32;
+    fn write_le(data: &[Self], out: &mut Vec<u8>) {
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn read_le(bytes: &[u8]) -> Vec<Self> {
+        bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+}
+
+/// A host-side typed tensor (or tuple of tensors), mirroring xla::Literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    kind: ElemKind,
+    bytes: Vec<u8>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        T::write_le(data, &mut bytes);
+        Literal { kind: T::KIND, bytes, dims: vec![data.len() as i64], tuple: None }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut bytes = Vec::with_capacity(4);
+        T::write_le(&[v], &mut bytes);
+        Literal { kind: T::KIND, bytes, dims: vec![], tuple: None }
+    }
+
+    /// Tuple literal (what executables with `return_tuple=True` produce).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { kind: ElemKind::F32, bytes: Vec::new(), dims: vec![], tuple: Some(elems) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements cannot view as {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            kind: self.kind,
+            bytes: self.bytes.clone(),
+            dims: dims.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    fn check_kind<T: NativeType>(&self) -> Result<()> {
+        if self.tuple.is_some() {
+            return Err(Error::new("literal is a tuple, not a dense buffer"));
+        }
+        if self.kind != T::KIND {
+            return Err(Error::new(format!(
+                "element kind mismatch: literal is {:?}",
+                self.kind
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        self.check_kind::<T>()?;
+        Ok(T::read_le(&self.bytes))
+    }
+
+    /// Copy the raw buffer into `dst` (lengths must match) — the
+    /// zero-extra-allocation read-out path.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        self.check_kind::<T>()?;
+        if dst.len() != self.element_count() {
+            return Err(Error::new(format!(
+                "copy_raw_to: literal has {} elements, destination {}",
+                self.element_count(),
+                dst.len()
+            )));
+        }
+        let data = T::read_le(&self.bytes);
+        dst.copy_from_slice(&data);
+        Ok(())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.check_kind::<T>()?;
+        T::read_le(&self.bytes)
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("empty literal has no first element"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| Error::new("literal is not a tuple"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut t = self.to_tuple()?;
+        if t.len() != 1 {
+            return Err(Error::new(format!("expected 1-tuple, got {}", t.len())));
+        }
+        Ok(t.pop().expect("len checked"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        let mut t = self.to_tuple()?;
+        if t.len() != 2 {
+            return Err(Error::new(format!("expected 2-tuple, got {}", t.len())));
+        }
+        let b = t.pop().expect("len checked");
+        let a = t.pop().expect("len checked");
+        Ok((a, b))
+    }
+}
+
+/// Parsed HLO module text. The stub cannot parse HLO; construction fails.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(Error::new(format!(
+            "cannot parse HLO text {} with the vendored xla stub",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Computation wrapper (constructible; compilation requires a client).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. The stub has no runtime: `cpu()` always errors.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable handle (unreachable without a client).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer handle (unreachable without a client).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32_and_i32() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0]);
+        assert_eq!(l.element_count(), 3);
+        let t = Literal::vec1(&[1i32, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn copy_raw_to_and_first_element() {
+        let l = Literal::vec1(&[5.0f32, 6.0]);
+        let mut dst = [0.0f32; 2];
+        l.copy_raw_to(&mut dst).unwrap();
+        assert_eq!(dst, [5.0, 6.0]);
+        let s: f32 = Literal::scalar(9.5f32).get_first_element().unwrap();
+        assert_eq!(s, 9.5);
+    }
+
+    #[test]
+    fn tuples_unpack() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2.0f32])]);
+        let (a, b) = t.to_tuple2().unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(b.to_vec::<f32>().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
