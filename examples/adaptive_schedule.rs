@@ -14,7 +14,7 @@ use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::coordinator::strategy::SyncCtx;
 use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
 use cocodc::network::WanSimulator;
-use cocodc::runtime::TrainState;
+use cocodc::runtime::{Backend, HostBackend, WorkerHandle};
 use cocodc::simclock::VirtualClock;
 use cocodc::util::pool::BufferPool;
 use cocodc::util::Rng;
@@ -30,10 +30,12 @@ fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usi
     cfg.network.latency_s = 0.1237;
     cfg.network.bandwidth_bps = 125e6;
 
-    let init = vec![0.0f32; frags.total_params()];
-    let mut workers: Vec<TrainState> =
-        (0..cfg.workers).map(|_| TrainState::new(init.clone())).collect();
-    let mut global = GlobalState::new(&init);
+    // Model-free host backend: resident flat vectors we drift by hand.
+    let backend = HostBackend::new(frags.clone());
+    let mut workers: Vec<WorkerHandle> = (0..cfg.workers)
+        .map(|_| backend.create_worker())
+        .collect::<anyhow::Result<_>>()?;
+    let mut global = GlobalState::new(&backend.init_params()?);
     let mut net = WanSimulator::new(cfg.network, cfg.workers, 7);
     let mut clock = VirtualClock::new();
     let mut stats = SyncStats::new(frags.k());
@@ -45,13 +47,14 @@ fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usi
     let rates = [0.01f32, 0.01, 0.10, 0.01];
     for step in 1..=steps {
         for w in workers.iter_mut() {
+            let st = backend.state_mut(w);
             for p in 0..frags.k() {
                 let f = frags.get(p);
-                for x in w.params[f.range()].iter_mut() {
+                for x in st.params[f.range()].iter_mut() {
                     *x += rates[p] * (1.0 + 0.1 * rng.next_gaussian() as f32);
                 }
             }
-            w.step = step;
+            st.step = step;
         }
         clock.advance_compute(cfg.network.step_compute_s);
         let mut ctx = SyncCtx {
@@ -59,7 +62,7 @@ fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usi
             global: &mut global,
             net: &mut net,
             clock: &mut clock,
-            engine: None,
+            backend: &backend,
             cfg: &cfg,
             frags: &frags,
             stats: &mut stats,

@@ -5,16 +5,18 @@
 //! Pallas flash-attention/AdamW kernels) composing on a real workload.
 //!
 //! ```text
-//! make artifacts   # builds artifacts/e2e (~3.8M params)
 //! cargo run --release --example crossregion_train -- [--steps 300] \
-//!     [--preset e2e] [--methods cocodc,streaming,diloco] [--out results/e2e.csv]
+//!     [--preset e2e] [--methods cocodc,streaming,diloco] \
+//!     [--backend auto|pjrt|native] [--out results/e2e.csv]
 //! ```
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! Runs against `artifacts/e2e` when built (`make artifacts`), or the
+//! pure-rust native backend otherwise. Recorded in EXPERIMENTS.md
+//! §End-to-end.
 
 use cocodc::config::{MethodKind, RunConfig};
 use cocodc::metrics::{table1, write_curves_csv};
-use cocodc::runtime::Engine;
+use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
 use cocodc::Trainer;
 
@@ -29,15 +31,16 @@ fn main() -> anyhow::Result<()> {
         .split(',')
         .map(MethodKind::parse)
         .collect::<anyhow::Result<_>>()?;
+    let kind = BackendKind::parse(args.get("backend").unwrap_or("auto"))?;
     args.finish()?;
 
-    let engine = Engine::load(std::path::Path::new("artifacts"), &preset)?;
-    let meta = engine.meta();
+    let backend = load_backend(kind, std::path::Path::new("artifacts"), &preset, false)?;
+    let model = backend.model();
     println!(
-        "e2e: {}-param LLaMA-style transformer ({} layers, d={}, vocab={}), \
+        "e2e: {}-param LLaMA-style transformer ({} layers, d={}, vocab={}) on {}, \
          M=4 simulated DCs, non-IID synthetic-C4",
-        meta.param_count, meta.model.n_layers, meta.model.d_model,
-        meta.model.vocab_size
+        backend.param_count(), model.n_layers, model.d_model,
+        model.vocab_size, backend.platform()
     );
 
     let mut curves = Vec::new();
@@ -48,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         cfg.h_steps = 50;
         cfg.eval_every = 20;
         cfg.eval_batches = 6;
-        let mut trainer = Trainer::new(&engine, cfg)?;
+        let mut trainer = Trainer::new(backend.as_ref(), cfg)?;
         trainer.verbose = true;
         let out = trainer.run()?;
         println!(

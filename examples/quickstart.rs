@@ -1,24 +1,26 @@
 //! Quickstart: the smallest end-to-end CoCoDC run.
 //!
-//! Loads the `tiny` artifact preset (2-layer transformer), simulates M=2
-//! datacenters for 60 local steps with H=10 and τ=2, and prints the
-//! validation curve. Run with:
+//! Loads the `tiny` preset (2-layer transformer), simulates M=2 datacenters
+//! for 60 local steps with H=10 and τ=2, and prints the validation curve.
+//! Runs on the PJRT artifacts when present, or the pure-rust native backend
+//! otherwise — no artifacts needed:
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
-use cocodc::runtime::Engine;
+use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::Trainer;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load(std::path::Path::new("artifacts"), "tiny")?;
+    let backend =
+        load_backend(BackendKind::Auto, std::path::Path::new("artifacts"), "tiny", false)?;
     println!(
         "loaded tiny preset on {} ({} params, K={} fragments)",
-        engine.platform(),
-        engine.meta().param_count,
-        engine.meta().n_fragments
+        backend.platform(),
+        backend.param_count(),
+        backend.fragments().k()
     );
 
     let mut cfg = RunConfig::paper("tiny", MethodKind::Cocodc);
@@ -29,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = 10;
     cfg.eval_batches = 4;
 
-    let mut trainer = Trainer::new(&engine, cfg)?;
+    let mut trainer = Trainer::new(backend.as_ref(), cfg)?;
     trainer.verbose = true;
     let out = trainer.run()?;
 

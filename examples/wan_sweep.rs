@@ -7,9 +7,11 @@
 //! ```text
 //! cargo run --release --example wan_sweep -- [--preset tiny] [--steps 120]
 //! ```
+//!
+//! Artifact-free: runs the native backend when no artifacts are present.
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
-use cocodc::runtime::Engine;
+use cocodc::runtime::{load_backend, BackendKind};
 use cocodc::util::cli::Args;
 use cocodc::Trainer;
 
@@ -17,8 +19,9 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[])?;
     let preset = args.get("preset").unwrap_or("tiny").to_string();
     let steps: u32 = args.get_or("steps", 120)?;
+    let kind = BackendKind::parse(args.get("backend").unwrap_or("auto"))?;
     args.finish()?;
-    let engine = Engine::load(std::path::Path::new("artifacts"), &preset)?;
+    let backend = load_backend(kind, std::path::Path::new("artifacts"), &preset, false)?;
 
     println!(
         "{:>9} {:>10} | {:>12} {:>12} {:>12} | winner",
@@ -43,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             cfg.network.latency_s = lat_ms / 1e3;
             cfg.network.bandwidth_bps = bw_mbps * 1e6 / 8.0;
             cfg.network.step_compute_s = 0.05;
-            let mut tr = Trainer::new(&engine, cfg)?;
+            let mut tr = Trainer::new(backend.as_ref(), cfg)?;
             let out = tr.run()?;
             walls.push((method.name(), out.wall_s));
         }

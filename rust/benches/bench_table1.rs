@@ -9,7 +9,7 @@ use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::coordinator::strategy::SyncCtx;
 use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
 use cocodc::network::WanSimulator;
-use cocodc::runtime::TrainState;
+use cocodc::runtime::{Backend, HostBackend, PjrtBackend, WorkerHandle};
 use cocodc::simclock::VirtualClock;
 use cocodc::util::bench::black_box;
 use cocodc::util::pool::BufferPool;
@@ -22,7 +22,7 @@ fn main() {
 
     // (a) full runs on the tiny preset: real steps/sec per method.
     if dir.join("tiny").join("meta.json").exists() {
-        let engine = cocodc::runtime::Engine::load(&dir, "tiny").expect("engine");
+        let backend = PjrtBackend::load(&dir, "tiny", false).expect("backend");
         for method in MethodKind::all() {
             let mut cfg = RunConfig::paper("tiny", method);
             cfg.workers = 4;
@@ -31,7 +31,7 @@ fn main() {
             cfg.total_steps = 40;
             cfg.eval_every = 40;
             cfg.eval_batches = 1;
-            let mut tr = Trainer::new(&engine, cfg).unwrap();
+            let mut tr = Trainer::new(&backend, cfg).unwrap();
             let t = Instant::now();
             let out = tr.run().unwrap();
             let dt = t.elapsed();
@@ -57,9 +57,10 @@ fn main() {
         let mut cfg = RunConfig::paper("sim", method);
         cfg.h_steps = 100;
         cfg.tau = TauMode::Fixed { tau: 5 };
-        let init = vec![0.0f32; frags.total_params()];
-        let mut workers: Vec<TrainState> =
-            (0..4).map(|_| TrainState::new(init.clone())).collect();
+        let backend = HostBackend::new(frags.clone());
+        let init = backend.init_params().unwrap();
+        let mut workers: Vec<WorkerHandle> =
+            (0..4).map(|_| backend.create_worker().unwrap()).collect();
         let mut global = GlobalState::new(&init);
         let mut net = WanSimulator::new(cfg.network, 4, 1);
         let mut clock = VirtualClock::new();
@@ -73,7 +74,7 @@ fn main() {
             for w in workers.iter_mut() {
                 // cheap drift so syncs have real data to move
                 let r = rng.next_gaussian() as f32 * 0.01;
-                for x in w.params.iter_mut().step_by(97) {
+                for x in backend.state_mut(w).params.iter_mut().step_by(97) {
                     *x += r;
                 }
             }
@@ -83,7 +84,7 @@ fn main() {
                 global: &mut global,
                 net: &mut net,
                 clock: &mut clock,
-                engine: None,
+                backend: &backend,
                 cfg: &cfg,
                 frags: &frags,
                 stats: &mut stats,

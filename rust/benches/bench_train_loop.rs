@@ -1,0 +1,86 @@
+//! End-to-end training-loop benchmark on the native backend: whole-run
+//! `steps_per_s` plus the sync path's share of wall time
+//! (`sync_overhead_pct`), serial and worker-pool modes — the training-loop
+//! perf trajectory rows of BENCH_hotpath.json.
+//!
+//! The sync overhead is measured against a sync-free baseline (DiLoCo with
+//! its first sync scheduled past the end of the run), so it captures
+//! exactly what the coordinator adds on top of pure local compute.
+//!
+//! ```text
+//! cargo bench --bench bench_train_loop            # default 200 steps
+//! cargo bench --bench bench_train_loop -- --steps 60 --preset tiny  # smoke
+//! ```
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::runtime::NativeBackend;
+use cocodc::util::bench::HotpathReport;
+use cocodc::util::cli::Args;
+use cocodc::Trainer;
+
+fn cfg(preset: &str, method: MethodKind, steps: u32, h: u32, parallel: bool) -> RunConfig {
+    let mut cfg = RunConfig::paper(preset, method);
+    cfg.workers = 4;
+    cfg.h_steps = h;
+    cfg.tau = TauMode::Fixed { tau: 2 };
+    cfg.total_steps = steps;
+    cfg.eval_every = steps; // time the loop, not the evaluation cadence
+    cfg.eval_batches = 2;
+    cfg.parallel_workers = parallel;
+    cfg
+}
+
+fn timed_run(backend: &NativeBackend, cfg: RunConfig) -> (f64, f64) {
+    let mut tr = Trainer::new(backend, cfg).unwrap();
+    let out = tr.run().unwrap();
+    (out.real_s, out.curve.final_loss().unwrap_or(f64::NAN))
+}
+
+fn main() {
+    // Cargo appends `--bench` to every bench target's argv (harness=false
+    // included); accept and ignore it.
+    let args = Args::from_env(&["bench"]).expect("args");
+    let _ = args.switch("bench");
+    let preset = args.get("preset").unwrap_or("tiny").to_string();
+    let steps: u32 = args.get_or("steps", 200).expect("--steps");
+    args.finish().expect("flags");
+
+    println!("== bench_train_loop: native backend, preset '{preset}', {steps} steps ==");
+    let backend = NativeBackend::preset(&preset).expect("native preset");
+    let n = {
+        use cocodc::runtime::Backend;
+        backend.param_count()
+    };
+    let mut report = HotpathReport::new();
+
+    for (mode, parallel) in [("serial", false), ("pool", true)] {
+        // Warm-up run so first-touch costs don't pollute the measurement.
+        let _ = timed_run(&backend, cfg(&preset, MethodKind::Cocodc, steps.min(20), 10, parallel));
+
+        let (t_sync_free, _) =
+            timed_run(&backend, cfg(&preset, MethodKind::Diloco, steps, steps + 1, parallel));
+        let (t_cocodc, loss) =
+            timed_run(&backend, cfg(&preset, MethodKind::Cocodc, steps, 10, parallel));
+
+        let steps_per_s = steps as f64 / t_cocodc;
+        let sync_overhead_pct = ((t_cocodc - t_sync_free) / t_cocodc * 100.0).max(0.0);
+        println!(
+            "train_loop[{mode:>6}]  {steps_per_s:>8.1} steps/s  \
+             sync_overhead {sync_overhead_pct:>5.1}%  (cocodc {t_cocodc:.3}s vs \
+             sync-free {t_sync_free:.3}s, final loss {loss:.3})"
+        );
+        report.push_custom(
+            &format!("train_loop_{mode}"),
+            n,
+            &[
+                ("steps_per_s", steps_per_s),
+                ("sync_overhead_pct", sync_overhead_pct),
+                ("steps", steps as f64),
+            ],
+        );
+    }
+
+    let path = HotpathReport::default_path();
+    report.write(&path).expect("write BENCH_hotpath.json");
+    println!("rows merged into {}", path.display());
+}

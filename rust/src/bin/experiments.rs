@@ -12,7 +12,11 @@
 //! ```
 //!
 //! Flags: --artifacts DIR --outdir DIR --preset NAME --steps N --seed N
-//!        --ppl X --eval-every N
+//!        --ppl X --eval-every N --backend {auto|pjrt|native}
+//!
+//! With `--backend native` (or auto and no artifacts present) every
+//! experiment runs the pure-rust transformer backend — the full evaluation
+//! regenerates offline on any machine.
 //!
 //! All outputs land in `results/` as long-format CSVs plus a printed
 //! summary; EXPERIMENTS.md records the paper-vs-measured comparison.
@@ -21,7 +25,7 @@ use std::path::PathBuf;
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::metrics::{table1, write_curves_csv, Curve};
-use cocodc::runtime::Engine;
+use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
 use cocodc::{TrainOutcome, Trainer};
 
@@ -43,8 +47,8 @@ fn base_cfg(cli: &Cli, method: MethodKind) -> RunConfig {
     cfg
 }
 
-fn run(engine: &Engine, cfg: RunConfig, tag: &str) -> anyhow::Result<TrainOutcome> {
-    let mut tr = Trainer::new(engine, cfg)?;
+fn run(backend: &dyn Backend, cfg: RunConfig, tag: &str) -> anyhow::Result<TrainOutcome> {
+    let mut tr = Trainer::new(backend, cfg)?;
     tr.verbose = true;
     let mut out = tr.run()?;
     out.curve.method = tag.to_string();
@@ -58,12 +62,12 @@ fn run(engine: &Engine, cfg: RunConfig, tag: &str) -> anyhow::Result<TrainOutcom
 }
 
 /// FIG1 + FIG2 + TAB1 share one three-method run.
-fn fig1(cli: &Cli, engine: &Engine) -> anyhow::Result<Vec<Curve>> {
+fn fig1(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<Vec<Curve>> {
     println!("== FIG1/FIG2/TAB1: validation loss & perplexity vs steps ==");
     let mut curves = Vec::new();
     let mut outcomes = Vec::new();
     for method in MethodKind::all() {
-        let out = run(engine, base_cfg(cli, method), method.name())?;
+        let out = run(backend, base_cfg(cli, method), method.name())?;
         curves.push(out.curve.clone());
         outcomes.push(out);
     }
@@ -109,13 +113,13 @@ fn fig1(cli: &Cli, engine: &Engine) -> anyhow::Result<Vec<Curve>> {
 
 /// WALL: wall-clock (WAN-accounted) comparison with τ derived from the
 /// network instead of fixed — DiLoCo pays the blocking sync.
-fn wallclock(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+fn wallclock(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     println!("== WALL: virtual wall-clock to target PPL (tau from WAN) ==");
     let mut curves = Vec::new();
     for method in MethodKind::all() {
         let mut cfg = base_cfg(cli, method);
         cfg.tau = TauMode::Network;
-        let out = run(engine, cfg, method.name())?;
+        let out = run(backend, cfg, method.name())?;
         println!(
             "  {}: wall {:.0}s = compute {:.0}s + stall {:.0}s (stalled applies: {})",
             method.name(), out.wall_s, out.compute_s, out.comm_stall_s,
@@ -128,26 +132,26 @@ fn wallclock(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn ablate_lambda(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+fn ablate_lambda(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     println!("== ABL-lambda: compensation strength ==");
     let mut curves = Vec::new();
     for lam in [0.0f32, 0.25, 0.5, 1.0] {
         let mut cfg = base_cfg(cli, MethodKind::Cocodc);
         cfg.lambda = lam;
-        curves.push(run(engine, cfg, &format!("cocodc_lambda{lam}"))?.curve);
+        curves.push(run(backend, cfg, &format!("cocodc_lambda{lam}"))?.curve);
     }
     write_curves_csv(cli.outdir.join("ablate_lambda.csv"), &curves)?;
     println!("\n{}", table1(&curves, cli.ppl));
     Ok(())
 }
 
-fn ablate_gamma(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+fn ablate_gamma(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     println!("== ABL-gamma: network utilization factor ==");
     let mut curves = Vec::new();
     for gam in [0.2f64, 0.4, 0.8] {
         let mut cfg = base_cfg(cli, MethodKind::Cocodc);
         cfg.gamma = gam;
-        let out = run(engine, cfg, &format!("cocodc_gamma{gam}"))?;
+        let out = run(backend, cfg, &format!("cocodc_gamma{gam}"))?;
         println!(
             "  gamma={gam}: syncs completed {} (bytes {:.1} MB)",
             out.syncs_completed,
@@ -160,14 +164,14 @@ fn ablate_gamma(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn ablate_tau(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+fn ablate_tau(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     println!("== ABL-tau: overlap-depth robustness (streaming vs cocodc) ==");
     let mut curves = Vec::new();
     for tau in [1u32, 5, 15] {
         for method in [MethodKind::StreamingDiloco, MethodKind::Cocodc] {
             let mut cfg = base_cfg(cli, method);
             cfg.tau = TauMode::Fixed { tau };
-            curves.push(run(engine, cfg, &format!("{}_tau{tau}", method.name()))?.curve);
+            curves.push(run(backend, cfg, &format!("{}_tau{tau}", method.name()))?.curve);
         }
     }
     write_curves_csv(cli.outdir.join("ablate_tau.csv"), &curves)?;
@@ -175,13 +179,13 @@ fn ablate_tau(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn ablate_codec(cli: &Cli, engine: &Engine) -> anyhow::Result<()> {
+fn ablate_codec(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     println!("== ABL-codec: pseudo-gradient wire compression ==");
     let mut curves = Vec::new();
     for codec in ["none", "int8", "int4"] {
         let mut cfg = base_cfg(cli, MethodKind::Cocodc);
         cfg.compression = cocodc::compression::Codec::parse(codec)?;
-        let out = run(engine, cfg, &format!("cocodc_{codec}"))?;
+        let out = run(backend, cfg, &format!("cocodc_{codec}"))?;
         println!("  codec={codec}: {:.2} MB on the wire", out.bytes_sent / 1e6);
         curves.push(out.curve);
     }
@@ -231,31 +235,32 @@ fn main() -> anyhow::Result<()> {
         eval_every: args.get_or("eval-every", 25)?,
     };
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let kind = BackendKind::parse(args.get("backend").unwrap_or("auto"))?;
     args.finish()?;
     std::fs::create_dir_all(&cli.outdir)?;
-    let engine = Engine::load(&artifacts, &cli.preset)?;
+    let backend = load_backend(kind, &artifacts, &cli.preset, false)?;
     eprintln!(
-        "engine: preset '{}' on {}, {} params, K={}",
+        "backend: preset '{}' on {}, {} params, K={}",
         cli.preset,
-        engine.platform(),
-        engine.meta().param_count,
-        engine.meta().n_fragments
+        backend.platform(),
+        backend.param_count(),
+        backend.fragments().k()
     );
     match cli.exp.as_str() {
         "fig1" | "fig2" | "table1" => {
-            fig1(&cli, &engine)?;
+            fig1(&cli, backend.as_ref())?;
         }
-        "wallclock" => wallclock(&cli, &engine)?,
-        "ablate-lambda" => ablate_lambda(&cli, &engine)?,
-        "ablate-gamma" => ablate_gamma(&cli, &engine)?,
-        "ablate-tau" => ablate_tau(&cli, &engine)?,
-        "ablate-codec" => ablate_codec(&cli, &engine)?,
+        "wallclock" => wallclock(&cli, backend.as_ref())?,
+        "ablate-lambda" => ablate_lambda(&cli, backend.as_ref())?,
+        "ablate-gamma" => ablate_gamma(&cli, backend.as_ref())?,
+        "ablate-tau" => ablate_tau(&cli, backend.as_ref())?,
+        "ablate-codec" => ablate_codec(&cli, backend.as_ref())?,
         "all" => {
-            fig1(&cli, &engine)?;
-            wallclock(&cli, &engine)?;
-            ablate_lambda(&cli, &engine)?;
-            ablate_gamma(&cli, &engine)?;
-            ablate_tau(&cli, &engine)?;
+            fig1(&cli, backend.as_ref())?;
+            wallclock(&cli, backend.as_ref())?;
+            ablate_lambda(&cli, backend.as_ref())?;
+            ablate_gamma(&cli, backend.as_ref())?;
+            ablate_tau(&cli, backend.as_ref())?;
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }

@@ -25,6 +25,25 @@ fn fnv1a(bytes: &[u8], mut hash: u64) -> u64 {
     hash
 }
 
+/// Pack a u64 into two f32 *bit patterns* (lossless — sections store f32,
+/// but run-context counters/RNG states must round-trip exactly).
+pub fn pack_u64(x: u64) -> [f32; 2] {
+    [f32::from_bits(x as u32), f32::from_bits((x >> 32) as u32)]
+}
+
+pub fn unpack_u64(lo: f32, hi: f32) -> u64 {
+    (lo.to_bits() as u64) | ((hi.to_bits() as u64) << 32)
+}
+
+/// Bit-exact f64 packing (via its u64 representation).
+pub fn pack_f64(x: f64) -> [f32; 2] {
+    pack_u64(x.to_bits())
+}
+
+pub fn unpack_f64(lo: f32, hi: f32) -> f64 {
+    f64::from_bits(unpack_u64(lo, hi))
+}
+
 impl Checkpoint {
     pub fn new(step: u32) -> Self {
         Checkpoint { step, sections: BTreeMap::new() }
@@ -138,6 +157,29 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&p, &bytes).unwrap();
         assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn packing_is_bit_exact() {
+        for x in [0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D, 1 << 63] {
+            let [lo, hi] = pack_u64(x);
+            assert_eq!(unpack_u64(lo, hi), x);
+        }
+        for x in [0.0f64, -1.5, f64::MAX, 1e-300, std::f64::consts::PI] {
+            let [lo, hi] = pack_f64(x);
+            assert_eq!(unpack_f64(lo, hi).to_bits(), x.to_bits());
+        }
+        // Round-trip *through a saved file* too: NaN-pattern f32s must
+        // survive serialization byte-for-byte.
+        let mut c = Checkpoint::new(0);
+        let [lo, hi] = pack_u64(0xFFFF_FFFF_FFFF_FFFF);
+        c.insert("ctx", vec![lo, hi]);
+        let p = tmp("packing");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        let s = back.get("ctx").unwrap();
+        assert_eq!(unpack_u64(s[0], s[1]), u64::MAX);
         std::fs::remove_file(p).ok();
     }
 

@@ -16,11 +16,9 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::fragments::FragmentTable;
-use crate::runtime::Engine;
 use crate::util::threadpool::ScopedTask;
 use crate::util::vecops;
 
-use super::delay_comp::delay_compensate_inplace;
 use super::streaming::{Pending, StreamingDiloco};
 use super::strategy::{SyncCtx, SyncStrategy};
 
@@ -117,8 +115,9 @@ impl Cocodc {
             self.change_rate[p] = vecops::l2_norm(&pend.delta_avg) / i_p;
             self.last_completed[p] = step;
 
-            // Alg. 1 per worker: delay-compensated adoption, straight from
-            // the (disjointly borrowed) global fragment slice.
+            // Alg. 1 per worker: delay-compensated adoption applied on the
+            // backend's resident fragment, straight from the (disjointly
+            // borrowed) global fragment slice.
             let tau = (step - pend.t_init).max(1) as f32;
             let h = ctx.cfg.h_steps as f32;
             let lambda = ctx.cfg.lambda;
@@ -126,7 +125,7 @@ impl Cocodc {
                 .snapshots
                 .as_ref()
                 .expect("CoCoDC pendings always carry snapshots");
-            let engine = if ctx.cfg.use_hlo_fragment_ops { ctx.engine } else { None };
+            let backend = ctx.backend;
             {
                 let new_g: &[f32] = &ctx.global.theta_g[frag.range()];
                 let workers = &mut *ctx.workers;
@@ -139,17 +138,9 @@ impl Cocodc {
                             .zip(snaps.iter())
                             .zip(results.iter_mut())
                             .map(|((w, snap), slot)| {
-                                let range = frag.range();
                                 Box::new(move || {
-                                    *slot = Some(apply_delay_comp(
-                                        engine,
-                                        p,
-                                        new_g,
-                                        &mut w.params[range],
-                                        snap,
-                                        tau,
-                                        h,
-                                        lambda,
+                                    *slot = Some(backend.delay_comp_fragment(
+                                        w, frag, new_g, snap, tau, h, lambda,
                                     ));
                                 }) as ScopedTask<'_>
                             })
@@ -161,16 +152,8 @@ impl Cocodc {
                     }
                     _ => {
                         for (w, snap) in workers.iter_mut().zip(snaps.iter()) {
-                            apply_delay_comp(
-                                engine,
-                                p,
-                                new_g,
-                                &mut w.params[frag.range()],
-                                snap,
-                                tau,
-                                h,
-                                lambda,
-                            )?;
+                            backend
+                                .delay_comp_fragment(w, frag, new_g, snap, tau, h, lambda)?;
                         }
                     }
                 }
@@ -178,31 +161,6 @@ impl Cocodc {
             pend.recycle(ctx.pool);
         }
         Ok(())
-    }
-}
-
-/// One worker's delay-compensated adoption (Alg. 1 line 3): the fused
-/// in-place kernel, or the Pallas/HLO artifact writing straight back into
-/// the live fragment slice.
-#[allow(clippy::too_many_arguments)]
-fn apply_delay_comp(
-    engine: Option<&Engine>,
-    fragment: usize,
-    new_g: &[f32],
-    local: &mut [f32],
-    snap: &[f32],
-    tau: f32,
-    h: f32,
-    lambda: f32,
-) -> anyhow::Result<()> {
-    match engine {
-        Some(engine) => {
-            engine.delay_comp_hlo_inplace(fragment, new_g, local, snap, tau, h, lambda)
-        }
-        None => {
-            delay_compensate_inplace(local, new_g, snap, tau, h, lambda);
-            Ok(())
-        }
     }
 }
 
@@ -220,7 +178,7 @@ impl SyncStrategy for Cocodc {
             if guard && self.change_rate[p].is_finite() {
                 ctx.stats.staleness_guard_hits += 1;
             }
-            let pend = StreamingDiloco::initiate(p, step, true, ctx);
+            let pend = StreamingDiloco::initiate(p, step, true, ctx)?;
             self.last_initiated[p] = step;
             self.pending.push(pend);
         }

@@ -4,7 +4,6 @@
 //! strictly serialized — the resource underutilization the paper's §I
 //! motivates against — which the virtual clock charges as a stall.
 
-use super::allreduce::mean_pseudo_gradients_into;
 use super::strategy::{SyncCtx, SyncStrategy};
 
 #[derive(Debug, Default)]
@@ -34,15 +33,17 @@ impl SyncStrategy for Diloco {
         ctx.stats.syncs_initiated += ctx.frags.k();
         ctx.stats.syncs_completed += ctx.frags.k();
 
-        // Per fragment: Δ^g = mean(θ^m − θ^g); outer step; adopt. The delta
-        // lives in a pooled buffer and θ_g is read/adopted through borrows
-        // of the disjoint SyncCtx fields — no fragment copies.
+        // Per fragment: Δ^g = mean(θ^m − θ^g); outer step; adopt. The
+        // pseudo-gradient is averaged backend-side straight over resident
+        // worker state (no per-worker fragment copies); `delta` lives in a
+        // pooled buffer and the refreshed global is written back through
+        // the fragment API — no steady-state allocations.
         for p in 0..ctx.frags.k() {
             let frag = ctx.frags.get(p);
             let mut delta = ctx.pool.take(frag.size);
             {
                 let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
-                mean_pseudo_gradients_into(&mut delta, ctx.workers, frag, theta_g);
+                ctx.backend.pseudo_mean_fragment(ctx.workers, frag, theta_g, &mut delta)?;
             }
             ctx.cfg.compression.round_trip(&mut delta);
             ctx.outer_step(p, &delta)?;
@@ -50,7 +51,7 @@ impl SyncStrategy for Diloco {
             {
                 let new_g = &ctx.global.theta_g[frag.range()];
                 for w in ctx.workers.iter_mut() {
-                    w.params[frag.range()].copy_from_slice(new_g);
+                    ctx.backend.write_fragment(w, frag, new_g)?;
                 }
             }
             ctx.pool.put(delta);

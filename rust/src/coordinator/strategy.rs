@@ -5,7 +5,7 @@ use crate::config::{MethodKind, RunConfig};
 use crate::coordinator::fragments::FragmentTable;
 use crate::coordinator::{cocodc::Cocodc, diloco::Diloco, streaming::StreamingDiloco};
 use crate::network::WanSimulator;
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{Backend, WorkerHandle};
 use crate::simclock::VirtualClock;
 use crate::util::pool::BufferPool;
 use crate::util::threadpool::WorkerPool;
@@ -54,18 +54,25 @@ impl SyncStats {
 
 /// Everything a strategy can see/touch after a step. Borrows are split so
 /// strategies can mutate workers and global state independently.
+///
+/// Worker training state is *resident in the backend* behind opaque
+/// [`WorkerHandle`]s: strategies move parameter data exclusively through
+/// the backend's fragment API (`read_fragment`/`write_fragment` into pooled
+/// buffers, delay-comp/α-blend applied backend-side), so only synchronized
+/// fragments ever cross the runtime boundary.
 pub struct SyncCtx<'a> {
-    pub workers: &'a mut [TrainState],
+    pub workers: &'a mut [WorkerHandle],
     pub global: &'a mut GlobalState,
     pub net: &'a mut WanSimulator,
     pub clock: &'a mut VirtualClock,
-    /// Engine for the HLO fragment-op path (None in pure-simulation tests).
-    pub engine: Option<&'a Engine>,
+    /// The execution backend owning all resident worker state.
+    pub backend: &'a dyn Backend,
     pub cfg: &'a RunConfig,
     pub frags: &'a FragmentTable,
     pub stats: &'a mut SyncStats,
     /// Recycled fragment-sized buffers — snapshots, pseudo-gradients and
-    /// HLO scratch come from here, so steady-state syncs never allocate.
+    /// read-back scratch come from here, so steady-state syncs never
+    /// allocate.
     pub pool: &'a mut BufferPool,
     /// Persistent worker threads for per-worker fan-out (None = serial;
     /// results are bit-identical either way, fan-out is elementwise).
@@ -74,31 +81,15 @@ pub struct SyncCtx<'a> {
 
 impl<'a> SyncCtx<'a> {
     /// Nesterov outer step on fragment `p` with averaged pseudo-gradient
-    /// `delta`, via the HLO artifact or the native rust twin. The HLO path
-    /// reads results back into pooled scratch instead of fresh vectors.
+    /// `delta`. Dispatches through the backend so the PJRT implementation
+    /// can route it to the Pallas/HLO artifact; the native/host twins run
+    /// the fused kernel in place on the global slices.
     pub fn outer_step(&mut self, p: usize, delta: &[f32]) -> anyhow::Result<()> {
         let frag = self.frags.get(p);
         let (lr, mu) = (self.cfg.outer_lr, self.cfg.outer_momentum);
-        if self.cfg.use_hlo_fragment_ops {
-            if let Some(engine) = self.engine {
-                let mut t2 = self.pool.take(frag.size);
-                let mut m2 = self.pool.take(frag.size);
-                {
-                    let tg = self.frags.slice(&self.global.theta_g, p);
-                    let mom = self.frags.slice(&self.global.outer_momentum, p);
-                    engine.outer_step_hlo_into(p, tg, delta, mom, lr, mu, &mut t2, &mut m2)?;
-                }
-                self.global.theta_g[frag.range()].copy_from_slice(&t2);
-                self.global.outer_momentum[frag.range()].copy_from_slice(&m2);
-                self.pool.put(t2);
-                self.pool.put(m2);
-                return Ok(());
-            }
-        }
         let tg = &mut self.global.theta_g[frag.range()];
         let mom = &mut self.global.outer_momentum[frag.range()];
-        super::outer_opt::outer_step(tg, delta, mom, lr, mu);
-        Ok(())
+        self.backend.outer_step_fragment(frag, tg, delta, mom, lr, mu)
     }
 }
 

@@ -73,25 +73,36 @@ impl StreamingDiloco {
     }
 
     /// Shared by CoCoDC: start a sync of fragment `p` at step `t`. All
-    /// buffers come from (and eventually return to) `ctx.pool`.
+    /// buffers come from (and eventually return to) `ctx.pool`. When the
+    /// caller needs per-worker snapshots (CoCoDC's delay compensation),
+    /// worker fragments are read out of the backend's resident state —
+    /// the only parameter data that crosses the runtime boundary per sync;
+    /// plain streaming averages backend-side with zero fragment copies.
     pub(crate) fn initiate(
         p: usize,
         t: u32,
         keep_snapshots: bool,
         ctx: &mut SyncCtx,
-    ) -> Pending {
+    ) -> anyhow::Result<Pending> {
         let frag = ctx.frags.get(p);
-        let mut snaps = ctx.pool.take_shell();
-        for w in ctx.workers.iter() {
-            let mut buf = ctx.pool.take(frag.size);
-            buf.copy_from_slice(&w.params[frag.range()]);
-            snaps.push(buf);
-        }
         let mut delta_avg = ctx.pool.take(frag.size);
-        {
+        let snaps = if keep_snapshots {
+            let mut snaps = ctx.pool.take_shell();
+            for w in ctx.workers.iter() {
+                let mut buf = ctx.pool.take(frag.size);
+                ctx.backend.read_fragment(w, frag, &mut buf)?;
+                snaps.push(buf);
+            }
             let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
+            // Average from the snapshots (bit-identical to the resident
+            // rows they were copied from — same kernel, same order).
             vecops::fused_pseudo_mean(&mut delta_avg, &snaps, theta_g);
-        }
+            Some(snaps)
+        } else {
+            let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
+            ctx.backend.pseudo_mean_fragment(ctx.workers, frag, theta_g, &mut delta_avg)?;
+            None
+        };
         // What the wire would carry: round-trip through the codec and pay
         // for the compressed size (Streaming DiLoCo ships quantized
         // pseudo-gradients; the optimizer sees the dequantized values).
@@ -108,20 +119,14 @@ impl StreamingDiloco {
                 ctx.cfg.network.step_compute_s,
             ),
         };
-        let snapshots = if keep_snapshots {
-            Some(snaps)
-        } else {
-            ctx.pool.put_shell(snaps);
-            None
-        };
-        Pending {
+        Ok(Pending {
             frag: p,
             t_init: t,
             apply_step: t + tau,
             finish_time: transfer.finish,
             delta_avg,
-            snapshots,
-        }
+            snapshots: snaps,
+        })
     }
 
     /// Complete every pending sync due at `step`: outer step + α-blend.
@@ -148,11 +153,12 @@ impl StreamingDiloco {
             ctx.stats.per_fragment[p] += 1;
             let alpha = ctx.cfg.alpha;
             {
-                // θ_g and worker params are disjoint SyncCtx fields: blend
-                // straight from the global slice, no fragment copy.
+                // θ_g and worker handles are disjoint SyncCtx fields: the
+                // backend blends its resident fragment straight from the
+                // borrowed global slice, no fragment copy.
                 let new_g = &ctx.global.theta_g[frag.range()];
                 for w in ctx.workers.iter_mut() {
-                    vecops::fused_alpha_blend(&mut w.params[frag.range()], new_g, alpha);
+                    ctx.backend.alpha_blend_fragment(w, frag, new_g, alpha)?;
                 }
             }
             pend.recycle(ctx.pool);
@@ -172,7 +178,7 @@ impl SyncStrategy for StreamingDiloco {
             if step % h == self.offsets[p]
                 && !self.pending.iter().any(|q| q.frag == p)
             {
-                let pend = Self::initiate(p, step, false, ctx);
+                let pend = Self::initiate(p, step, false, ctx)?;
                 self.pending.push(pend);
             }
         }

@@ -14,37 +14,72 @@ pub struct Batch {
     pub seq: usize,
 }
 
+impl Batch {
+    /// An empty batch shell for [`BatchStream::next_batch_into`].
+    pub fn empty(batch: usize, seq: usize) -> Batch {
+        Batch { tokens: Vec::new(), targets: Vec::new(), batch, seq }
+    }
+}
+
 /// Infinite deterministic batch stream.
 #[derive(Debug, Clone)]
 pub struct BatchStream {
     corpus: Corpus,
     batch: usize,
     seq: usize,
+    /// Reusable document buffer (seq+1 tokens) — the batch hot path does
+    /// zero heap allocations in steady state.
+    doc: Vec<i32>,
 }
 
 impl BatchStream {
     pub fn new(vocab: usize, cfg: DataConfig, seed: u64, split: Split,
                batch: usize, seq: usize) -> Self {
-        BatchStream { corpus: Corpus::new(vocab, cfg, seed, split), batch, seq }
+        BatchStream {
+            corpus: Corpus::new(vocab, cfg, seed, split),
+            batch,
+            seq,
+            doc: Vec::new(),
+        }
     }
 
     /// Produce the next batch. Targets are the next-token shift; each row is
     /// one generated document of seq+1 tokens.
     pub fn next_batch(&mut self) -> Batch {
+        let mut b = Batch::empty(self.batch, self.seq);
+        self.next_batch_into(&mut b);
+        b
+    }
+
+    /// Refill `out` with the next batch, reusing its buffers (and the
+    /// stream's document buffer): zero steady-state allocations per round.
+    pub fn next_batch_into(&mut self, out: &mut Batch) {
         let (b, t) = (self.batch, self.seq);
-        let mut tokens = Vec::with_capacity(b * t);
-        let mut targets = Vec::with_capacity(b * t);
+        out.batch = b;
+        out.seq = t;
+        out.tokens.clear();
+        out.targets.clear();
+        out.tokens.reserve(b * t);
+        out.targets.reserve(b * t);
         for _ in 0..b {
-            let doc = self.corpus.sequence(t + 1);
-            tokens.extend_from_slice(&doc[..t]);
-            targets.extend_from_slice(&doc[1..]);
+            self.corpus.sequence_into(t + 1, &mut self.doc);
+            out.tokens.extend_from_slice(&self.doc[..t]);
+            out.targets.extend_from_slice(&self.doc[1..]);
         }
-        Batch { tokens, targets, batch: b, seq: t }
     }
 
     /// Materialize `n` batches up front (used for the fixed validation set).
     pub fn take_batches(&mut self, n: usize) -> Vec<Batch> {
         (0..n).map(|_| self.next_batch()).collect()
+    }
+
+    /// Checkpointable stream position (see [`Corpus::cursor`]).
+    pub fn cursor(&self) -> [u64; 4] {
+        self.corpus.cursor()
+    }
+
+    pub fn set_cursor(&mut self, cursor: [u64; 4]) {
+        self.corpus.set_cursor(cursor);
     }
 }
 
@@ -102,5 +137,26 @@ mod tests {
         let mut v = BatchStream::new(64, DataConfig::default(), 1,
                                      Split::Validation, 2, 8);
         assert_eq!(v.take_batches(5).len(), 5);
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch() {
+        let mut a = stream(1);
+        let mut b = stream(1);
+        let mut reused = Batch::empty(4, 16);
+        for _ in 0..5 {
+            b.next_batch_into(&mut reused);
+            assert_eq!(a.next_batch(), reused);
+        }
+    }
+
+    #[test]
+    fn cursor_round_trip_resumes_stream() {
+        let mut s = stream(3);
+        s.next_batch();
+        let cur = s.cursor();
+        let want = s.next_batch();
+        s.set_cursor(cur);
+        assert_eq!(s.next_batch(), want);
     }
 }

@@ -96,9 +96,17 @@ impl Corpus {
 
     /// Generate the next sequence of `len` tokens (one document).
     pub fn sequence(&mut self, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        self.sequence_into(len, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Corpus::sequence`]: clears and refills
+    /// `out` (capacity is retained across calls — the batch hot path).
+    pub fn sequence_into(&mut self, len: usize, out: &mut Vec<i32>) {
+        out.clear();
         let z = self.rng.weighted(&self.mixture);
         let (a, b) = self.patterns[z];
-        let mut out = Vec::with_capacity(len);
         let mut cur = self.zipf();
         out.push(cur);
         for _ in 1..len {
@@ -109,7 +117,16 @@ impl Corpus {
             };
             out.push(cur);
         }
-        out
+    }
+
+    /// Stream position (the generator state) — lets checkpoints resume the
+    /// data stream exactly where it left off.
+    pub fn cursor(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub fn set_cursor(&mut self, cursor: [u64; 4]) {
+        self.rng = Rng::from_state(cursor);
     }
 
     pub fn vocab(&self) -> usize {

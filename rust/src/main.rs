@@ -12,7 +12,7 @@ use std::path::PathBuf;
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::metrics::{table1, write_curves_csv};
-use cocodc::runtime::Engine;
+use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
 use cocodc::Trainer;
 
@@ -23,7 +23,11 @@ USAGE: cocodc <train|compare|info|emit-config> [flags]
 
 common flags:
   --artifacts DIR     artifacts directory (default: artifacts)
-  --preset NAME       artifact preset (tiny|exp|e2e; default: exp)
+  --preset NAME       preset (tiny|exp|e2e; default: exp)
+  --backend B         execution backend: auto|pjrt|native (default auto —
+                      pjrt when the preset's artifacts exist, else the
+                      pure-rust native transformer; native needs no
+                      artifacts at all)
 
 train/compare flags:
   --config FILE       load RunConfig JSON (other flags override)
@@ -99,6 +103,23 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     Ok(cfg)
 }
 
+fn build_backend(
+    args: &Args,
+    artifacts: &std::path::Path,
+    preset: &str,
+    use_hlo_fragment_ops: bool,
+) -> anyhow::Result<Box<dyn Backend>> {
+    let kind = BackendKind::parse(args.get("backend").unwrap_or("auto"))?;
+    let backend = load_backend(kind, artifacts, preset, use_hlo_fragment_ops)?;
+    eprintln!(
+        "backend: '{preset}' on {} ({} params, K={})",
+        backend.platform(),
+        backend.param_count(),
+        backend.fragments().k()
+    );
+    Ok(backend)
+}
+
 fn summarize(o: &cocodc::TrainOutcome) {
     println!(
         "[{}] steps={} wall={:.1}s (compute {:.1}s, stall {:.1}s) syncs={}/{} \
@@ -125,15 +146,8 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "train" => {
             let cfg = build_config(&args)?;
-            let engine = Engine::load(&artifacts, &cfg.preset)?;
-            eprintln!(
-                "loaded preset '{}' on {} ({} params, K={})",
-                cfg.preset,
-                engine.platform(),
-                engine.meta().param_count,
-                engine.meta().n_fragments
-            );
-            let mut tr = Trainer::new(&engine, cfg)?;
+            let backend = build_backend(&args, &artifacts, &cfg.preset, cfg.use_hlo_fragment_ops)?;
+            let mut tr = Trainer::new(backend.as_ref(), cfg)?;
             tr.verbose = !args.switch("quiet");
             let out = tr.run()?;
             summarize(&out);
@@ -153,12 +167,13 @@ fn main() -> anyhow::Result<()> {
         "compare" => {
             let base = build_config(&args)?;
             let ppl = args.get_or::<f64>("ppl", 20.0)?;
-            let engine = Engine::load(&artifacts, &base.preset)?;
+            let backend =
+                build_backend(&args, &artifacts, &base.preset, base.use_hlo_fragment_ops)?;
             let mut curves = Vec::new();
             for method in MethodKind::all() {
                 let mut cfg = base.clone();
                 cfg.method = method;
-                let mut tr = Trainer::new(&engine, cfg)?;
+                let mut tr = Trainer::new(backend.as_ref(), cfg)?;
                 tr.verbose = !args.switch("quiet");
                 let out = tr.run()?;
                 summarize(&out);
@@ -173,19 +188,19 @@ fn main() -> anyhow::Result<()> {
         }
         "info" => {
             let preset = args.get("preset").unwrap_or("exp").to_string();
+            let backend = build_backend(&args, &artifacts, &preset, false)?;
             args.finish()?;
-            let engine = Engine::load(&artifacts, &preset)?;
-            let meta = engine.meta();
-            println!("preset:     {}", meta.preset);
-            println!("platform:   {}", engine.platform());
+            let model = backend.model();
+            println!("preset:     {preset}");
+            println!("platform:   {}", backend.platform());
             println!(
                 "model:      {} layers, d={}, heads={}, vocab={}, seq={}, batch={}",
-                meta.model.n_layers, meta.model.d_model, meta.model.n_heads,
-                meta.model.vocab_size, meta.model.seq_len, meta.model.batch_size
+                model.n_layers, model.d_model, model.n_heads,
+                model.vocab_size, model.seq_len, model.batch_size
             );
-            println!("params:     {}", meta.param_count);
-            println!("fragments:  K={}", meta.n_fragments);
-            for f in &meta.fragments {
+            println!("params:     {}", backend.param_count());
+            println!("fragments:  K={}", backend.fragments().k());
+            for f in backend.fragments().iter() {
                 println!(
                     "  [{}] offset={:>9} size={:>9} ({:.2} MB)",
                     f.index, f.offset, f.size,

@@ -116,6 +116,20 @@ impl WanSimulator {
     pub fn config(&self) -> &NetworkConfig {
         &self.cfg
     }
+
+    /// Checkpointable simulator state: (busy_until, bytes_sent, transfers,
+    /// jitter-RNG state). With this restored, a resumed run schedules
+    /// transfers identically to the uninterrupted one.
+    pub fn state(&self) -> (f64, f64, usize, [u64; 4]) {
+        (self.busy_until, self.bytes_sent, self.transfers, self.rng.state())
+    }
+
+    pub fn restore(&mut self, busy_until: f64, bytes_sent: f64, transfers: usize, rng: [u64; 4]) {
+        self.busy_until = busy_until;
+        self.bytes_sent = bytes_sent;
+        self.transfers = transfers;
+        self.rng = Rng::from_state(rng);
+    }
 }
 
 #[cfg(test)]

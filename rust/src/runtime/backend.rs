@@ -1,0 +1,506 @@
+//! The execution-backend abstraction: resident worker state behind an
+//! opaque [`WorkerHandle`].
+//!
+//! The seed runtime marshalled the full `params`/`m`/`v` vectors
+//! host → Literal → device → Literal → host on *every* `train_step` /
+//! `eval_loss` / fragment-op call — copies of state that never needed to
+//! leave the execution backend. This trait applies the paper's own
+//! discipline ("keep optimizer state resident, overlap only what must
+//! move") at the runtime boundary:
+//!
+//! * per-worker training state (θ, m, v, step) lives *inside* the backend,
+//!   owned by an opaque [`WorkerHandle`]; the trainer and the coordinator
+//!   never see the flat vectors on the hot path;
+//! * only synchronized fragments cross the boundary, through
+//!   [`Backend::read_fragment`] / [`Backend::write_fragment`] into pooled
+//!   buffers;
+//! * the fragment algebra (delay compensation, α-blend, outer step) runs
+//!   backend-side so resident state is updated in place.
+//!
+//! Implementations:
+//! * [`crate::runtime::NativeBackend`] — pure-rust tiny transformer
+//!   (fused vecops kernels), runnable with zero artifacts;
+//! * [`crate::runtime::PjrtBackend`] — the PJRT/HLO engine with cached
+//!   argument literals re-marshalled only for dirty fragments;
+//! * [`HostBackend`] — flat host vectors with no model, for pure-simulation
+//!   tests and examples that drive strategies with synthetic drift.
+
+use std::any::Any;
+use std::path::Path;
+
+use crate::coordinator::fragments::{Fragment, FragmentTable};
+use crate::runtime::engine::TrainState;
+use crate::runtime::meta::ModelMeta;
+use crate::util::vecops;
+
+/// Opaque, backend-owned resident worker state. Constructed by
+/// [`Backend::create_worker`]; the concrete payload is private to the
+/// backend that made it.
+pub struct WorkerHandle {
+    inner: Box<dyn Any + Send>,
+}
+
+impl WorkerHandle {
+    pub fn new<T: Any + Send>(inner: T) -> Self {
+        WorkerHandle { inner: Box::new(inner) }
+    }
+
+    /// Downcast to the backend's concrete worker type. Backends use this
+    /// internally; passing a handle to a different backend than the one
+    /// that created it is a caller bug and errors cleanly.
+    pub fn get<T: Any>(&self) -> anyhow::Result<&T> {
+        self.inner
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow::anyhow!("WorkerHandle belongs to a different backend"))
+    }
+
+    pub fn get_mut<T: Any>(&mut self) -> anyhow::Result<&mut T> {
+        self.inner
+            .downcast_mut::<T>()
+            .ok_or_else(|| anyhow::anyhow!("WorkerHandle belongs to a different backend"))
+    }
+}
+
+impl std::fmt::Debug for WorkerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("WorkerHandle(..)")
+    }
+}
+
+/// Shared plumbing for the backends' mean/pseudo-mean implementations:
+/// validate that every handle belongs to worker type `T`, then yield one
+/// borrowed f32 row per worker. Allocation-free, so it is safe on the
+/// zero-allocation sync hot path.
+pub(crate) fn validated_rows<'a, T, F>(
+    ws: &'a [WorkerHandle],
+    row: F,
+) -> anyhow::Result<impl ExactSizeIterator<Item = &'a [f32]>>
+where
+    T: Any,
+    F: Fn(&'a T) -> &'a [f32] + 'a,
+{
+    for w in ws {
+        w.get::<T>()?;
+    }
+    Ok(ws.iter().map(move |w| row(w.get::<T>().expect("validated above"))))
+}
+
+/// An execution backend owning resident per-worker training state.
+///
+/// Contract (DESIGN.md §Backend):
+/// * handles are only valid with the backend that created them;
+/// * `train_step` advances the worker's resident (θ, m, v, step) in place
+///   and returns only the scalar loss — no state crosses the boundary;
+/// * `read_fragment`/`write_fragment` are the *only* way the coordinator
+///   moves parameter data in or out, and it does so per synced fragment
+///   into pooled buffers;
+/// * the fragment ops must be bit-identical to their `vecops` twins (or
+///   within the documented HLO tolerance for PJRT artifact dispatch);
+/// * all methods take `&self` and are safe to call from the trainer's
+///   worker pool with disjoint `&mut WorkerHandle`s.
+pub trait Backend: Send + Sync {
+    /// Human-readable execution platform (e.g. "native", "cpu", "stub").
+    fn platform(&self) -> String;
+
+    /// Model dimensions (batch/seq shape the data pipeline must produce).
+    fn model(&self) -> &ModelMeta;
+
+    /// Flat parameter-vector length P.
+    fn param_count(&self) -> usize;
+
+    /// The fragment partition of the flat vector.
+    fn fragments(&self) -> &FragmentTable;
+
+    /// Initial flat parameters (the replicated θ₀ every worker starts from).
+    fn init_params(&self) -> anyhow::Result<Vec<f32>>;
+
+    /// Create one worker with resident state initialized to θ₀.
+    fn create_worker(&self) -> anyhow::Result<WorkerHandle>;
+
+    /// One local training step on the worker's resident state; returns the
+    /// training loss. `tokens`/`targets` are row-major `[batch, seq]`.
+    fn train_step(
+        &self,
+        w: &mut WorkerHandle,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<f32>;
+
+    /// Validation loss of an explicit (host-side) parameter vector — used
+    /// for the consensus mean, which exists outside any worker.
+    fn eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32])
+        -> anyhow::Result<f32>;
+
+    /// Copy fragment `frag` of the worker's resident θ into `out`
+    /// (`out.len() == frag.size`).
+    fn read_fragment(
+        &self,
+        w: &WorkerHandle,
+        frag: Fragment,
+        out: &mut [f32],
+    ) -> anyhow::Result<()>;
+
+    /// Overwrite fragment `frag` of the worker's resident θ with `data`.
+    fn write_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        data: &[f32],
+    ) -> anyhow::Result<()>;
+
+    /// CoCoDC Alg. 1 on the worker's resident fragment:
+    /// θ_local ← θ_g + g_corr·τ (see `vecops::fused_delay_comp`).
+    #[allow(clippy::too_many_arguments)]
+    fn delay_comp_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) -> anyhow::Result<()>;
+
+    /// Streaming DiLoCo's mixing step (Eq. 3) on the resident fragment:
+    /// θ ← (1−α)·θ + α·θ_g.
+    fn alpha_blend_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        alpha: f32,
+    ) -> anyhow::Result<()>;
+
+    /// Nesterov outer step (Eq. 2) on the replicated global fragment state
+    /// (host-side: the consensus is not any worker's resident state).
+    fn outer_step_fragment(
+        &self,
+        frag: Fragment,
+        theta_g: &mut [f32],
+        delta: &[f32],
+        momentum: &mut [f32],
+        lr: f32,
+        mu: f32,
+    ) -> anyhow::Result<()> {
+        let _ = frag;
+        vecops::fused_outer_step(theta_g, delta, momentum, lr, mu);
+        Ok(())
+    }
+
+    /// Element-wise mean of every worker's resident θ written into `out` —
+    /// the consensus the trainer evaluates. Backends compute this over
+    /// resident state directly (no per-worker full-vector copies).
+    fn mean_params(&self, ws: &[WorkerHandle], out: &mut [f32]) -> anyhow::Result<()>;
+
+    /// Averaged pseudo-gradient Δθ_p^g = mean_m(θ_p^m) − θ_p^g over one
+    /// fragment (paper Eq. 1), computed straight over resident worker
+    /// state — the zero-copy path for syncs that don't need per-worker
+    /// snapshots (DiLoCo rounds, plain Streaming DiLoCo initiations).
+    fn pseudo_mean_fragment(
+        &self,
+        ws: &[WorkerHandle],
+        frag: Fragment,
+        theta_g: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()>;
+
+    /// Whether this backend dispatches the fragment algebra to Pallas/HLO
+    /// artifacts (PJRT only; used to keep `RunConfig::use_hlo_fragment_ops`
+    /// and the constructed backend consistent).
+    fn hlo_fragment_ops(&self) -> bool {
+        false
+    }
+
+    /// Snapshot the worker's full state into `dst` (checkpoint path; not
+    /// allocation-sensitive).
+    fn read_state(&self, w: &WorkerHandle, dst: &mut TrainState) -> anyhow::Result<()>;
+
+    /// Restore the worker's full state from `src` (checkpoint path).
+    fn write_state(&self, w: &mut WorkerHandle, src: &TrainState) -> anyhow::Result<()>;
+}
+
+// ---------------------------------------------------------------------
+// HostBackend: flat vectors, no model
+// ---------------------------------------------------------------------
+
+/// Minimal backend whose resident state is a host [`TrainState`] and whose
+/// fragment ops are the fused vecops kernels. It has no model:
+/// `train_step`/`eval_loss` error. Pure-simulation tests and examples use
+/// it to drive the strategies with synthetic drift, mutating worker
+/// parameters directly through [`HostBackend::state_mut`].
+pub struct HostBackend {
+    frags: FragmentTable,
+    model: ModelMeta,
+    init: Vec<f32>,
+}
+
+impl HostBackend {
+    pub fn new(frags: FragmentTable) -> Self {
+        let init = vec![0.0f32; frags.total_params()];
+        HostBackend { frags, model: sim_model_meta(), init }
+    }
+
+    /// Direct access to a worker's flat state (simulation drift only —
+    /// real data paths go through the fragment API).
+    pub fn state<'a>(&self, w: &'a WorkerHandle) -> &'a TrainState {
+        w.get::<TrainState>().expect("HostBackend handle")
+    }
+
+    pub fn state_mut<'a>(&self, w: &'a mut WorkerHandle) -> &'a mut TrainState {
+        w.get_mut::<TrainState>().expect("HostBackend handle")
+    }
+}
+
+/// Placeholder dimensions for backends that carry no model.
+fn sim_model_meta() -> ModelMeta {
+    ModelMeta {
+        vocab_size: 4,
+        d_model: 1,
+        n_layers: 0,
+        n_heads: 1,
+        d_ff: 1,
+        seq_len: 1,
+        batch_size: 1,
+        use_pallas_attention: false,
+    }
+}
+
+impl Backend for HostBackend {
+    fn platform(&self) -> String {
+        "host-sim".into()
+    }
+
+    fn model(&self) -> &ModelMeta {
+        &self.model
+    }
+
+    fn param_count(&self) -> usize {
+        self.frags.total_params()
+    }
+
+    fn fragments(&self) -> &FragmentTable {
+        &self.frags
+    }
+
+    fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.init.clone())
+    }
+
+    fn create_worker(&self) -> anyhow::Result<WorkerHandle> {
+        Ok(WorkerHandle::new(TrainState::new(self.init.clone())))
+    }
+
+    fn train_step(&self, _w: &mut WorkerHandle, _t: &[i32], _y: &[i32]) -> anyhow::Result<f32> {
+        anyhow::bail!("HostBackend has no model; use NativeBackend or PjrtBackend")
+    }
+
+    fn eval_loss(&self, _p: &[f32], _t: &[i32], _y: &[i32]) -> anyhow::Result<f32> {
+        anyhow::bail!("HostBackend has no model; use NativeBackend or PjrtBackend")
+    }
+
+    fn read_fragment(&self, w: &WorkerHandle, frag: Fragment, out: &mut [f32]) -> anyhow::Result<()> {
+        out.copy_from_slice(&self.state(w).params[frag.range()]);
+        Ok(())
+    }
+
+    fn write_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        data: &[f32],
+    ) -> anyhow::Result<()> {
+        self.state_mut(w).params[frag.range()].copy_from_slice(data);
+        Ok(())
+    }
+
+    fn delay_comp_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) -> anyhow::Result<()> {
+        let local = &mut self.state_mut(w).params[frag.range()];
+        vecops::fused_delay_comp(local, theta_g, theta_tp, tau, h, lambda);
+        Ok(())
+    }
+
+    fn alpha_blend_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        alpha: f32,
+    ) -> anyhow::Result<()> {
+        let local = &mut self.state_mut(w).params[frag.range()];
+        vecops::fused_alpha_blend(local, theta_g, alpha);
+        Ok(())
+    }
+
+    fn mean_params(&self, ws: &[WorkerHandle], out: &mut [f32]) -> anyhow::Result<()> {
+        let rows = validated_rows::<TrainState, _>(ws, |s| s.params.as_slice())?;
+        vecops::fused_mean_iter(out, rows);
+        Ok(())
+    }
+
+    fn pseudo_mean_fragment(
+        &self,
+        ws: &[WorkerHandle],
+        frag: Fragment,
+        theta_g: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let rows = validated_rows::<TrainState, _>(ws, move |s| &s.params[frag.range()])?;
+        vecops::fused_pseudo_mean_iter(out, rows, theta_g);
+        Ok(())
+    }
+
+    fn read_state(&self, w: &WorkerHandle, dst: &mut TrainState) -> anyhow::Result<()> {
+        dst.clone_from(self.state(w));
+        Ok(())
+    }
+
+    fn write_state(&self, w: &mut WorkerHandle, src: &TrainState) -> anyhow::Result<()> {
+        self.state_mut(w).clone_from(src);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backend selection (--backend {auto,pjrt,native})
+// ---------------------------------------------------------------------
+
+/// Which backend a CLI run should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when `artifacts/<preset>/meta.json` exists, native otherwise.
+    Auto,
+    Pjrt,
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "native" => Ok(BackendKind::Native),
+            other => anyhow::bail!("unknown backend '{other}' (auto|pjrt|native)"),
+        }
+    }
+}
+
+/// Instantiate the backend for `preset`. `use_hlo_fragment_ops` routes the
+/// PJRT backend's fragment algebra through the Pallas/HLO artifacts.
+pub fn load_backend(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    preset: &str,
+    use_hlo_fragment_ops: bool,
+) -> anyhow::Result<Box<dyn Backend>> {
+    use crate::runtime::{NativeBackend, PjrtBackend};
+    let kind = match kind {
+        BackendKind::Auto => {
+            if artifacts_dir.join(preset).join("meta.json").exists() {
+                BackendKind::Pjrt
+            } else {
+                BackendKind::Native
+            }
+        }
+        k => k,
+    };
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(
+            artifacts_dir,
+            preset,
+            use_hlo_fragment_ops,
+        )?)),
+        BackendKind::Native => {
+            // Never degrade silently: a run explicitly configured to
+            // exercise the Pallas/HLO fragment-op path must not fall back
+            // to the vecops kernels just because artifacts are missing.
+            anyhow::ensure!(
+                !use_hlo_fragment_ops,
+                "use_hlo_fragment_ops requires the PJRT backend (artifacts for \
+                 preset '{preset}' under {}); the native backend has no HLO path",
+                artifacts_dir.display()
+            );
+            Ok(Box::new(NativeBackend::preset(preset)?))
+        }
+        BackendKind::Auto => unreachable!("resolved above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> HostBackend {
+        HostBackend::new(FragmentTable::from_sizes(&[8, 8]))
+    }
+
+    #[test]
+    fn handle_downcast_is_typed() {
+        let b = backend();
+        let mut w = b.create_worker().unwrap();
+        assert!(w.get::<TrainState>().is_ok());
+        assert!(w.get::<u32>().is_err());
+        assert!(w.get_mut::<Vec<f32>>().is_err());
+    }
+
+    #[test]
+    fn fragment_round_trip_touches_only_that_fragment() {
+        let b = backend();
+        let mut w = b.create_worker().unwrap();
+        let frag = b.fragments().get(1);
+        b.write_fragment(&mut w, frag, &[3.0; 8]).unwrap();
+        let mut out = [0.0f32; 8];
+        b.read_fragment(&w, b.fragments().get(0), &mut out).unwrap();
+        assert_eq!(out, [0.0; 8]);
+        b.read_fragment(&w, frag, &mut out).unwrap();
+        assert_eq!(out, [3.0; 8]);
+    }
+
+    #[test]
+    fn mean_params_is_elementwise_mean() {
+        let b = backend();
+        let mut w1 = b.create_worker().unwrap();
+        let mut w2 = b.create_worker().unwrap();
+        b.state_mut(&mut w1).params.fill(2.0);
+        b.state_mut(&mut w2).params.fill(4.0);
+        let mut mean = vec![0.0f32; b.param_count()];
+        b.mean_params(&[w1, w2], &mut mean).unwrap();
+        assert!(mean.iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn native_backend_rejects_hlo_fragment_ops() {
+        let err = load_backend(
+            BackendKind::Native,
+            std::path::Path::new("/nonexistent"),
+            "tiny",
+            true,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("use_hlo_fragment_ops"));
+        // Without the flag the native backend loads fine.
+        assert!(load_backend(
+            BackendKind::Native,
+            std::path::Path::new("/nonexistent"),
+            "tiny",
+            false
+        )
+        .is_ok());
+    }
+}

@@ -1,12 +1,21 @@
 //! The execution engine: compiled artifacts + typed wrappers around their
-//! calling conventions.
+//! calling conventions, plus [`PjrtBackend`] — the resident-state
+//! [`Backend`] implementation over the engine with dirty-fragment argument
+//! marshalling (see `runtime::marshal`).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::meta::Meta;
+use crate::coordinator::fragments::{Fragment, FragmentTable};
+use crate::runtime::backend::{validated_rows, Backend, WorkerHandle};
+use crate::runtime::marshal::{LiteralCache, MarshalStats};
+use crate::runtime::meta::ModelMeta;
+use crate::util::pool::BufferPool;
+use crate::util::vecops;
 
 /// PJRT executables are not marked Send/Sync by the `xla` crate (raw FFI
 /// handles), but the underlying XLA CPU client explicitly supports
@@ -127,14 +136,14 @@ impl Engine {
         tokens: &[i32],
         targets: &[i32],
     ) -> anyhow::Result<f32> {
-        let args = [
+        let (lp, lm, lv) = (
             self.lit_f32(&state.params),
             self.lit_f32(&state.m),
             self.lit_f32(&state.v),
-            Literal::scalar(state.step as f32),
-            self.lit_tokens(tokens)?,
-            self.lit_tokens(targets)?,
-        ];
+        );
+        let step = Literal::scalar(state.step as f32);
+        let (tok, tgt) = (self.lit_tokens(tokens)?, self.lit_tokens(targets)?);
+        let args = [&lp, &lm, &lv, &step, &tok, &tgt];
         let result = self.train.0.execute(&args)?[0][0].to_literal_sync()?;
         let outs = result.to_tuple()?;
         anyhow::ensure!(outs.len() == 4, "train_step must return 4 outputs");
@@ -153,11 +162,9 @@ impl Engine {
         tokens: &[i32],
         targets: &[i32],
     ) -> anyhow::Result<f32> {
-        let args = [
-            self.lit_f32(params),
-            self.lit_tokens(tokens)?,
-            self.lit_tokens(targets)?,
-        ];
+        let lp = self.lit_f32(params);
+        let (tok, tgt) = (self.lit_tokens(tokens)?, self.lit_tokens(targets)?);
+        let args = [&lp, &tok, &tgt];
         let result = self.eval.0.execute(&args)?[0][0].to_literal_sync()?;
         let out = result.to_tuple1()?;
         Ok(out.get_first_element()?)
@@ -174,11 +181,9 @@ impl Engine {
             .grad
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("grad_step artifact not built for this preset"))?;
-        let args = [
-            self.lit_f32(params),
-            self.lit_tokens(tokens)?,
-            self.lit_tokens(targets)?,
-        ];
+        let lp = self.lit_f32(params);
+        let (tok, tgt) = (self.lit_tokens(tokens)?, self.lit_tokens(targets)?);
+        let args = [&lp, &tok, &tgt];
         let result = exec.0.execute(&args)?[0][0].to_literal_sync()?;
         let (loss_l, grad_l) = result.to_tuple2()?;
         let loss: f32 = loss_l.get_first_element()?;
@@ -206,14 +211,14 @@ impl Engine {
         lambda: f32,
     ) -> anyhow::Result<()> {
         let (dc, _) = &self.frag_ops[&fragment];
-        let args = [
+        let (lg, ll, lp) = (
             self.lit_f32(theta_g),
             self.lit_f32(theta_local),
             self.lit_f32(theta_tp),
-            Literal::scalar(tau),
-            Literal::scalar(h),
-            Literal::scalar(lambda),
-        ];
+        );
+        let (st, sh, sl) =
+            (Literal::scalar(tau), Literal::scalar(h), Literal::scalar(lambda));
+        let args = [&lg, &ll, &lp, &st, &sh, &sl];
         let result = dc.0.execute(&args)?[0][0].to_literal_sync()?;
         result.to_tuple1()?.copy_raw_to(theta_local)?;
         Ok(())
@@ -251,13 +256,10 @@ impl Engine {
         momentum_out: &mut [f32],
     ) -> anyhow::Result<()> {
         let (_, os) = &self.frag_ops[&fragment];
-        let args = [
-            self.lit_f32(theta_g),
-            self.lit_f32(delta),
-            self.lit_f32(momentum_buf),
-            Literal::scalar(lr),
-            Literal::scalar(momentum),
-        ];
+        let (lg, ld, lm) =
+            (self.lit_f32(theta_g), self.lit_f32(delta), self.lit_f32(momentum_buf));
+        let (sl, sm) = (Literal::scalar(lr), Literal::scalar(momentum));
+        let args = [&lg, &ld, &lm, &sl, &sm];
         let result = os.0.execute(&args)?[0][0].to_literal_sync()?;
         let (t, m) = result.to_tuple2()?;
         t.copy_raw_to(theta_out)?;
@@ -279,5 +281,260 @@ impl Engine {
         let mut m = vec![0.0f32; momentum_buf.len()];
         self.outer_step_hlo_into(fragment, theta_g, delta, momentum_buf, lr, momentum, &mut t, &mut m)?;
         Ok((t, m))
+    }
+}
+
+// ---------------------------------------------------------------------
+// PjrtBackend: the engine behind the resident-state Backend trait
+// ---------------------------------------------------------------------
+
+/// One worker's resident state on the PJRT backend: a host mirror of the
+/// flat training state plus the cached argument literals that stand in for
+/// device-resident buffers (real-PJRT buffer donation is a ROADMAP
+/// follow-up; the caching layer already confines re-marshalling to dirty
+/// fragments).
+#[derive(Debug)]
+pub struct PjrtWorker {
+    state: TrainState,
+    cache: LiteralCache,
+}
+
+/// [`Backend`] over the compiled PJRT artifacts. The *input* half of the
+/// seed's marshalling round trip is gone: executor outputs are adopted as
+/// the next call's argument literals, and coordinator writes re-marshal
+/// only the fragment they touched. The *output* half — refreshing the host
+/// mirror from the step's result literals — still runs once per step; it
+/// disappears together with the mirror when real-PJRT buffer donation
+/// keeps the state device-resident (ROADMAP follow-up).
+pub struct PjrtBackend {
+    engine: Engine,
+    model: ModelMeta,
+    frags: FragmentTable,
+    init: Vec<f32>,
+    use_hlo_fragment_ops: bool,
+    /// Fragment-sized scratch for the HLO outer-step read-back.
+    scratch: Mutex<BufferPool>,
+}
+
+impl PjrtBackend {
+    pub fn load(
+        artifacts_dir: &Path,
+        preset: &str,
+        use_hlo_fragment_ops: bool,
+    ) -> anyhow::Result<PjrtBackend> {
+        let engine = Engine::load(artifacts_dir, preset)?;
+        let init = engine.init_params()?;
+        let frags = FragmentTable::from_meta(engine.meta());
+        Ok(PjrtBackend {
+            model: engine.meta().model.clone(),
+            frags,
+            init,
+            engine,
+            use_hlo_fragment_ops,
+            scratch: Mutex::new(BufferPool::new()),
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Marshalling counters of one worker (test/diagnostic hook).
+    pub fn marshal_stats(&self, w: &WorkerHandle) -> anyhow::Result<MarshalStats> {
+        Ok(w.get::<PjrtWorker>()?.cache.stats())
+    }
+
+    fn worker<'a>(&self, w: &'a WorkerHandle) -> anyhow::Result<&'a PjrtWorker> {
+        w.get::<PjrtWorker>()
+    }
+
+    fn worker_mut<'a>(&self, w: &'a mut WorkerHandle) -> anyhow::Result<&'a mut PjrtWorker> {
+        w.get_mut::<PjrtWorker>()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn model(&self) -> &ModelMeta {
+        &self.model
+    }
+
+    fn param_count(&self) -> usize {
+        self.init.len()
+    }
+
+    fn fragments(&self) -> &FragmentTable {
+        &self.frags
+    }
+
+    fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.init.clone())
+    }
+
+    fn create_worker(&self) -> anyhow::Result<WorkerHandle> {
+        Ok(WorkerHandle::new(PjrtWorker {
+            state: TrainState::new(self.init.clone()),
+            cache: LiteralCache::new(self.frags.k()),
+        }))
+    }
+
+    fn train_step(
+        &self,
+        w: &mut WorkerHandle,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<f32> {
+        let pw = self.worker_mut(w)?;
+        let step = Literal::scalar(pw.state.step as f32);
+        let (tok, tgt) = (
+            self.engine.lit_tokens(tokens)?,
+            self.engine.lit_tokens(targets)?,
+        );
+        let result = {
+            let (lp, lm, lv) = pw.cache.refresh(&pw.state, &self.frags)?;
+            let args = [lp, lm, lv, &step, &tok, &tgt];
+            self.engine.train.0.execute(&args)?[0][0].to_literal_sync()?
+        };
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 4, "train_step must return 4 outputs");
+        let mut it = outs.into_iter();
+        let (p, m, v) = (
+            it.next().expect("len checked"),
+            it.next().expect("len checked"),
+            it.next().expect("len checked"),
+        );
+        let loss: f32 = it.next().expect("len checked").get_first_element()?;
+        p.copy_raw_to(&mut pw.state.params)?;
+        m.copy_raw_to(&mut pw.state.m)?;
+        v.copy_raw_to(&mut pw.state.v)?;
+        // The outputs *are* the next step's inputs — adopt, don't re-marshal.
+        pw.cache.adopt(p, m, v);
+        pw.state.step += 1;
+        Ok(loss)
+    }
+
+    fn eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> anyhow::Result<f32> {
+        self.engine.eval_loss(params, tokens, targets)
+    }
+
+    fn read_fragment(&self, w: &WorkerHandle, frag: Fragment, out: &mut [f32]) -> anyhow::Result<()> {
+        out.copy_from_slice(&self.worker(w)?.state.params[frag.range()]);
+        Ok(())
+    }
+
+    fn write_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        data: &[f32],
+    ) -> anyhow::Result<()> {
+        let pw = self.worker_mut(w)?;
+        pw.state.params[frag.range()].copy_from_slice(data);
+        pw.cache.mark_fragment(frag.index);
+        Ok(())
+    }
+
+    fn delay_comp_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) -> anyhow::Result<()> {
+        let pw = self.worker_mut(w)?;
+        let local = &mut pw.state.params[frag.range()];
+        if self.use_hlo_fragment_ops {
+            self.engine
+                .delay_comp_hlo_inplace(frag.index, theta_g, local, theta_tp, tau, h, lambda)?;
+        } else {
+            vecops::fused_delay_comp(local, theta_g, theta_tp, tau, h, lambda);
+        }
+        pw.cache.mark_fragment(frag.index);
+        Ok(())
+    }
+
+    fn alpha_blend_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        alpha: f32,
+    ) -> anyhow::Result<()> {
+        let pw = self.worker_mut(w)?;
+        vecops::fused_alpha_blend(&mut pw.state.params[frag.range()], theta_g, alpha);
+        pw.cache.mark_fragment(frag.index);
+        Ok(())
+    }
+
+    fn outer_step_fragment(
+        &self,
+        frag: Fragment,
+        theta_g: &mut [f32],
+        delta: &[f32],
+        momentum: &mut [f32],
+        lr: f32,
+        mu: f32,
+    ) -> anyhow::Result<()> {
+        if !self.use_hlo_fragment_ops {
+            vecops::fused_outer_step(theta_g, delta, momentum, lr, mu);
+            return Ok(());
+        }
+        let (mut t2, mut m2) = {
+            let mut pool = self.scratch.lock().expect("scratch pool poisoned");
+            (pool.take(frag.size), pool.take(frag.size))
+        };
+        let r = self
+            .engine
+            .outer_step_hlo_into(frag.index, theta_g, delta, momentum, lr, mu, &mut t2, &mut m2);
+        if r.is_ok() {
+            theta_g.copy_from_slice(&t2);
+            momentum.copy_from_slice(&m2);
+        }
+        let mut pool = self.scratch.lock().expect("scratch pool poisoned");
+        pool.put(t2);
+        pool.put(m2);
+        r
+    }
+
+    fn mean_params(&self, ws: &[WorkerHandle], out: &mut [f32]) -> anyhow::Result<()> {
+        let rows = validated_rows::<PjrtWorker, _>(ws, |w| w.state.params.as_slice())?;
+        vecops::fused_mean_iter(out, rows);
+        Ok(())
+    }
+
+    fn pseudo_mean_fragment(
+        &self,
+        ws: &[WorkerHandle],
+        frag: Fragment,
+        theta_g: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let rows =
+            validated_rows::<PjrtWorker, _>(ws, move |w| &w.state.params[frag.range()])?;
+        vecops::fused_pseudo_mean_iter(out, rows, theta_g);
+        Ok(())
+    }
+
+    fn hlo_fragment_ops(&self) -> bool {
+        self.use_hlo_fragment_ops
+    }
+
+    fn read_state(&self, w: &WorkerHandle, dst: &mut TrainState) -> anyhow::Result<()> {
+        dst.clone_from(&self.worker(w)?.state);
+        Ok(())
+    }
+
+    fn write_state(&self, w: &mut WorkerHandle, src: &TrainState) -> anyhow::Result<()> {
+        let pw = self.worker_mut(w)?;
+        pw.state.clone_from(src);
+        // Everything (params *and* moments) changed: full re-marshal next use.
+        pw.cache.invalidate();
+        Ok(())
     }
 }

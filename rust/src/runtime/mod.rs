@@ -1,13 +1,25 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/<preset>/*.hlo.txt`)
-//! and executes them on the XLA CPU client from the coordinator's hot loop.
+//! Execution runtime: the [`Backend`] abstraction over resident worker
+//! state, with three implementations —
 //!
-//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. All artifacts are lowered with
-//! `return_tuple=True`, so results come back as one tuple literal.
+//! * [`PjrtBackend`] / [`Engine`]: AOT artifacts (`artifacts/<preset>/
+//!   *.hlo.txt`) executed on the XLA CPU client (pattern per
+//!   /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`), with per-worker cached argument
+//!   literals re-marshalled only for dirty fragments (`marshal`);
+//! * [`NativeBackend`]: pure-rust tiny transformer (fused 8-lane kernels),
+//!   runnable end-to-end with zero artifacts on any machine;
+//! * [`HostBackend`]: flat host vectors without a model, for
+//!   pure-simulation tests that drive the coordinator with synthetic drift.
 
+pub mod backend;
 pub mod engine;
+pub mod marshal;
 pub mod meta;
+pub mod native;
 
-pub use engine::{Engine, TrainState};
-pub use meta::{FragmentMeta, LeafMeta, Meta};
+pub use backend::{load_backend, Backend, BackendKind, HostBackend, WorkerHandle};
+pub use engine::{Engine, PjrtBackend, TrainState};
+pub use marshal::{LiteralCache, MarshalStats};
+pub use meta::{FragmentMeta, LeafMeta, Meta, ModelMeta, TrainMeta};
+pub use native::{lr_schedule, NativeBackend, NativeSpec};

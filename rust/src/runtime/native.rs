@@ -1,0 +1,1169 @@
+//! Native execution backend: a pure-rust LLaMA-style tiny transformer with
+//! hand-written forward/backward/AdamW kernels in the `util::vecops` 8-lane
+//! style — the zero-artifact twin of the python AOT model
+//! (python/compile/model.py), so every end-to-end scenario (experiments,
+//! wallclock sweeps, outage robustness) runs on any machine.
+//!
+//! Architecture (matches the artifact model leaf-for-leaf):
+//! embed → N × [RMSNorm → RoPE multi-head causal attention → residual →
+//! RMSNorm → SwiGLU MLP → residual] → final RMSNorm → untied LM head →
+//! mean token cross-entropy. The optimizer is decoupled AdamW with bias
+//! correction and the warmup+cosine LR schedule computed from the same
+//! `TrainMeta` fields the artifacts bake in.
+//!
+//! Resident-state discipline (DESIGN.md §Backend): each worker owns its
+//! flat (θ, m, v, step) *and* all forward/backward scratch, allocated once
+//! at `create_worker` — a steady-state `train_step` performs **zero** heap
+//! allocations (tests/alloc_steady_state.rs proves it with a counting
+//! allocator). Evaluation borrows scratch from a recycling pool so
+//! concurrent validation batches stay allocation-free after warm-up.
+//!
+//! The flat layout is fragment-major over the same strided depth partition
+//! as python/compile/config.flat_layout: layer l joins fragment l mod K,
+//! the embedding joins fragment 0, final norm + LM head join fragment K−1.
+
+use std::sync::Mutex;
+
+use crate::coordinator::fragments::{Fragment, FragmentTable};
+use crate::runtime::backend::{validated_rows, Backend, WorkerHandle};
+use crate::runtime::engine::TrainState;
+use crate::runtime::meta::{LeafMeta, ModelMeta, TrainMeta};
+use crate::util::vecops::{self, axpy, dot};
+use crate::util::Rng;
+
+const RMS_EPS: f32 = 1e-6;
+const ROPE_THETA: f32 = 10000.0;
+
+/// Full specification of a native model + optimizer.
+#[derive(Debug, Clone)]
+pub struct NativeSpec {
+    pub name: String,
+    pub model: ModelMeta,
+    pub train: TrainMeta,
+    pub n_fragments: usize,
+    pub seed: u64,
+}
+
+impl NativeSpec {
+    /// Named presets. These mirror the artifact presets' architecture
+    /// family but are scaled so the full three-method comparison runs in
+    /// seconds on a laptop CPU with no artifacts present.
+    pub fn preset(name: &str) -> anyhow::Result<NativeSpec> {
+        let (model, train, k) = match name {
+            "tiny" => (
+                model_meta(64, 32, 2, 2, 64, 16, 2),
+                train_meta(1e-3, 10, 200),
+                2,
+            ),
+            "exp" => (
+                model_meta(256, 64, 4, 4, 128, 32, 4),
+                train_meta(2e-3, 20, 1200),
+                4,
+            ),
+            "e2e" => (
+                model_meta(512, 128, 6, 4, 256, 64, 4),
+                train_meta(1e-3, 50, 2000),
+                4,
+            ),
+            other => anyhow::bail!("unknown native preset '{other}' (tiny|exp|e2e)"),
+        };
+        Ok(NativeSpec { name: name.to_string(), model, train, n_fragments: k, seed: 0 })
+    }
+}
+
+fn model_meta(
+    vocab: usize,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    ff: usize,
+    seq: usize,
+    batch: usize,
+) -> ModelMeta {
+    ModelMeta {
+        vocab_size: vocab,
+        d_model: d,
+        n_layers: layers,
+        n_heads: heads,
+        d_ff: ff,
+        seq_len: seq,
+        batch_size: batch,
+        use_pallas_attention: false,
+    }
+}
+
+fn train_meta(lr: f64, warmup: u32, total: u32) -> TrainMeta {
+    TrainMeta {
+        lr,
+        warmup_steps: warmup,
+        total_steps: total,
+        weight_decay: 0.1,
+        beta1: 0.9,
+        beta2: 0.999,
+        eps: 1e-8,
+        min_lr_ratio: 0.1,
+    }
+}
+
+/// Warmup + cosine LR schedule — same formula the train_step artifact bakes
+/// in (python/compile/train.lr_schedule), with `step` 0-indexed.
+pub fn lr_schedule(step: u32, t: &TrainMeta) -> f32 {
+    let s = step as f64;
+    let warm = (t.warmup_steps as f64).max(1.0);
+    if (step as f64) < t.warmup_steps as f64 {
+        return (t.lr * (s + 1.0) / warm) as f32;
+    }
+    let total = t.total_steps as f64;
+    let prog = ((s - warm) / (total - warm).max(1.0)).clamp(0.0, 1.0);
+    let cos = 0.5 * (1.0 + (std::f64::consts::PI * prog).cos());
+    (t.lr * (t.min_lr_ratio + (1.0 - t.min_lr_ratio) * cos)) as f32
+}
+
+// ---------------------------------------------------------------------
+// Flat layout (fragment-major strided depth partition)
+// ---------------------------------------------------------------------
+
+/// Offsets of one decoder block's leaves in the flat vector.
+#[derive(Debug, Clone, Copy)]
+struct LayerOff {
+    attn_norm: usize,
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    mlp_norm: usize,
+    w1: usize,
+    w3: usize,
+    w2: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Layout {
+    embed: usize,
+    layers: Vec<LayerOff>,
+    final_norm: usize,
+    lm_head: usize,
+    leaves: Vec<LeafMeta>,
+    frags: FragmentTable,
+    total: usize,
+}
+
+/// Strided depth partition (python/compile/config.fragment_of): layer l →
+/// shard l mod K; embedding → shard 0; final norm + LM head → shard K−1.
+fn fragment_of(layer: i64, k: usize) -> usize {
+    match layer {
+        -1 => 0,
+        -2 => k - 1,
+        l => l as usize % k,
+    }
+}
+
+fn build_layout(spec: &NativeSpec) -> Layout {
+    let (v, d, f) = (spec.model.vocab_size, spec.model.d_model, spec.model.d_ff);
+    let k = spec.n_fragments;
+    assert!(k >= 1 && k <= spec.model.n_layers, "need 1 <= K <= n_layers");
+    // Canonical leaf table: (name, size, layer).
+    let mut canon: Vec<(String, Vec<usize>, i64)> = vec![("embed".into(), vec![v, d], -1)];
+    for l in 0..spec.model.n_layers {
+        let li = l as i64;
+        canon.push((format!("layer{l}.attn_norm"), vec![d], li));
+        canon.push((format!("layer{l}.wq"), vec![d, d], li));
+        canon.push((format!("layer{l}.wk"), vec![d, d], li));
+        canon.push((format!("layer{l}.wv"), vec![d, d], li));
+        canon.push((format!("layer{l}.wo"), vec![d, d], li));
+        canon.push((format!("layer{l}.mlp_norm"), vec![d], li));
+        canon.push((format!("layer{l}.w1"), vec![d, f], li));
+        canon.push((format!("layer{l}.w3"), vec![d, f], li));
+        canon.push((format!("layer{l}.w2"), vec![f, d], li));
+    }
+    canon.push(("final_norm".into(), vec![d], -2));
+    canon.push(("lm_head".into(), vec![d, v], -2));
+
+    // Fragment-major packing.
+    let mut leaves: Vec<LeafMeta> = Vec::new();
+    let mut sizes = vec![0usize; k];
+    let mut off = 0usize;
+    for p in 0..k {
+        let frag_off = off;
+        for (name, shape, layer) in &canon {
+            if fragment_of(*layer, k) != p {
+                continue;
+            }
+            let size: usize = shape.iter().product();
+            leaves.push(LeafMeta {
+                name: name.clone(),
+                shape: shape.clone(),
+                offset: off,
+                size,
+                fragment: p,
+            });
+            off += size;
+        }
+        sizes[p] = off - frag_off;
+    }
+    let frags = FragmentTable::from_sizes(&sizes);
+
+    let leaf_off = |name: &str| -> usize {
+        leaves
+            .iter()
+            .find(|l| l.name == name)
+            .unwrap_or_else(|| panic!("missing leaf {name}"))
+            .offset
+    };
+    let layers = (0..spec.model.n_layers)
+        .map(|l| LayerOff {
+            attn_norm: leaf_off(&format!("layer{l}.attn_norm")),
+            wq: leaf_off(&format!("layer{l}.wq")),
+            wk: leaf_off(&format!("layer{l}.wk")),
+            wv: leaf_off(&format!("layer{l}.wv")),
+            wo: leaf_off(&format!("layer{l}.wo")),
+            mlp_norm: leaf_off(&format!("layer{l}.mlp_norm")),
+            w1: leaf_off(&format!("layer{l}.w1")),
+            w3: leaf_off(&format!("layer{l}.w3")),
+            w2: leaf_off(&format!("layer{l}.w2")),
+        })
+        .collect();
+    Layout {
+        embed: leaf_off("embed"),
+        layers,
+        final_norm: leaf_off("final_norm"),
+        lm_head: leaf_off("lm_head"),
+        leaves,
+        frags,
+        total: off,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense kernels (row-major, vecops 8-lane style)
+// ---------------------------------------------------------------------
+
+/// out[n,p] = a[n,m] @ b[m,p] — axpy inner loop, every access contiguous.
+fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
+    debug_assert_eq!(out.len(), n * p);
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(b.len(), m * p);
+    for i in 0..n {
+        let row = &mut out[i * p..(i + 1) * p];
+        row.fill(0.0);
+        for j in 0..m {
+            axpy(row, a[i * m + j], &b[j * p..(j + 1) * p]);
+        }
+    }
+}
+
+/// out[n,m] = dout[n,p] @ bᵀ where b is [m,p] — dot-product inner loop.
+fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
+    debug_assert_eq!(out.len(), n * m);
+    for i in 0..n {
+        let drow = &dout[i * p..(i + 1) * p];
+        for j in 0..m {
+            out[i * m + j] = dot(drow, &b[j * p..(j + 1) * p]);
+        }
+    }
+}
+
+/// gb[m,p] += aᵀ[m,n] @ dout[n,p] — weight-gradient accumulation.
+fn matmul_at_acc(gb: &mut [f32], a: &[f32], dout: &[f32], n: usize, m: usize, p: usize) {
+    debug_assert_eq!(gb.len(), m * p);
+    for i in 0..n {
+        let drow = &dout[i * p..(i + 1) * p];
+        for j in 0..m {
+            axpy(&mut gb[j * p..(j + 1) * p], a[i * m + j], drow);
+        }
+    }
+}
+
+/// y[i] = x[i] · rinv(row) · gain — saves 1/rms per row for backward.
+fn rmsnorm(y: &mut [f32], rinv: &mut [f32], x: &[f32], gain: &[f32], n: usize, d: usize) {
+    for i in 0..n {
+        let xr = &x[i * d..(i + 1) * d];
+        let ms = dot(xr, xr) / d as f32;
+        let r = 1.0 / (ms + RMS_EPS).sqrt();
+        rinv[i] = r;
+        let yr = &mut y[i * d..(i + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * r * gain[j];
+        }
+    }
+}
+
+/// RMSNorm backward: accumulates dx into `dx_acc` (residual-friendly) and
+/// the gain gradient into `dgain`.
+fn rmsnorm_backward(
+    dx_acc: &mut [f32],
+    dgain: &mut [f32],
+    dy: &[f32],
+    x: &[f32],
+    rinv: &[f32],
+    gain: &[f32],
+    n: usize,
+    d: usize,
+) {
+    for i in 0..n {
+        let (xr, dyr) = (&x[i * d..(i + 1) * d], &dy[i * d..(i + 1) * d]);
+        let r = rinv[i];
+        // t = dy ⊙ gain; dx = r·t − x·(r³/D)·⟨t, x⟩; dgain += dy ⊙ x · r.
+        let mut tx = 0.0f32;
+        for j in 0..d {
+            tx += dyr[j] * gain[j] * xr[j];
+        }
+        let c = r * r * r * tx / d as f32;
+        let dxr = &mut dx_acc[i * d..(i + 1) * d];
+        for j in 0..d {
+            dxr[j] += r * dyr[j] * gain[j] - c * xr[j];
+            dgain[j] += dyr[j] * xr[j] * r;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scratch: every buffer a forward+backward pass needs, allocated once
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct LayerScratch {
+    hn_attn: Vec<f32>,  // RMSNormed attention input   [n·D]
+    rinv_attn: Vec<f32>,// per-row 1/rms               [n]
+    q: Vec<f32>,        // post-RoPE queries           [n·D]
+    k: Vec<f32>,        // post-RoPE keys              [n·D]
+    v: Vec<f32>,        // values                      [n·D]
+    probs: Vec<f32>,    // softmax attention           [B·nh·T·T]
+    ctx: Vec<f32>,      // attention context (pre-wo)  [n·D]
+    x_mid: Vec<f32>,    // residual after attention    [n·D]
+    hn_mlp: Vec<f32>,   // RMSNormed MLP input         [n·D]
+    rinv_mlp: Vec<f32>, // per-row 1/rms               [n]
+    u: Vec<f32>,        // x@w1                        [n·F]
+    g3: Vec<f32>,       // x@w3                        [n·F]
+    s: Vec<f32>,        // silu(u)·g3                  [n·F]
+    x_out: Vec<f32>,    // residual after MLP          [n·D]
+}
+
+#[derive(Debug)]
+struct Scratch {
+    x0: Vec<f32>,      // embeddings [n·D]
+    layers: Vec<LayerScratch>,
+    xf: Vec<f32>,      // final normed [n·D]
+    rinv_f: Vec<f32>,  // [n]
+    logits: Vec<f32>,  // [n·V]; reused in place as dlogits in backward
+    // backward-only (shared across layers)
+    grad: Vec<f32>,    // [P]
+    d_x: Vec<f32>,     // [n·D]
+    d_res: Vec<f32>,   // [n·D]
+    d_h: Vec<f32>,     // [n·D]
+    d_q: Vec<f32>,     // [n·D]
+    d_k: Vec<f32>,     // [n·D]
+    d_v: Vec<f32>,     // [n·D]
+    d_p: Vec<f32>,     // [T·T] per (b,h)
+    d_u: Vec<f32>,     // [n·F]
+    d_g3: Vec<f32>,    // [n·F]
+    d_s: Vec<f32>,     // [n·F]
+}
+
+impl Scratch {
+    /// `with_backward = false` leaves the backward-only buffers (grad and
+    /// the d_* family) empty — forward-only evaluation never touches them,
+    /// so pooled eval scratch stays roughly half the size of train scratch.
+    fn new(m: &ModelMeta, total: usize, with_backward: bool) -> Scratch {
+        let (b, t, d, f, v) = (m.batch_size, m.seq_len, m.d_model, m.d_ff, m.vocab_size);
+        let n = b * t;
+        let bw = |len: usize| if with_backward { vec![0.0; len] } else { Vec::new() };
+        let layer = || LayerScratch {
+            hn_attn: vec![0.0; n * d],
+            rinv_attn: vec![0.0; n],
+            q: vec![0.0; n * d],
+            k: vec![0.0; n * d],
+            v: vec![0.0; n * d],
+            probs: vec![0.0; b * m.n_heads * t * t],
+            ctx: vec![0.0; n * d],
+            x_mid: vec![0.0; n * d],
+            hn_mlp: vec![0.0; n * d],
+            rinv_mlp: vec![0.0; n],
+            u: vec![0.0; n * f],
+            g3: vec![0.0; n * f],
+            s: vec![0.0; n * f],
+            x_out: vec![0.0; n * d],
+        };
+        Scratch {
+            x0: vec![0.0; n * d],
+            layers: (0..m.n_layers).map(|_| layer()).collect(),
+            xf: vec![0.0; n * d],
+            rinv_f: vec![0.0; n],
+            logits: vec![0.0; n * v],
+            grad: bw(total),
+            d_x: bw(n * d),
+            d_res: bw(n * d),
+            d_h: bw(n * d),
+            d_q: bw(n * d),
+            d_k: bw(n * d),
+            d_v: bw(n * d),
+            d_p: bw(t * t),
+            d_u: bw(n * f),
+            d_g3: bw(n * f),
+            d_s: bw(n * f),
+        }
+    }
+}
+
+/// One worker's resident state: flat (θ, m, v, step) plus its private
+/// forward/backward scratch.
+#[derive(Debug)]
+pub struct NativeWorker {
+    state: TrainState,
+    scratch: Scratch,
+}
+
+// ---------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------
+
+pub struct NativeBackend {
+    spec: NativeSpec,
+    layout: Layout,
+    init: Vec<f32>,
+    /// RoPE tables: cos/sin of t·freq_j, [T · dh/2] each.
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+    /// Recycled eval scratch (validation batches run concurrently).
+    eval_scratch: Mutex<Vec<Box<Scratch>>>,
+}
+
+impl NativeBackend {
+    pub fn new(spec: NativeSpec) -> anyhow::Result<NativeBackend> {
+        anyhow::ensure!(
+            spec.model.d_model % spec.model.n_heads == 0,
+            "d_model must be divisible by n_heads"
+        );
+        let dh = spec.model.d_model / spec.model.n_heads;
+        anyhow::ensure!(dh % 2 == 0, "head_dim must be even for RoPE");
+        let layout = build_layout(&spec);
+        let init = init_flat(&spec, &layout);
+        let half = dh / 2;
+        let t_len = spec.model.seq_len;
+        let mut rope_cos = vec![0.0f32; t_len * half];
+        let mut rope_sin = vec![0.0f32; t_len * half];
+        for t in 0..t_len {
+            for j in 0..half {
+                let freq = 1.0 / (ROPE_THETA as f64).powf(j as f64 / half as f64);
+                let ang = t as f64 * freq;
+                rope_cos[t * half + j] = ang.cos() as f32;
+                rope_sin[t * half + j] = ang.sin() as f32;
+            }
+        }
+        Ok(NativeBackend {
+            spec,
+            layout,
+            init,
+            rope_cos,
+            rope_sin,
+            eval_scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn preset(name: &str) -> anyhow::Result<NativeBackend> {
+        NativeBackend::new(NativeSpec::preset(name)?)
+    }
+
+    pub fn spec(&self) -> &NativeSpec {
+        &self.spec
+    }
+
+    pub fn leaves(&self) -> &[LeafMeta] {
+        &self.layout.leaves
+    }
+
+    fn worker<'a>(&self, w: &'a WorkerHandle) -> anyhow::Result<&'a NativeWorker> {
+        w.get::<NativeWorker>()
+    }
+
+    fn worker_mut<'a>(&self, w: &'a mut WorkerHandle) -> anyhow::Result<&'a mut NativeWorker> {
+        w.get_mut::<NativeWorker>()
+    }
+
+    // ------------------------------------------------------------------
+    // forward / backward
+    // ------------------------------------------------------------------
+
+    /// RoPE rotation applied in place to every head slice of `x` [n·D].
+    /// `dir` = 1.0 forward, −1.0 backward (the transpose rotation).
+    fn rope(&self, x: &mut [f32], dir: f32) {
+        let m = &self.spec.model;
+        let (t_len, d, nh) = (m.seq_len, m.d_model, m.n_heads);
+        let dh = d / nh;
+        let half = dh / 2;
+        let n = x.len() / d;
+        for i in 0..n {
+            let t = i % t_len;
+            let (cos, sin) = (
+                &self.rope_cos[t * half..(t + 1) * half],
+                &self.rope_sin[t * half..(t + 1) * half],
+            );
+            let row = &mut x[i * d..(i + 1) * d];
+            for h in 0..nh {
+                let head = &mut row[h * dh..(h + 1) * dh];
+                for j in 0..half {
+                    let (a, b) = (head[j], head[j + half]);
+                    let s = dir * sin[j];
+                    head[j] = a * cos[j] - b * s;
+                    head[j + half] = a * s + b * cos[j];
+                }
+            }
+        }
+    }
+
+    /// Forward pass storing every activation needed by backward; returns
+    /// the mean token cross-entropy.
+    fn forward(&self, params: &[f32], tokens: &[i32], targets: &[i32], s: &mut Scratch) -> f32 {
+        let m = &self.spec.model;
+        let lay = &self.layout;
+        let (b, t_len, d, f, v, nh) =
+            (m.batch_size, m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
+        let n = b * t_len;
+        let dh = d / nh;
+        let scale = 1.0 / (dh as f32).sqrt();
+        debug_assert_eq!(tokens.len(), n);
+
+        // Embedding lookup.
+        let embed = &params[lay.embed..lay.embed + v * d];
+        for i in 0..n {
+            let tok = tokens[i] as usize;
+            s.x0[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        }
+
+        for l in 0..m.n_layers {
+            let off = lay.layers[l];
+            // Work around the borrow checker: split the one &mut LayerScratch
+            // out of the vec, everything else is shared reads.
+            let (before, rest) = s.layers.split_at_mut(l);
+            let ls = &mut rest[0];
+            let x_in: &[f32] = if l == 0 { &s.x0 } else { &before[l - 1].x_out };
+
+            rmsnorm(
+                &mut ls.hn_attn,
+                &mut ls.rinv_attn,
+                x_in,
+                &params[off.attn_norm..off.attn_norm + d],
+                n,
+                d,
+            );
+            matmul(&mut ls.q, &ls.hn_attn, &params[off.wq..off.wq + d * d], n, d, d);
+            matmul(&mut ls.k, &ls.hn_attn, &params[off.wk..off.wk + d * d], n, d, d);
+            matmul(&mut ls.v, &ls.hn_attn, &params[off.wv..off.wv + d * d], n, d, d);
+            self.rope(&mut ls.q, 1.0);
+            self.rope(&mut ls.k, 1.0);
+
+            // Causal softmax attention per (batch, head).
+            for bi in 0..b {
+                for h in 0..nh {
+                    let pb = &mut ls.probs
+                        [(bi * nh + h) * t_len * t_len..(bi * nh + h + 1) * t_len * t_len];
+                    for t1 in 0..t_len {
+                        let qrow = &ls.q[((bi * t_len + t1) * d + h * dh)..][..dh];
+                        let prow = &mut pb[t1 * t_len..(t1 + 1) * t_len];
+                        let mut mx = f32::NEG_INFINITY;
+                        for (t2, p_val) in prow.iter_mut().enumerate().take(t1 + 1) {
+                            let krow = &ls.k[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            let sc = dot(qrow, krow) * scale;
+                            *p_val = sc;
+                            if sc > mx {
+                                mx = sc;
+                            }
+                        }
+                        let mut z = 0.0f32;
+                        for p_val in prow.iter_mut().take(t1 + 1) {
+                            *p_val = (*p_val - mx).exp();
+                            z += *p_val;
+                        }
+                        let inv = 1.0 / z;
+                        for p_val in prow.iter_mut().take(t1 + 1) {
+                            *p_val *= inv;
+                        }
+                        for p_val in prow.iter_mut().skip(t1 + 1) {
+                            *p_val = 0.0;
+                        }
+                        // ctx row = Σ_t2 p·v_t2
+                        let crow = &mut ls.ctx[((bi * t_len + t1) * d + h * dh)..][..dh];
+                        crow.fill(0.0);
+                        for t2 in 0..=t1 {
+                            let vrow = &ls.v[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            axpy(crow, pb[t1 * t_len + t2], vrow);
+                        }
+                    }
+                }
+            }
+
+            // x_mid = x_in + ctx @ wo (matmul into x_mid, then add residual).
+            matmul(&mut ls.x_mid, &ls.ctx, &params[off.wo..off.wo + d * d], n, d, d);
+            vecops::add_assign(&mut ls.x_mid, x_in);
+
+            // SwiGLU MLP: x_out = x_mid + (silu(x̂@w1) ⊙ (x̂@w3)) @ w2.
+            rmsnorm(
+                &mut ls.hn_mlp,
+                &mut ls.rinv_mlp,
+                &ls.x_mid,
+                &params[off.mlp_norm..off.mlp_norm + d],
+                n,
+                d,
+            );
+            matmul(&mut ls.u, &ls.hn_mlp, &params[off.w1..off.w1 + d * f], n, d, f);
+            matmul(&mut ls.g3, &ls.hn_mlp, &params[off.w3..off.w3 + d * f], n, d, f);
+            for i in 0..n * f {
+                let u = ls.u[i];
+                let sig = 1.0 / (1.0 + (-u).exp());
+                ls.s[i] = u * sig * ls.g3[i];
+            }
+            matmul(&mut ls.x_out, &ls.s, &params[off.w2..off.w2 + f * d], n, f, d);
+            vecops::add_assign(&mut ls.x_out, &ls.x_mid);
+        }
+
+        // Final norm + untied LM head + mean token cross-entropy.
+        let x_last: &[f32] =
+            if m.n_layers == 0 { &s.x0 } else { &s.layers[m.n_layers - 1].x_out };
+        rmsnorm(
+            &mut s.xf,
+            &mut s.rinv_f,
+            x_last,
+            &params[lay.final_norm..lay.final_norm + d],
+            n,
+            d,
+        );
+        matmul(&mut s.logits, &s.xf, &params[lay.lm_head..lay.lm_head + d * v], n, d, v);
+        let mut loss = 0.0f64;
+        for i in 0..n {
+            let row = &s.logits[i * v..(i + 1) * v];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
+            let logz = mx + z.ln();
+            loss += (logz - row[targets[i] as usize]) as f64;
+        }
+        (loss / n as f64) as f32
+    }
+
+    /// Backward pass into `s.grad` (overwritten). Must be called right
+    /// after [`NativeBackend::forward`] on the same scratch.
+    fn backward(&self, params: &[f32], tokens: &[i32], targets: &[i32], s: &mut Scratch) {
+        let m = &self.spec.model;
+        let lay = &self.layout;
+        let (b, t_len, d, f, v, nh) =
+            (m.batch_size, m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
+        let n = b * t_len;
+        let dh = d / nh;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        s.grad.fill(0.0);
+
+        // dlogits in place: (softmax − onehot) / n.
+        let inv_n = 1.0 / n as f32;
+        for i in 0..n {
+            let row = &mut s.logits[i * v..(i + 1) * v];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut z = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                z += *x;
+            }
+            let inv_z = 1.0 / z;
+            for x in row.iter_mut() {
+                *x *= inv_z * inv_n;
+            }
+            row[targets[i] as usize] -= inv_n;
+        }
+
+        // LM head: d_xf = dlogits @ lm_headᵀ; g_lm += xfᵀ @ dlogits.
+        let lm = &params[lay.lm_head..lay.lm_head + d * v];
+        matmul_bt(&mut s.d_h, &s.logits, lm, n, d, v);
+        matmul_at_acc(&mut s.grad[lay.lm_head..lay.lm_head + d * v], &s.xf, &s.logits, n, d, v);
+
+        // Final RMSNorm (d_x accumulates; start from zero).
+        let x_last: &[f32] =
+            if m.n_layers == 0 { &s.x0 } else { &s.layers[m.n_layers - 1].x_out };
+        s.d_x.fill(0.0);
+        rmsnorm_backward(
+            &mut s.d_x,
+            &mut s.grad[lay.final_norm..lay.final_norm + d],
+            &s.d_h,
+            x_last,
+            &s.rinv_f,
+            &params[lay.final_norm..lay.final_norm + d],
+            n,
+            d,
+        );
+
+        for l in (0..m.n_layers).rev() {
+            let off = lay.layers[l];
+            let (before, rest) = s.layers.split_at(l);
+            let ls = &rest[0];
+            let x_in: &[f32] = if l == 0 { &s.x0 } else { &before[l - 1].x_out };
+
+            // ---- MLP block backward: x_out = x_mid + s@w2.
+            // d_s = d_x @ w2ᵀ; g_w2 += sᵀ @ d_x.
+            matmul_bt(&mut s.d_s, &s.d_x, &params[off.w2..off.w2 + f * d], n, f, d);
+            matmul_at_acc(&mut s.grad[off.w2..off.w2 + f * d], &ls.s, &s.d_x, n, f, d);
+            // s = silu(u) ⊙ g3.
+            for i in 0..n * f {
+                let u = ls.u[i];
+                let sig = 1.0 / (1.0 + (-u).exp());
+                let silu = u * sig;
+                s.d_g3[i] = s.d_s[i] * silu;
+                s.d_u[i] = s.d_s[i] * ls.g3[i] * (sig * (1.0 + u * (1.0 - sig)));
+            }
+            // d_hn = d_u @ w1ᵀ + d_g3 @ w3ᵀ; weight grads.
+            matmul_bt(&mut s.d_h, &s.d_u, &params[off.w1..off.w1 + d * f], n, d, f);
+            matmul_bt(&mut s.d_res, &s.d_g3, &params[off.w3..off.w3 + d * f], n, d, f);
+            vecops::add_assign(&mut s.d_h, &s.d_res);
+            matmul_at_acc(&mut s.grad[off.w1..off.w1 + d * f], &ls.hn_mlp, &s.d_u, n, d, f);
+            matmul_at_acc(&mut s.grad[off.w3..off.w3 + d * f], &ls.hn_mlp, &s.d_g3, n, d, f);
+            // RMSNorm backward at x_mid; residual adds d_x through.
+            rmsnorm_backward(
+                &mut s.d_x,
+                &mut s.grad[off.mlp_norm..off.mlp_norm + d],
+                &s.d_h,
+                &ls.x_mid,
+                &ls.rinv_mlp,
+                &params[off.mlp_norm..off.mlp_norm + d],
+                n,
+                d,
+            );
+
+            // ---- Attention block backward: x_mid = x_in + ctx@wo.
+            // d_ctx = d_x @ woᵀ; g_wo += ctxᵀ @ d_x.
+            matmul_bt(&mut s.d_h, &s.d_x, &params[off.wo..off.wo + d * d], n, d, d);
+            matmul_at_acc(&mut s.grad[off.wo..off.wo + d * d], &ls.ctx, &s.d_x, n, d, d);
+            // Per (batch, head): softmax/score backward.
+            s.d_q.fill(0.0);
+            s.d_k.fill(0.0);
+            s.d_v.fill(0.0);
+            for bi in 0..b {
+                for h in 0..nh {
+                    let pb = &ls.probs
+                        [(bi * nh + h) * t_len * t_len..(bi * nh + h + 1) * t_len * t_len];
+                    // dP = d_ctx @ vᵀ ; d_v += Pᵀ @ d_ctx.
+                    for t1 in 0..t_len {
+                        let dctx = &s.d_h[((bi * t_len + t1) * d + h * dh)..][..dh];
+                        let prow = &pb[t1 * t_len..(t1 + 1) * t_len];
+                        let dprow = &mut s.d_p[t1 * t_len..(t1 + 1) * t_len];
+                        for t2 in 0..=t1 {
+                            let vrow = &ls.v[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            dprow[t2] = dot(dctx, vrow);
+                            let dvrow = &mut s.d_v[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            axpy(dvrow, prow[t2], dctx);
+                        }
+                        // dS = P ⊙ (dP − ⟨dP, P⟩) on the causal prefix.
+                        let mut acc = 0.0f32;
+                        for t2 in 0..=t1 {
+                            acc += dprow[t2] * prow[t2];
+                        }
+                        for t2 in 0..=t1 {
+                            dprow[t2] = prow[t2] * (dprow[t2] - acc);
+                        }
+                        // d_q row += dS @ K · scale; d_k rows += dSᵀ @ q · scale.
+                        let qrow = &ls.q[((bi * t_len + t1) * d + h * dh)..][..dh];
+                        // (d_q and q are disjoint buffers; split borrows.)
+                        for t2 in 0..=t1 {
+                            let w = dprow[t2] * scale;
+                            let krow = &ls.k[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            let dqrow = &mut s.d_q[((bi * t_len + t1) * d + h * dh)..][..dh];
+                            axpy(dqrow, w, krow);
+                            let dkrow = &mut s.d_k[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            axpy(dkrow, w, qrow);
+                        }
+                    }
+                }
+            }
+            // Undo RoPE (transpose rotation) on d_q/d_k.
+            self.rope(&mut s.d_q, -1.0);
+            self.rope(&mut s.d_k, -1.0);
+            // d_hn = d_q@wqᵀ + d_k@wkᵀ + d_v@wvᵀ; weight grads.
+            matmul_bt(&mut s.d_h, &s.d_q, &params[off.wq..off.wq + d * d], n, d, d);
+            matmul_bt(&mut s.d_res, &s.d_k, &params[off.wk..off.wk + d * d], n, d, d);
+            vecops::add_assign(&mut s.d_h, &s.d_res);
+            matmul_bt(&mut s.d_res, &s.d_v, &params[off.wv..off.wv + d * d], n, d, d);
+            vecops::add_assign(&mut s.d_h, &s.d_res);
+            matmul_at_acc(&mut s.grad[off.wq..off.wq + d * d], &ls.hn_attn, &s.d_q, n, d, d);
+            matmul_at_acc(&mut s.grad[off.wk..off.wk + d * d], &ls.hn_attn, &s.d_k, n, d, d);
+            matmul_at_acc(&mut s.grad[off.wv..off.wv + d * d], &ls.hn_attn, &s.d_v, n, d, d);
+            // RMSNorm backward at x_in; residual passthrough stays in d_x.
+            rmsnorm_backward(
+                &mut s.d_x,
+                &mut s.grad[off.attn_norm..off.attn_norm + d],
+                &s.d_h,
+                x_in,
+                &ls.rinv_attn,
+                &params[off.attn_norm..off.attn_norm + d],
+                n,
+                d,
+            );
+        }
+
+        // Embedding scatter-add.
+        let gemb = &mut s.grad[lay.embed..lay.embed + v * d];
+        for i in 0..n {
+            let tok = tokens[i] as usize;
+            axpy(&mut gemb[tok * d..(tok + 1) * d], 1.0, &s.d_x[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Fused decoupled AdamW with bias correction (8-lane unrolled), same
+    /// formula as the Pallas kernel in python/compile/kernels/elementwise.
+    fn adamw(&self, st: &mut TrainState, grad: &[f32], lr: f32) {
+        let t = &self.spec.train;
+        let (b1, b2, eps, wd) =
+            (t.beta1 as f32, t.beta2 as f32, t.eps as f32, t.weight_decay as f32);
+        let step1 = (st.step + 1) as f64; // 1-indexed for bias correction
+        let bc1 = (1.0 - (t.beta1).powf(step1)) as f32;
+        let bc2 = (1.0 - (t.beta2).powf(step1)) as f32;
+        const LANES: usize = vecops::LANES;
+        let mut pc = st.params.chunks_exact_mut(LANES);
+        let mut mc = st.m.chunks_exact_mut(LANES);
+        let mut vc = st.v.chunks_exact_mut(LANES);
+        let mut gc = grad.chunks_exact(LANES);
+        for (((p, mm), vv), g) in (&mut pc).zip(&mut mc).zip(&mut vc).zip(&mut gc) {
+            for i in 0..LANES {
+                let m2 = b1 * mm[i] + (1.0 - b1) * g[i];
+                let v2 = b2 * vv[i] + (1.0 - b2) * g[i] * g[i];
+                mm[i] = m2;
+                vv[i] = v2;
+                let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + eps) + wd * p[i];
+                p[i] -= lr * upd;
+            }
+        }
+        for (((p, mm), vv), g) in pc
+            .into_remainder()
+            .iter_mut()
+            .zip(mc.into_remainder().iter_mut())
+            .zip(vc.into_remainder().iter_mut())
+            .zip(gc.remainder())
+        {
+            let m2 = b1 * *mm + (1.0 - b1) * g;
+            let v2 = b2 * *vv + (1.0 - b2) * g * g;
+            *mm = m2;
+            *vv = v2;
+            let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + eps) + wd * *p;
+            *p -= lr * upd;
+        }
+    }
+
+    fn check_batch(&self, tokens: &[i32], targets: &[i32]) -> anyhow::Result<()> {
+        let n = self.spec.model.batch_size * self.spec.model.seq_len;
+        anyhow::ensure!(
+            tokens.len() == n && targets.len() == n,
+            "batch shape mismatch: got {}/{} tokens, want {n}",
+            tokens.len(),
+            targets.len()
+        );
+        let v = self.spec.model.vocab_size as i32;
+        anyhow::ensure!(
+            tokens.iter().chain(targets).all(|&x| x >= 0 && x < v),
+            "token id out of vocabulary range"
+        );
+        Ok(())
+    }
+}
+
+/// Deterministic scaled-normal init (model.py init_flat): std 0.02,
+/// residual-out projections (wo/w2) scaled by 1/√(2·n_layers), norms at 1.
+fn init_flat(spec: &NativeSpec, layout: &Layout) -> Vec<f32> {
+    let mut rng = Rng::new(spec.seed, 0x1217);
+    let mut flat = vec![0.0f32; layout.total];
+    let resid_scale = 1.0 / (2.0 * spec.model.n_layers as f64).sqrt();
+    for leaf in &layout.leaves {
+        let sl = &mut flat[leaf.offset..leaf.offset + leaf.size];
+        if leaf.name.ends_with("_norm") {
+            sl.fill(1.0);
+        } else {
+            let mut std = 0.02;
+            if leaf.name.ends_with(".wo") || leaf.name.ends_with(".w2") {
+                std *= resid_scale;
+            }
+            for x in sl.iter_mut() {
+                *x = (rng.next_gaussian() * std) as f32;
+            }
+        }
+    }
+    flat
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native".into()
+    }
+
+    fn model(&self) -> &ModelMeta {
+        &self.spec.model
+    }
+
+    fn param_count(&self) -> usize {
+        self.layout.total
+    }
+
+    fn fragments(&self) -> &FragmentTable {
+        &self.layout.frags
+    }
+
+    fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.init.clone())
+    }
+
+    fn create_worker(&self) -> anyhow::Result<WorkerHandle> {
+        Ok(WorkerHandle::new(NativeWorker {
+            state: TrainState::new(self.init.clone()),
+            scratch: Scratch::new(&self.spec.model, self.layout.total, true),
+        }))
+    }
+
+    fn train_step(
+        &self,
+        w: &mut WorkerHandle,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<f32> {
+        self.check_batch(tokens, targets)?;
+        let nw = self.worker_mut(w)?;
+        let (st, sc) = (&mut nw.state, &mut nw.scratch);
+        let loss = self.forward(&st.params, tokens, targets, sc);
+        self.backward(&st.params, tokens, targets, sc);
+        let lr = lr_schedule(st.step, &self.spec.train);
+        self.adamw(st, &sc.grad, lr);
+        st.step += 1;
+        Ok(loss)
+    }
+
+    fn eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> anyhow::Result<f32> {
+        self.check_batch(tokens, targets)?;
+        anyhow::ensure!(params.len() == self.layout.total, "param vector length mismatch");
+        let mut sc = self
+            .eval_scratch
+            .lock()
+            .expect("eval scratch pool poisoned")
+            .pop()
+            .unwrap_or_else(|| {
+                Box::new(Scratch::new(&self.spec.model, self.layout.total, false))
+            });
+        let loss = self.forward(params, tokens, targets, &mut sc);
+        self.eval_scratch
+            .lock()
+            .expect("eval scratch pool poisoned")
+            .push(sc);
+        Ok(loss)
+    }
+
+    fn read_fragment(&self, w: &WorkerHandle, frag: Fragment, out: &mut [f32]) -> anyhow::Result<()> {
+        out.copy_from_slice(&self.worker(w)?.state.params[frag.range()]);
+        Ok(())
+    }
+
+    fn write_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        data: &[f32],
+    ) -> anyhow::Result<()> {
+        self.worker_mut(w)?.state.params[frag.range()].copy_from_slice(data);
+        Ok(())
+    }
+
+    fn delay_comp_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        theta_tp: &[f32],
+        tau: f32,
+        h: f32,
+        lambda: f32,
+    ) -> anyhow::Result<()> {
+        let local = &mut self.worker_mut(w)?.state.params[frag.range()];
+        vecops::fused_delay_comp(local, theta_g, theta_tp, tau, h, lambda);
+        Ok(())
+    }
+
+    fn alpha_blend_fragment(
+        &self,
+        w: &mut WorkerHandle,
+        frag: Fragment,
+        theta_g: &[f32],
+        alpha: f32,
+    ) -> anyhow::Result<()> {
+        let local = &mut self.worker_mut(w)?.state.params[frag.range()];
+        vecops::fused_alpha_blend(local, theta_g, alpha);
+        Ok(())
+    }
+
+    fn mean_params(&self, ws: &[WorkerHandle], out: &mut [f32]) -> anyhow::Result<()> {
+        let rows = validated_rows::<NativeWorker, _>(ws, |w| w.state.params.as_slice())?;
+        vecops::fused_mean_iter(out, rows);
+        Ok(())
+    }
+
+    fn pseudo_mean_fragment(
+        &self,
+        ws: &[WorkerHandle],
+        frag: Fragment,
+        theta_g: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let rows =
+            validated_rows::<NativeWorker, _>(ws, move |w| &w.state.params[frag.range()])?;
+        vecops::fused_pseudo_mean_iter(out, rows, theta_g);
+        Ok(())
+    }
+
+    fn read_state(&self, w: &WorkerHandle, dst: &mut TrainState) -> anyhow::Result<()> {
+        dst.clone_from(&self.worker(w)?.state);
+        Ok(())
+    }
+
+    fn write_state(&self, w: &mut WorkerHandle, src: &TrainState) -> anyhow::Result<()> {
+        self.worker_mut(w)?.state.clone_from(src);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro_spec() -> NativeSpec {
+        NativeSpec {
+            name: "micro".into(),
+            model: model_meta(8, 4, 1, 2, 8, 4, 1),
+            train: train_meta(1e-2, 2, 100),
+            n_fragments: 1,
+            seed: 3,
+        }
+    }
+
+    fn batch(b: &NativeBackend, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let m = b.model();
+        let n = m.batch_size * m.seq_len;
+        let mut rng = Rng::new(seed, 0);
+        let tokens: Vec<i32> =
+            (0..n).map(|_| rng.below(m.vocab_size as u64) as i32).collect();
+        let mut targets = tokens.clone();
+        targets.rotate_left(1);
+        (tokens, targets)
+    }
+
+    #[test]
+    fn layout_tiles_and_matches_param_count() {
+        let b = NativeBackend::preset("tiny").unwrap();
+        let frags = b.fragments();
+        let total: usize = (0..frags.k()).map(|p| frags.get(p).size).sum();
+        assert_eq!(total, b.param_count());
+        let leaf_total: usize = b.leaves().iter().map(|l| l.size).sum();
+        assert_eq!(leaf_total, b.param_count());
+        // Leaves stay inside their fragments.
+        for l in b.leaves() {
+            let f = frags.get(l.fragment);
+            assert!(l.offset >= f.offset && l.offset + l.size <= f.offset + f.size);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_norms_are_one() {
+        let a = NativeBackend::preset("tiny").unwrap();
+        let b = NativeBackend::preset("tiny").unwrap();
+        assert_eq!(a.init_params().unwrap(), b.init_params().unwrap());
+        let init = a.init_params().unwrap();
+        let norm = a.leaves().iter().find(|l| l.name.ends_with("attn_norm")).unwrap();
+        assert!(init[norm.offset..norm.offset + norm.size].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let be = NativeBackend::new(micro_spec()).unwrap();
+        let (tokens, targets) = batch(&be, 5);
+        let params = be.init_params().unwrap();
+        let mut sc = Scratch::new(&be.spec.model, be.layout.total, true);
+        let _ = be.forward(&params, &tokens, &targets, &mut sc);
+        be.backward(&params, &tokens, &targets, &mut sc);
+        let grad = sc.grad.clone();
+        let mut rng = Rng::new(11, 0);
+        let eps = 3e-3f32;
+        let mut checked = 0;
+        while checked < 40 {
+            let i = rng.below(params.len() as u64) as usize;
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let lp = be.forward(&pp, &tokens, &targets, &mut sc);
+            pp[i] = params[i] - eps;
+            let lm = be.forward(&pp, &tokens, &targets, &mut sc);
+            let fd = (lp - lm) / (2.0 * eps);
+            let tol = 2e-2 * (1.0 + fd.abs().max(grad[i].abs()));
+            assert!(
+                (fd - grad[i]).abs() < tol,
+                "param {i}: fd {fd} vs analytic {}",
+                grad[i]
+            );
+            checked += 1;
+        }
+    }
+
+    #[test]
+    fn train_step_learns_fixed_batch() {
+        let be = NativeBackend::preset("tiny").unwrap();
+        let mut w = be.create_worker().unwrap();
+        let (tokens, targets) = batch(&be, 7);
+        let first = be.train_step(&mut w, &tokens, &targets).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = be.train_step(&mut w, &tokens, &targets).unwrap();
+        }
+        assert!(first.is_finite() && last.is_finite());
+        assert!(last < first - 0.1, "no learning: {first} -> {last}");
+        assert_eq!(w.get::<NativeWorker>().unwrap().state.step, 31);
+    }
+
+    #[test]
+    fn eval_at_init_is_near_uniform_and_deterministic() {
+        let be = NativeBackend::preset("tiny").unwrap();
+        let (tokens, targets) = batch(&be, 9);
+        let params = be.init_params().unwrap();
+        let a = be.eval_loss(&params, &tokens, &targets).unwrap();
+        let b = be.eval_loss(&params, &tokens, &targets).unwrap();
+        assert_eq!(a, b);
+        let uniform = (be.model().vocab_size as f32).ln();
+        assert!((a - uniform).abs() < 0.5, "init loss {a} vs ln V {uniform}");
+    }
+
+    #[test]
+    fn train_steps_are_deterministic() {
+        let run = || {
+            let be = NativeBackend::preset("tiny").unwrap();
+            let mut w = be.create_worker().unwrap();
+            let (tokens, targets) = batch(&be, 13);
+            let mut losses = Vec::new();
+            for _ in 0..5 {
+                losses.push(be.train_step(&mut w, &tokens, &targets).unwrap());
+            }
+            let mut st = TrainState::new(vec![0.0; be.param_count()]);
+            be.read_state(&w, &mut st).unwrap();
+            (losses, st.params)
+        };
+        let (l1, p1) = run();
+        let (l2, p2) = run();
+        assert_eq!(l1, l2);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn lr_schedule_warmup_then_cosine() {
+        let t = train_meta(1e-3, 10, 100);
+        assert!((lr_schedule(0, &t) - 1e-4).abs() < 1e-9);
+        assert!((lr_schedule(9, &t) - 1e-3).abs() < 1e-9);
+        // Past warmup the schedule decays toward min_lr_ratio·lr.
+        assert!(lr_schedule(50, &t) < 1e-3);
+        let end = lr_schedule(99, &t);
+        assert!(end >= 1e-4 - 1e-9 && end < 2e-4, "end lr {end}");
+    }
+
+    #[test]
+    fn batch_shape_and_vocab_validated() {
+        let be = NativeBackend::preset("tiny").unwrap();
+        let mut w = be.create_worker().unwrap();
+        assert!(be.train_step(&mut w, &[0; 3], &[0; 3]).is_err());
+        let n = be.model().batch_size * be.model().seq_len;
+        let bad = vec![be.model().vocab_size as i32; n];
+        assert!(be.train_step(&mut w, &bad, &bad).is_err());
+    }
+}

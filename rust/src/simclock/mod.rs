@@ -52,6 +52,18 @@ impl VirtualClock {
     pub fn comm_stall_s(&self) -> f64 {
         self.comm_stall_s
     }
+
+    /// (now, compute_s, comm_stall_s) — checkpointable run context, so a
+    /// restored run continues the same wall-clock curve.
+    pub fn state(&self) -> (f64, f64, f64) {
+        (self.now, self.compute_s, self.comm_stall_s)
+    }
+
+    pub fn restore(&mut self, now: f64, compute_s: f64, comm_stall_s: f64) {
+        self.now = now;
+        self.compute_s = compute_s;
+        self.comm_stall_s = comm_stall_s;
+    }
 }
 
 #[cfg(test)]

@@ -1,20 +1,27 @@
 //! The training orchestrator: drives M simulated datacenter workers in
-//! lockstep local steps (each a PJRT execution of the train_step artifact),
-//! hands control to the configured [`SyncStrategy`] after every step, and
-//! accounts virtual wall-clock through the WAN simulator.
+//! lockstep local steps, hands control to the configured [`SyncStrategy`]
+//! after every step, and accounts virtual wall-clock through the WAN
+//! simulator.
 //!
-//! Worker steps run on a *persistent* worker thread pool (the XLA CPU
-//! client supports concurrent executions) instead of spawning fresh OS
-//! threads every round; the same pool serves CoCoDC's per-worker
-//! delay-compensation fan-out and parallel validation batches.
-//! Communication never runs Python — the entire hot loop is rust +
-//! compiled HLO, and the sync path recycles all fragment-sized buffers
-//! through a [`BufferPool`] (zero steady-state allocations).
+//! Worker training state is *resident in the execution backend* behind
+//! opaque [`WorkerHandle`]s (see `runtime::backend`): the trainer never
+//! touches flat parameter vectors on the hot path — local steps run
+//! entirely backend-side and return only the loss, and the sync path moves
+//! exactly the synchronized fragments through pooled buffers.
+//!
+//! Worker steps fan out on a *persistent* thread pool; the same pool serves
+//! CoCoDC's per-worker delay-compensation fan-out and parallel validation
+//! batches. The entire outer loop is allocation-free in steady state:
+//! batches refill in place, per-round loss slots and the consensus-mean
+//! buffer are trainer-owned scratch, and the sync path recycles all
+//! fragment-sized buffers through a [`BufferPool`]
+//! (tests/alloc_steady_state.rs proves both properties with a counting
+//! global allocator).
 
 use std::path::Path;
 use std::time::Instant;
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{pack_f64, pack_u64, unpack_f64, unpack_u64, Checkpoint};
 use crate::config::RunConfig;
 use crate::coordinator::{
     make_strategy, FragmentTable, GlobalState, SyncStats, SyncStrategy,
@@ -24,11 +31,10 @@ use crate::data::batches::{Batch, BatchStream};
 use crate::data::Split;
 use crate::metrics::Curve;
 use crate::network::WanSimulator;
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{Backend, TrainState, WorkerHandle};
 use crate::simclock::VirtualClock;
 use crate::util::pool::BufferPool;
 use crate::util::threadpool::{ScopedTask, WorkerPool};
-use crate::util::vecops;
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
@@ -51,10 +57,10 @@ pub struct TrainOutcome {
 }
 
 /// One full cross-region training run.
-pub struct Trainer<'e> {
-    engine: &'e Engine,
+pub struct Trainer<'b> {
+    backend: &'b dyn Backend,
     cfg: RunConfig,
-    workers: Vec<TrainState>,
+    workers: Vec<WorkerHandle>,
     global: GlobalState,
     frags: FragmentTable,
     net: WanSimulator,
@@ -63,44 +69,63 @@ pub struct Trainer<'e> {
     streams: Vec<BatchStream>,
     val_batches: Vec<Batch>,
     stats: SyncStats,
-    /// Recycled fragment-sized buffers for the sync hot path.
+    /// Recycled fragment-sized buffers for the sync hot path (and the
+    /// full-size consensus-mean buffer for evaluation).
     bufs: BufferPool,
     /// Persistent worker threads (None when `cfg.parallel_workers` is off
     /// or the host/run has nothing to parallelize).
     threads: Option<WorkerPool>,
+    /// Next local step to execute (1-based; advanced by [`Trainer::step_once`],
+    /// restored from checkpoints).
+    next_step: u32,
+    // Reused per-round scratch (zero steady-state allocations).
+    step_batches: Vec<Batch>,
+    step_losses: Vec<Option<anyhow::Result<f32>>>,
+    eval_losses: Vec<Option<anyhow::Result<f32>>>,
     pub verbose: bool,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, cfg: RunConfig) -> anyhow::Result<Self> {
+impl<'b> Trainer<'b> {
+    pub fn new(backend: &'b dyn Backend, cfg: RunConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let meta = engine.meta();
-        let frags = FragmentTable::from_meta(meta);
-        let init = engine.init_params()?;
-        let workers: Vec<TrainState> =
-            (0..cfg.workers).map(|_| TrainState::new(init.clone())).collect();
+        // The HLO-fragment-op flag is consumed at backend construction; a
+        // mismatch here would silently run a different kernel path than the
+        // config (and any results serialized from it) claims.
+        anyhow::ensure!(
+            cfg.use_hlo_fragment_ops == backend.hlo_fragment_ops(),
+            "use_hlo_fragment_ops mismatch: RunConfig says {} but the backend was \
+             constructed with {}",
+            cfg.use_hlo_fragment_ops,
+            backend.hlo_fragment_ops()
+        );
+        let model = backend.model();
+        let frags = backend.fragments().clone();
+        let init = backend.init_params()?;
+        let workers: Vec<WorkerHandle> = (0..cfg.workers)
+            .map(|_| backend.create_worker())
+            .collect::<anyhow::Result<_>>()?;
         let global = GlobalState::new(&init);
         let net = WanSimulator::new(cfg.network, cfg.workers, cfg.seed);
         let strategy = make_strategy(&cfg, &frags);
         let streams: Vec<BatchStream> = (0..cfg.workers)
             .map(|m| {
                 BatchStream::new(
-                    meta.model.vocab_size,
+                    model.vocab_size,
                     cfg.data,
                     cfg.seed,
                     Split::Train { worker: m, workers: cfg.workers },
-                    meta.model.batch_size,
-                    meta.model.seq_len,
+                    model.batch_size,
+                    model.seq_len,
                 )
             })
             .collect();
         let mut val_stream = BatchStream::new(
-            meta.model.vocab_size,
+            model.vocab_size,
             cfg.data,
             cfg.seed,
             Split::Validation,
-            meta.model.batch_size,
-            meta.model.seq_len,
+            model.batch_size,
+            model.seq_len,
         );
         let val_batches = val_stream.take_batches(cfg.eval_batches);
         let stats = SyncStats::new(frags.k());
@@ -115,8 +140,12 @@ impl<'e> Trainer<'e> {
         } else {
             None
         };
+        let step_batches =
+            (0..cfg.workers).map(|_| Batch::empty(model.batch_size, model.seq_len)).collect();
+        let step_losses = (0..cfg.workers).map(|_| None).collect();
+        let eval_losses = (0..cfg.eval_batches).map(|_| None).collect();
         Ok(Trainer {
-            engine,
+            backend,
             cfg,
             workers,
             global,
@@ -129,122 +158,142 @@ impl<'e> Trainer<'e> {
             stats,
             bufs: BufferPool::new(),
             threads,
+            next_step: 1,
+            step_batches,
+            step_losses,
+            eval_losses,
             verbose: false,
         })
     }
 
     /// Validation loss of the current consensus (mean of worker params).
-    /// Eval batches fan out on the persistent pool; losses are summed in
-    /// batch order, so the result is identical to the serial path.
-    pub fn validation_loss(&self) -> anyhow::Result<f64> {
-        let engine = self.engine;
-        let n = self.workers[0].params.len();
-        let mut mean = vec![0.0f32; n];
-        {
-            let rows: Vec<&[f32]> =
-                self.workers.iter().map(|w| w.params.as_slice()).collect();
-            vecops::mean_of(&mut mean, &rows);
+    /// The mean lives in a pooled buffer; eval batches fan out on the
+    /// persistent pool, and losses are summed in batch order, so the result
+    /// is identical to the serial path.
+    pub fn validation_loss(&mut self) -> anyhow::Result<f64> {
+        let backend = self.backend;
+        let mut mean = self.bufs.take(self.backend.param_count());
+        backend.mean_params(&self.workers, &mut mean)?;
+        for slot in self.eval_losses.iter_mut() {
+            *slot = None;
         }
-        let mut losses: Vec<Option<anyhow::Result<f32>>> =
-            self.val_batches.iter().map(|_| None).collect();
         match &self.threads {
             Some(tp) if self.val_batches.len() > 1 => {
                 let mean_ref: &[f32] = &mean;
                 let tasks: Vec<ScopedTask<'_>> = self
                     .val_batches
                     .iter()
-                    .zip(losses.iter_mut())
+                    .zip(self.eval_losses.iter_mut())
                     .map(|(b, slot)| {
                         Box::new(move || {
-                            *slot = Some(engine.eval_loss(mean_ref, &b.tokens, &b.targets));
+                            *slot = Some(backend.eval_loss(mean_ref, &b.tokens, &b.targets));
                         }) as ScopedTask<'_>
                     })
                     .collect();
                 tp.scoped(tasks);
             }
             _ => {
-                for (b, slot) in self.val_batches.iter().zip(losses.iter_mut()) {
-                    *slot = Some(engine.eval_loss(&mean, &b.tokens, &b.targets));
+                for (b, slot) in self.val_batches.iter().zip(self.eval_losses.iter_mut()) {
+                    *slot = Some(backend.eval_loss(&mean, &b.tokens, &b.targets));
                 }
             }
         }
+        self.bufs.put(mean);
         let mut total = 0.0f64;
-        for l in losses {
-            total += l.expect("eval ran for every batch")? as f64;
+        for l in self.eval_losses.iter_mut() {
+            total += l.take().expect("eval ran for every batch")? as f64;
         }
         Ok(total / self.val_batches.len() as f64)
     }
 
     /// Execute one lockstep round of local steps on all workers, reusing
-    /// the persistent worker pool (no per-step thread spawn).
+    /// the persistent worker pool (no per-step thread spawn) and trainer
+    /// scratch (no per-round allocations).
     fn step_all(&mut self) -> anyhow::Result<f32> {
-        let engine = self.engine;
+        let backend = self.backend;
         let m = self.workers.len();
-        let batches: Vec<Batch> =
-            self.streams.iter_mut().map(|s| s.next_batch()).collect();
-        let mut losses: Vec<Option<anyhow::Result<f32>>> =
-            (0..m).map(|_| None).collect();
+        for (s, b) in self.streams.iter_mut().zip(self.step_batches.iter_mut()) {
+            s.next_batch_into(b);
+        }
+        for slot in self.step_losses.iter_mut() {
+            *slot = None;
+        }
         match &self.threads {
             Some(tp) if m > 1 => {
                 let tasks: Vec<ScopedTask<'_>> = self
                     .workers
                     .iter_mut()
-                    .zip(&batches)
-                    .zip(losses.iter_mut())
+                    .zip(&self.step_batches)
+                    .zip(self.step_losses.iter_mut())
                     .map(|((w, b), slot)| {
                         Box::new(move || {
-                            *slot = Some(engine.train_step(w, &b.tokens, &b.targets));
+                            *slot = Some(backend.train_step(w, &b.tokens, &b.targets));
                         }) as ScopedTask<'_>
                     })
                     .collect();
                 tp.scoped(tasks);
             }
             _ => {
-                for ((w, b), slot) in
-                    self.workers.iter_mut().zip(&batches).zip(losses.iter_mut())
+                for ((w, b), slot) in self
+                    .workers
+                    .iter_mut()
+                    .zip(&self.step_batches)
+                    .zip(self.step_losses.iter_mut())
                 {
-                    *slot = Some(engine.train_step(w, &b.tokens, &b.targets));
+                    *slot = Some(backend.train_step(w, &b.tokens, &b.targets));
                 }
             }
         }
         let mut mean = 0.0f32;
-        for l in losses {
-            mean += l.expect("every worker stepped")? / m as f32;
+        for l in self.step_losses.iter_mut() {
+            mean += l.take().expect("every worker stepped")? / m as f32;
         }
         Ok(mean)
     }
 
-    /// Run `cfg.total_steps` local steps; returns the outcome with the
-    /// validation curve (evaluated every `cfg.eval_every` steps).
+    /// One full training step: lockstep local steps, clock accounting and
+    /// the strategy's post-step sync work. Returns (step, mean train loss).
+    pub fn step_once(&mut self) -> anyhow::Result<(u32, f32)> {
+        let step = self.next_step;
+        let loss = self.step_all()?;
+        self.clock.advance_compute(self.cfg.network.step_compute_s);
+        let mut ctx = SyncCtx {
+            workers: &mut self.workers,
+            global: &mut self.global,
+            net: &mut self.net,
+            clock: &mut self.clock,
+            backend: self.backend,
+            cfg: &self.cfg,
+            frags: &self.frags,
+            stats: &mut self.stats,
+            pool: &mut self.bufs,
+            threads: self.threads.as_ref(),
+        };
+        self.strategy.post_step(step, &mut ctx)?;
+        self.next_step = step + 1;
+        Ok((step, loss))
+    }
+
+    /// Run local steps up to `cfg.total_steps` (continuing from a restored
+    /// checkpoint if any); returns the outcome with the validation curve
+    /// (evaluated every `cfg.eval_every` steps).
     pub fn run(&mut self) -> anyhow::Result<TrainOutcome> {
         let t0 = Instant::now();
         let mut curve = Curve::new(self.strategy.name());
+        let start = self.next_step - 1;
         let v0 = self.validation_loss()?;
-        curve.push(0, 0.0, v0);
+        curve.push(start, self.clock.now(), v0);
         if self.verbose {
             eprintln!(
-                "[{}] step 0 val_loss={v0:.4} ppl={:.2}",
+                "[{}] step {start} val_loss={v0:.4} ppl={:.2}",
                 self.strategy.name(),
                 v0.exp()
             );
         }
         let mut last_train_loss = f32::NAN;
-        for step in 1..=self.cfg.total_steps {
-            last_train_loss = self.step_all()?;
-            self.clock.advance_compute(self.cfg.network.step_compute_s);
-            let mut ctx = SyncCtx {
-                workers: &mut self.workers,
-                global: &mut self.global,
-                net: &mut self.net,
-                clock: &mut self.clock,
-                engine: Some(self.engine),
-                cfg: &self.cfg,
-                frags: &self.frags,
-                stats: &mut self.stats,
-                pool: &mut self.bufs,
-                threads: self.threads.as_ref(),
-            };
-            self.strategy.post_step(step, &mut ctx)?;
+        while self.next_step <= self.cfg.total_steps {
+            let (step, loss) = self.step_once()?;
+            last_train_loss = loss;
             if step % self.cfg.eval_every == 0 || step == self.cfg.total_steps {
                 let v = self.validation_loss()?;
                 curve.push(step, self.clock.now(), v);
@@ -275,21 +324,69 @@ impl<'e> Trainer<'e> {
         })
     }
 
-    /// Snapshot the full training state.
-    pub fn checkpoint(&self, step: u32) -> Checkpoint {
+    /// Snapshot the full training state *and* run context: worker states,
+    /// global consensus, virtual clock, sync statistics, WAN simulator and
+    /// data-stream cursors — everything a resumed run needs to continue the
+    /// same trajectory and report the same wall-clock curve.
+    ///
+    /// Note: in-flight fragment syncs are not captured; checkpoints taken
+    /// while transfers are pending resume with those syncs re-initiated by
+    /// the strategy's schedule.
+    pub fn checkpoint(&self, step: u32) -> anyhow::Result<Checkpoint> {
         let mut ck = Checkpoint::new(step);
         ck.insert("global/theta_g", self.global.theta_g.clone());
         ck.insert("global/outer_momentum", self.global.outer_momentum.clone());
+        let mut st = TrainState::new(vec![0.0; self.backend.param_count()]);
         for (i, w) in self.workers.iter().enumerate() {
-            ck.insert(&format!("worker{i}/params"), w.params.clone());
-            ck.insert(&format!("worker{i}/m"), w.m.clone());
-            ck.insert(&format!("worker{i}/v"), w.v.clone());
-            ck.insert(&format!("worker{i}/step"), vec![w.step as f32]);
+            self.backend.read_state(w, &mut st)?;
+            ck.insert(&format!("worker{i}/params"), st.params.clone());
+            ck.insert(&format!("worker{i}/m"), st.m.clone());
+            ck.insert(&format!("worker{i}/v"), st.v.clone());
+            // Bit-exact (an f32 cast would round step counts above 2^24,
+            // shifting the restored LR schedule / bias correction).
+            ck.insert(&format!("worker{i}/step"), pack_u64(st.step as u64).to_vec());
         }
-        ck
+        // Run context (bit-exact packing; see checkpoint::pack_u64).
+        let (now, compute, stall) = self.clock.state();
+        let mut clock = Vec::with_capacity(6);
+        clock.extend(pack_f64(now));
+        clock.extend(pack_f64(compute));
+        clock.extend(pack_f64(stall));
+        ck.insert("run/clock", clock);
+        let s = &self.stats;
+        let mut stats = Vec::new();
+        for c in [s.syncs_initiated, s.syncs_completed, s.staleness_guard_hits, s.apply_stalls] {
+            stats.extend(pack_u64(c as u64));
+        }
+        stats.extend(pack_f64(s.bytes));
+        for &c in &s.per_fragment {
+            stats.extend(pack_u64(c as u64));
+        }
+        ck.insert("run/stats", stats);
+        let (busy, bytes, transfers, rng) = self.net.state();
+        let mut net = Vec::new();
+        net.extend(pack_f64(busy));
+        net.extend(pack_f64(bytes));
+        net.extend(pack_u64(transfers as u64));
+        for x in rng {
+            net.extend(pack_u64(x));
+        }
+        ck.insert("run/net", net);
+        for (i, stream) in self.streams.iter().enumerate() {
+            let mut cur = Vec::with_capacity(8);
+            for x in stream.cursor() {
+                cur.extend(pack_u64(x));
+            }
+            ck.insert(&format!("run/stream{i}"), cur);
+        }
+        Ok(ck)
     }
 
-    /// Restore from a checkpoint produced by [`Trainer::checkpoint`].
+    /// Restore from a checkpoint produced by [`Trainer::checkpoint`]:
+    /// training state always; run context (clock, stats, WAN, stream
+    /// cursors) when present, so `run()` continues at `ck.step + 1` on the
+    /// same trajectory. Older checkpoints without run context restore the
+    /// state only.
     pub fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
         let need = |name: &str| {
             ck.get(name)
@@ -297,24 +394,102 @@ impl<'e> Trainer<'e> {
         };
         self.global.theta_g = need("global/theta_g")?.to_vec();
         self.global.outer_momentum = need("global/outer_momentum")?.to_vec();
+        let n = self.backend.param_count();
+        anyhow::ensure!(
+            self.global.theta_g.len() == n && self.global.outer_momentum.len() == n,
+            "checkpoint global state does not match this backend's {n} params"
+        );
         for (i, w) in self.workers.iter_mut().enumerate() {
-            w.params = need(&format!("worker{i}/params"))?.to_vec();
-            w.m = need(&format!("worker{i}/m"))?.to_vec();
-            w.v = need(&format!("worker{i}/v"))?.to_vec();
-            w.step = need(&format!("worker{i}/step"))?[0] as u32;
+            let mut st = TrainState::new(vec![0.0; n]);
+            for (dst, name) in [
+                (&mut st.params, format!("worker{i}/params")),
+                (&mut st.m, format!("worker{i}/m")),
+                (&mut st.v, format!("worker{i}/v")),
+            ] {
+                let src = need(&name)?;
+                anyhow::ensure!(src.len() == n, "checkpoint section {name} length mismatch");
+                dst.copy_from_slice(src);
+            }
+            let step_sec = need(&format!("worker{i}/step"))?;
+            st.step = match step_sec.len() {
+                // Bit-exact packing (current format).
+                2 => unpack_u64(step_sec[0], step_sec[1]) as u32,
+                // Legacy checkpoints stored the counter as a plain f32.
+                1 => step_sec[0] as u32,
+                n => anyhow::bail!("worker{i}/step section malformed ({n} values)"),
+            };
+            self.backend.write_state(w, &st)?;
         }
+        if let Some(c) = ck.get("run/clock") {
+            anyhow::ensure!(c.len() == 6, "run/clock section malformed");
+            self.clock.restore(
+                unpack_f64(c[0], c[1]),
+                unpack_f64(c[2], c[3]),
+                unpack_f64(c[4], c[5]),
+            );
+        }
+        if let Some(s) = ck.get("run/stats") {
+            let k = self.frags.k();
+            anyhow::ensure!(s.len() == 10 + 2 * k, "run/stats section malformed");
+            self.stats.syncs_initiated = unpack_u64(s[0], s[1]) as usize;
+            self.stats.syncs_completed = unpack_u64(s[2], s[3]) as usize;
+            self.stats.staleness_guard_hits = unpack_u64(s[4], s[5]) as usize;
+            self.stats.apply_stalls = unpack_u64(s[6], s[7]) as usize;
+            self.stats.bytes = unpack_f64(s[8], s[9]);
+            for p in 0..k {
+                self.stats.per_fragment[p] = unpack_u64(s[10 + 2 * p], s[11 + 2 * p]) as usize;
+            }
+        }
+        if let Some(nst) = ck.get("run/net") {
+            anyhow::ensure!(nst.len() == 14, "run/net section malformed");
+            let rng = [
+                unpack_u64(nst[6], nst[7]),
+                unpack_u64(nst[8], nst[9]),
+                unpack_u64(nst[10], nst[11]),
+                unpack_u64(nst[12], nst[13]),
+            ];
+            self.net.restore(
+                unpack_f64(nst[0], nst[1]),
+                unpack_f64(nst[2], nst[3]),
+                unpack_u64(nst[4], nst[5]) as usize,
+                rng,
+            );
+        }
+        for (i, stream) in self.streams.iter_mut().enumerate() {
+            if let Some(cur) = ck.get(&format!("run/stream{i}")) {
+                anyhow::ensure!(cur.len() == 8, "run/stream{i} section malformed");
+                stream.set_cursor([
+                    unpack_u64(cur[0], cur[1]),
+                    unpack_u64(cur[2], cur[3]),
+                    unpack_u64(cur[4], cur[5]),
+                    unpack_u64(cur[6], cur[7]),
+                ]);
+            }
+        }
+        self.next_step = ck.step + 1;
         Ok(())
     }
 
     pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P, step: u32) -> anyhow::Result<()> {
-        self.checkpoint(step).save(path)
+        self.checkpoint(step)?.save(path)
     }
 
     pub fn config(&self) -> &RunConfig {
         &self.cfg
     }
 
-    pub fn workers(&self) -> &[TrainState] {
+    pub fn backend(&self) -> &'b dyn Backend {
+        self.backend
+    }
+
+    pub fn workers(&self) -> &[WorkerHandle] {
         &self.workers
+    }
+
+    /// Full flat parameter vector of worker `i` (diagnostics/tests; copies).
+    pub fn worker_params(&self, i: usize) -> anyhow::Result<Vec<f32>> {
+        let mut st = TrainState::new(vec![0.0; self.backend.param_count()]);
+        self.backend.read_state(&self.workers[i], &mut st)?;
+        Ok(st.params)
     }
 }

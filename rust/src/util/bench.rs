@@ -123,6 +123,17 @@ impl HotpathReport {
         self.entries.push((op.to_string(), n, row));
     }
 
+    /// Record a row with arbitrary numeric fields (e.g. the end-to-end
+    /// train-loop rows: steps_per_s / sync_overhead_pct). Keyed by (op, n)
+    /// like every other row.
+    pub fn push_custom(&mut self, op: &str, n: usize, fields: &[(&str, f64)]) {
+        let mut kv = vec![("op", s(op)), ("n", num(n as f64))];
+        for (k, v) in fields {
+            kv.push((*k, num(*v)));
+        }
+        self.entries.push((op.to_string(), n, obj(kv)));
+    }
+
     /// `<crate root>/BENCH_hotpath.json`.
     pub fn default_path() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json")

@@ -124,6 +124,42 @@ fn add_scale_sub(acc: &mut [f32], x: &[f32], s: f32, g: &[f32]) {
     }
 }
 
+/// acc[i] += s * x[i] — the row-major matmul inner loop of the native
+/// backend's transformer kernels (out_row += a[n][k] * b_row_k).
+pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut xc) {
+        for l in 0..LANES {
+            a[l] += s * b[l];
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += s * b;
+    }
+}
+
+/// Σ_i a[i]·b[i] with 8 independent f32 accumulator lanes (the shape LLVM
+/// turns into a vertical SIMD reduction); used by the native backend for
+/// attention scores and dA = dOut·Bᵀ rows.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (x, y) in (&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            lanes[l] += x[l] * y[l];
+        }
+    }
+    let mut total: f32 = lanes.iter().sum();
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        total += x * y;
+    }
+    total
+}
+
 /// Euclidean norm (f64 accumulation for stability on large fragments).
 /// Deliberately sequential — see the module docs.
 pub fn l2_norm(x: &[f32]) -> f64 {
@@ -133,18 +169,31 @@ pub fn l2_norm(x: &[f32]) -> f64 {
 /// Mean of `rows` (equal-length slices) written into `out`. The scale pass
 /// is fused into the last accumulation.
 pub fn mean_of(out: &mut [f32], rows: &[&[f32]]) {
-    assert!(!rows.is_empty());
+    fused_mean_iter(out, rows.iter().copied());
+}
+
+/// Iterator-driven mean (same association order as [`mean_of`]) — lets the
+/// backends average resident worker slices without collecting references.
+pub fn fused_mean_iter<'r, I>(out: &mut [f32], rows: I)
+where
+    I: ExactSizeIterator<Item = &'r [f32]>,
+{
     let m = rows.len();
-    if m == 1 {
-        out.copy_from_slice(rows[0]);
-        return;
-    }
+    assert!(m > 0, "mean needs at least one row");
     let inv = 1.0 / m as f32;
-    out.copy_from_slice(rows[0]);
-    for r in &rows[1..m - 1] {
-        add_assign(out, r);
+    for (k, row) in rows.enumerate() {
+        debug_assert_eq!(row.len(), out.len());
+        if k == 0 {
+            out.copy_from_slice(row);
+            if m == 1 {
+                return;
+            }
+        } else if k + 1 == m {
+            add_scale(out, row, inv);
+        } else {
+            add_assign(out, row);
+        }
     }
-    add_scale(out, rows[m - 1], inv);
 }
 
 /// Averaged pseudo-gradient Δθ^g = mean_m(rows[m]) − θ_g (paper Eq. 1) in
@@ -495,6 +544,22 @@ mod tests {
         let mut out = vec![0.0; 2];
         mean_of(&mut out, &[&r1, &r2]);
         assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn axpy_and_dot_basic() {
+        let mut acc = vec![1.0f32; 19];
+        let x: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        axpy(&mut acc, 2.0, &x);
+        for (i, v) in acc.iter().enumerate() {
+            assert_eq!(*v, 1.0 + 2.0 * i as f32);
+        }
+        // dot with a mixed remainder length
+        let a: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 11];
+        let want: f32 = (0..11).map(|i| 2.0 * i as f32).sum();
+        assert_eq!(dot(&a, &b), want);
+        assert_eq!(dot(&[], &[]), 0.0);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Backend equivalence and resident-state contracts:
+//!
+//! * NativeBackend fragment ops (delay-comp Alg. 1, Nesterov outer step,
+//!   α-blend) match the scalar references in `vecops::reference` within
+//!   1 ulp, driven through the opaque-handle trait API;
+//! * a 50-step native training run is bit-identical across
+//!   `parallel_workers` on/off and across two runs at the same seed;
+//! * end-to-end native runs complete offline (no artifacts) for all three
+//!   methods with decreasing loss;
+//! * mid-run checkpoint → restore → continue reproduces the uninterrupted
+//!   run exactly (validation curve, wall-clock and final state);
+//! * the PJRT marshalling layer re-marshals only dirty fragments
+//!   (counting-wrapper assertions against the vendored stub's Literal).
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::coordinator::FragmentTable;
+use cocodc::runtime::{Backend, LiteralCache, NativeBackend, TrainState};
+use cocodc::util::proptest::forall;
+use cocodc::util::vecops::reference;
+use cocodc::util::Rng;
+use cocodc::{TrainOutcome, Trainer};
+
+// ---------------------------------------------------------------------
+// 1-ulp comparison (same keying as tests/hotpath.rs)
+// ---------------------------------------------------------------------
+
+fn ulp_key(x: f32) -> i64 {
+    let b = x.to_bits() as i64;
+    if b & 0x8000_0000 != 0 {
+        0x8000_0000 - b
+    } else {
+        b
+    }
+}
+
+fn ulp_check(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        if g.is_nan() != w.is_nan() {
+            return Err(format!("{what}: elem {i}: {g} vs {w} (NaN mismatch)"));
+        }
+        if g.is_nan() {
+            continue;
+        }
+        let d = (ulp_key(g) - ulp_key(w)).abs();
+        if d > 1 {
+            return Err(format!("{what}: elem {i}: {g} vs {w} differ by {d} ulp"));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Native fragment ops vs scalar references
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_native_fragment_ops_match_reference() {
+    let backend = NativeBackend::preset("tiny").unwrap();
+    forall(16, |rng| {
+        let p = rng.usize_in(0, backend.fragments().k() - 1);
+        let frag = backend.fragments().get(p);
+        let n = frag.size;
+        let mut w = backend.create_worker().map_err(|e| e.to_string())?;
+
+        // Seed the resident fragment with random values via the trait API.
+        let local0 = rng.f32_vec(n, 1.0);
+        backend.write_fragment(&mut w, frag, &local0).map_err(|e| e.to_string())?;
+        let mut read_back = vec![0.0f32; n];
+        backend.read_fragment(&w, frag, &mut read_back).map_err(|e| e.to_string())?;
+        if read_back != local0 {
+            return Err("read_fragment did not round-trip write_fragment".into());
+        }
+
+        // Delay compensation (Alg. 1).
+        let theta_g = rng.f32_vec(n, 1.0);
+        let theta_tp = rng.f32_vec(n, 1.0);
+        let (tau, h, lambda) = (
+            1.0 + rng.next_f64() as f32 * 9.0,
+            10.0 + rng.next_f64() as f32 * 90.0,
+            rng.next_f64() as f32,
+        );
+        backend
+            .delay_comp_fragment(&mut w, frag, &theta_g, &theta_tp, tau, h, lambda)
+            .map_err(|e| e.to_string())?;
+        let mut got = vec![0.0f32; n];
+        backend.read_fragment(&w, frag, &mut got).map_err(|e| e.to_string())?;
+        let mut want = local0.clone();
+        reference::delay_compensate_inplace(&mut want, &theta_g, &theta_tp, tau, h, lambda);
+        ulp_check(&got, &want, "delay_comp_fragment")?;
+
+        // α-blend (Eq. 3) on top of the compensated state.
+        let alpha = rng.next_f64() as f32;
+        backend
+            .alpha_blend_fragment(&mut w, frag, &theta_g, alpha)
+            .map_err(|e| e.to_string())?;
+        backend.read_fragment(&w, frag, &mut got).map_err(|e| e.to_string())?;
+        reference::alpha_blend(&mut want, &theta_g, alpha);
+        ulp_check(&got, &want, "alpha_blend_fragment")?;
+
+        // Zero-copy pseudo-gradient mean over resident worker state.
+        let m = rng.usize_in(1, 4);
+        let mut ws = Vec::new();
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..m {
+            let mut wk = backend.create_worker().map_err(|e| e.to_string())?;
+            let row = rng.f32_vec(n, 1.0);
+            backend.write_fragment(&mut wk, frag, &row).map_err(|e| e.to_string())?;
+            ws.push(wk);
+            rows.push(row);
+        }
+        let mut pm_got = vec![0.0f32; n];
+        backend
+            .pseudo_mean_fragment(&ws, frag, &theta_g, &mut pm_got)
+            .map_err(|e| e.to_string())?;
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut pm_want = vec![0.0f32; n];
+        reference::pseudo_mean(&mut pm_want, &row_refs, &theta_g);
+        ulp_check(&pm_got, &pm_want, "pseudo_mean_fragment")?;
+
+        // Nesterov outer step (Eq. 2) on the global side.
+        let delta = rng.f32_vec(n, 0.1);
+        let mut tg_got = theta_g.clone();
+        let mut mom_got = rng.f32_vec(n, 0.1);
+        let mut tg_want = tg_got.clone();
+        let mut mom_want = mom_got.clone();
+        backend
+            .outer_step_fragment(frag, &mut tg_got, &delta, &mut mom_got, 0.7, 0.9)
+            .map_err(|e| e.to_string())?;
+        reference::outer_step(&mut tg_want, &delta, &mut mom_want, 0.7, 0.9);
+        ulp_check(&tg_got, &tg_want, "outer_step_fragment theta")?;
+        ulp_check(&mom_got, &mom_want, "outer_step_fragment momentum")?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Native end-to-end runs (no artifacts needed)
+// ---------------------------------------------------------------------
+
+fn native_cfg(method: MethodKind, parallel: bool) -> RunConfig {
+    let mut cfg = RunConfig::paper("tiny", method);
+    cfg.workers = 3;
+    cfg.h_steps = 10;
+    cfg.tau = TauMode::Fixed { tau: 2 };
+    cfg.total_steps = 50;
+    cfg.eval_every = 10;
+    cfg.eval_batches = 2;
+    cfg.parallel_workers = parallel;
+    cfg
+}
+
+fn run_native(method: MethodKind, parallel: bool, seed: u64) -> (TrainOutcome, Vec<Vec<f32>>) {
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let mut cfg = native_cfg(method, parallel);
+    cfg.seed = seed;
+    let mut tr = Trainer::new(&backend, cfg).unwrap();
+    let out = tr.run().unwrap();
+    let params = (0..tr.workers().len())
+        .map(|i| tr.worker_params(i).unwrap())
+        .collect();
+    (out, params)
+}
+
+#[test]
+fn native_run_bit_identical_across_parallelism_and_reruns() {
+    let (out_serial, params_serial) = run_native(MethodKind::Cocodc, false, 17);
+    let (out_pool, params_pool) = run_native(MethodKind::Cocodc, true, 17);
+    let (out_again, params_again) = run_native(MethodKind::Cocodc, false, 17);
+    for (a, b) in out_serial.curve.points.iter().zip(&out_pool.curve.points) {
+        assert_eq!(a.loss, b.loss, "parallel_workers changed the math");
+        assert_eq!(a.wall_s, b.wall_s);
+    }
+    assert_eq!(params_serial, params_pool, "parallel run diverged bitwise");
+    for (a, b) in out_serial.curve.points.iter().zip(&out_again.curve.points) {
+        assert_eq!(a.loss, b.loss, "same-seed rerun diverged");
+    }
+    assert_eq!(params_serial, params_again);
+    // A different seed must actually change the trajectory.
+    let (out_other, _) = run_native(MethodKind::Cocodc, false, 18);
+    assert_ne!(
+        out_serial.curve.points.last().unwrap().loss,
+        out_other.curve.points.last().unwrap().loss
+    );
+}
+
+#[test]
+fn all_three_methods_train_natively_offline() {
+    for method in MethodKind::all() {
+        let backend = NativeBackend::preset("tiny").unwrap();
+        let mut tr = Trainer::new(&backend, native_cfg(method, false)).unwrap();
+        let out = tr.run().unwrap();
+        assert_eq!(out.curve.points.last().unwrap().step, 50);
+        assert!(out.curve.points.iter().all(|p| p.loss.is_finite()));
+        assert!(out.syncs_completed > 0, "{method:?} never synced");
+        let first = out.curve.points.first().unwrap().loss;
+        let last = out.curve.points.last().unwrap().loss;
+        assert!(last < first, "{method:?}: no learning ({first:.4} -> {last:.4})");
+        match method {
+            MethodKind::Diloco => assert!(out.comm_stall_s > 0.0, "diloco must stall"),
+            _ => assert_eq!(out.comm_stall_s, 0.0, "{method:?} must overlap"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint: mid-run save -> restore -> continue equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn restore_continues_exactly_where_the_run_left_off() {
+    // DiLoCo is sync-quiescent at every step (blocking), so a mid-run
+    // checkpoint captures the complete strategy-visible state.
+    let mk_cfg = |total: u32| {
+        let mut cfg = native_cfg(MethodKind::Diloco, false);
+        cfg.total_steps = total;
+        cfg.eval_every = 5;
+        cfg
+    };
+    let backend = NativeBackend::preset("tiny").unwrap();
+
+    // Uninterrupted 40-step reference run.
+    let mut full = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    let out_full = full.run().unwrap();
+
+    // First 20 steps, checkpoint, then a *fresh* trainer resumes.
+    let mut first = Trainer::new(&backend, mk_cfg(20)).unwrap();
+    let _ = first.run().unwrap();
+    let ck = first.checkpoint(20).unwrap();
+    drop(first);
+    let mut resumed = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    resumed.restore(&ck).unwrap();
+    let out_resumed = resumed.run().unwrap();
+
+    // Every eval point the resumed run produces (steps 20..=40) must match
+    // the uninterrupted run bit-for-bit — loss AND wall-clock: without the
+    // restored clock/stats/stream cursors the curve would be wrong.
+    for rp in &out_resumed.curve.points {
+        let fp = out_full
+            .curve
+            .points
+            .iter()
+            .find(|p| p.step == rp.step)
+            .unwrap_or_else(|| panic!("full run has no eval at step {}", rp.step));
+        assert_eq!(rp.loss, fp.loss, "loss diverged at step {}", rp.step);
+        assert_eq!(rp.wall_s, fp.wall_s, "wall-clock diverged at step {}", rp.step);
+    }
+    assert_eq!(out_resumed.wall_s, out_full.wall_s, "final wall-clock differs");
+    assert_eq!(
+        out_resumed.syncs_completed, out_full.syncs_completed,
+        "restored sync stats missing"
+    );
+    let mut full2 = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    let _ = full2.run().unwrap();
+    for i in 0..resumed.workers().len() {
+        assert_eq!(
+            resumed.worker_params(i).unwrap(),
+            full2.worker_params(i).unwrap(),
+            "worker {i} final params differ after resume"
+        );
+    }
+}
+
+#[test]
+fn restore_without_run_context_still_loads_state() {
+    // Forward-compat: a checkpoint stripped to the seed-era sections
+    // (state only) must still restore.
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let mut tr = Trainer::new(&backend, native_cfg(MethodKind::Cocodc, false)).unwrap();
+    let _ = tr.run().unwrap();
+    let mut ck = tr.checkpoint(50).unwrap();
+    let legacy: Vec<String> = ck
+        .sections
+        .keys()
+        .filter(|k| k.starts_with("run/"))
+        .cloned()
+        .collect();
+    for k in legacy {
+        ck.sections.remove(&k);
+    }
+    let mut tr2 = Trainer::new(&backend, native_cfg(MethodKind::Cocodc, false)).unwrap();
+    tr2.restore(&ck).unwrap();
+    assert_eq!(tr.worker_params(0).unwrap(), tr2.worker_params(0).unwrap());
+}
+
+// ---------------------------------------------------------------------
+// PJRT marshalling: only dirty fragments cross the boundary
+// ---------------------------------------------------------------------
+
+#[test]
+fn literal_cache_marshals_only_dirty_fragments_per_sync() {
+    let frags = FragmentTable::from_sizes(&[32, 48, 16, 64]);
+    let mut rng = Rng::new(7, 0);
+    let mut state = TrainState::new(rng.f32_vec(160, 1.0));
+    let mut cache = LiteralCache::new(frags.k());
+
+    // Step 0: first use is the single full marshal.
+    cache.refresh(&state, &frags).unwrap();
+    assert_eq!(cache.stats().full_marshals, 1);
+
+    // Simulate 10 sync cycles, each touching one fragment (round-robin, as
+    // Streaming DiLoCo would): every refresh must marshal exactly the one
+    // dirty fragment, never the full state.
+    for i in 0..10usize {
+        let p = i % frags.k();
+        let frag = frags.get(p);
+        for x in &mut state.params[frag.range()] {
+            *x += 1.0;
+        }
+        cache.mark_fragment(p);
+        let (lit, _, _) = cache.refresh(&state, &frags).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), state.params, "cycle {i}");
+        let s = cache.stats();
+        assert_eq!(s.full_marshals, 1, "cycle {i} re-marshalled the full state");
+        assert_eq!(s.fragment_marshals, i + 1, "cycle {i} marshalled extra fragments");
+    }
+
+    // Train-step analogue: adopting executor outputs marshals nothing.
+    let before = cache.stats().fragment_marshals;
+    cache.adopt(
+        xla::Literal::vec1(&state.params),
+        xla::Literal::vec1(&state.m),
+        xla::Literal::vec1(&state.v),
+    );
+    cache.refresh(&state, &frags).unwrap();
+    let s = cache.stats();
+    assert_eq!(s.adopted, 1);
+    assert_eq!(s.fragment_marshals, before);
+    assert_eq!(s.full_marshals, 1);
+}

@@ -7,7 +7,7 @@ use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::coordinator::strategy::SyncCtx;
 use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
 use cocodc::network::WanSimulator;
-use cocodc::runtime::TrainState;
+use cocodc::runtime::{Backend, HostBackend, WorkerHandle};
 use cocodc::simclock::VirtualClock;
 use cocodc::util::pool::BufferPool;
 use cocodc::util::proptest::forall;
@@ -193,7 +193,8 @@ fn max_abs_diff_nan_contract() {
 struct Sim {
     cfg: RunConfig,
     frags: FragmentTable,
-    workers: Vec<TrainState>,
+    backend: HostBackend,
+    workers: Vec<WorkerHandle>,
     global: GlobalState,
     net: WanSimulator,
     clock: VirtualClock,
@@ -209,15 +210,17 @@ impl Sim {
         cfg.workers = workers;
         cfg.h_steps = h;
         cfg.tau = TauMode::Fixed { tau };
-        let init = vec![0.0f32; frags.total_params()];
+        let backend = HostBackend::new(frags.clone());
+        let init = backend.init_params().unwrap();
         Sim {
-            workers: (0..workers).map(|_| TrainState::new(init.clone())).collect(),
+            workers: (0..workers).map(|_| backend.create_worker().unwrap()).collect(),
             global: GlobalState::new(&init),
             net: WanSimulator::new(cfg.network, workers, 3),
             clock: VirtualClock::new(),
             stats: SyncStats::new(k),
             pool: BufferPool::new(),
             rng: Rng::new(23, 0),
+            backend,
             cfg,
             frags,
         }
@@ -225,12 +228,17 @@ impl Sim {
 
     fn drift(&mut self, step: u32) {
         for w in self.workers.iter_mut() {
-            for x in w.params.iter_mut() {
+            let st = self.backend.state_mut(w);
+            for x in st.params.iter_mut() {
                 *x += 0.01 * self.rng.next_gaussian() as f32;
             }
-            w.step = step;
+            st.step = step;
         }
         self.clock.advance_compute(self.cfg.network.step_compute_s);
+    }
+
+    fn params(&self, i: usize) -> Vec<f32> {
+        self.backend.state(&self.workers[i]).params.clone()
     }
 
     fn ctx(&mut self) -> SyncCtx<'_> {
@@ -239,7 +247,7 @@ impl Sim {
             global: &mut self.global,
             net: &mut self.net,
             clock: &mut self.clock,
-            engine: None,
+            backend: &self.backend,
             cfg: &self.cfg,
             frags: &self.frags,
             stats: &mut self.stats,
@@ -309,7 +317,7 @@ fn strategies_behave_identically_with_shared_pool() {
             sim.drift(step);
             strategy.post_step(step, &mut sim.ctx()).unwrap();
         }
-        (sim.workers[0].params.clone(), sim.global.theta_g.clone())
+        (sim.params(0), sim.global.theta_g.clone())
     };
     let (w1, g1) = run(120);
     let (w2, g2) = run(120);

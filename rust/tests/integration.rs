@@ -17,7 +17,7 @@ use cocodc::coordinator::{
     GlobalState, SyncStats,
 };
 use cocodc::network::WanSimulator;
-use cocodc::runtime::{Engine, TrainState};
+use cocodc::runtime::{Backend, Engine, HostBackend, PjrtBackend, TrainState, WorkerHandle};
 use cocodc::simclock::VirtualClock;
 use cocodc::util::pool::BufferPool;
 use cocodc::util::proptest::forall;
@@ -31,7 +31,8 @@ use cocodc::Trainer;
 struct Sim {
     cfg: RunConfig,
     frags: FragmentTable,
-    workers: Vec<TrainState>,
+    backend: HostBackend,
+    workers: Vec<WorkerHandle>,
     global: GlobalState,
     net: WanSimulator,
     clock: VirtualClock,
@@ -47,15 +48,17 @@ impl Sim {
         cfg.workers = workers;
         cfg.h_steps = h;
         cfg.tau = TauMode::Fixed { tau };
-        let init = vec![0.0f32; frags.total_params()];
+        let backend = HostBackend::new(frags.clone());
+        let init = backend.init_params().unwrap();
         Sim {
-            workers: (0..workers).map(|_| TrainState::new(init.clone())).collect(),
+            workers: (0..workers).map(|_| backend.create_worker().unwrap()).collect(),
             global: GlobalState::new(&init),
             net: WanSimulator::new(cfg.network, workers, 3),
             clock: VirtualClock::new(),
             stats: SyncStats::new(k),
             pool: BufferPool::new(),
             rng: Rng::new(11, 0),
+            backend,
             cfg,
             frags,
         }
@@ -64,12 +67,25 @@ impl Sim {
     /// One lockstep "training" step: every worker drifts a bit.
     fn drift(&mut self, step: u32) {
         for w in self.workers.iter_mut() {
-            for x in w.params.iter_mut() {
+            let st = self.backend.state_mut(w);
+            for x in st.params.iter_mut() {
                 *x += 0.01 * self.rng.next_gaussian() as f32;
             }
-            w.step = step;
+            st.step = step;
         }
         self.clock.advance_compute(self.cfg.network.step_compute_s);
+    }
+
+    fn params(&self, i: usize) -> Vec<f32> {
+        self.backend.state(&self.workers[i]).params.clone()
+    }
+
+    fn set_all_params(&mut self, f: impl Fn(&mut f32)) {
+        for w in self.workers.iter_mut() {
+            for x in self.backend.state_mut(w).params.iter_mut() {
+                f(x);
+            }
+        }
     }
 
     fn ctx(&mut self) -> SyncCtx<'_> {
@@ -78,7 +94,7 @@ impl Sim {
             global: &mut self.global,
             net: &mut self.net,
             clock: &mut self.clock,
-            engine: None,
+            backend: &self.backend,
             cfg: &self.cfg,
             frags: &self.frags,
             stats: &mut self.stats,
@@ -98,9 +114,9 @@ fn diloco_syncs_exactly_every_h_and_workers_agree() {
         if step % 10 == 0 {
             // All workers adopt the identical global state.
             for w in 1..sim.workers.len() {
-                assert_eq!(sim.workers[0].params, sim.workers[w].params);
+                assert_eq!(sim.params(0), sim.params(w));
             }
-            assert_eq!(sim.workers[0].params, sim.global.theta_g);
+            assert_eq!(sim.params(0), sim.global.theta_g);
         }
     }
     // 3 rounds x 3 fragments.
@@ -135,19 +151,15 @@ fn streaming_blend_moves_workers_toward_global() {
     sim.cfg.alpha = 0.5;
     let mut strategy = make_strategy(&sim.cfg, &sim.frags);
     // Give workers a large offset so the blend is visible.
-    for w in sim.workers.iter_mut() {
-        for x in w.params.iter_mut() {
-            *x = 1.0;
-        }
-    }
+    sim.set_all_params(|x| *x = 1.0);
     let mut applied = false;
     for step in 1..=30 {
-        let before: Vec<f32> = sim.workers[0].params.clone();
+        let before: Vec<f32> = sim.params(0);
         strategy.post_step(step, &mut sim.ctx()).unwrap();
         if sim.stats.syncs_completed > 0 && !applied {
             applied = true;
             // After the first completion some fragment must have moved.
-            assert_ne!(before, sim.workers[0].params);
+            assert_ne!(before, sim.params(0));
         }
         sim.drift(step);
     }
@@ -194,11 +206,7 @@ fn cocodc_delay_comp_adopts_global_plus_progress() {
     let mut strategy = make_strategy(&sim.cfg, &sim.frags);
     // Constant drift so we can predict the local progress.
     for step in 1..=40 {
-        for w in sim.workers.iter_mut() {
-            for x in w.params.iter_mut() {
-                *x += 0.5;
-            }
-        }
+        sim.set_all_params(|x| *x += 0.5);
         sim.clock.advance_compute(0.15);
         strategy.post_step(step, &mut sim.ctx()).unwrap();
     }
@@ -207,9 +215,9 @@ fn cocodc_delay_comp_adopts_global_plus_progress() {
     // theta_g; compensation then adds the tau-step local progress (tau*0.5).
     // We just assert workers stayed identical & finite (exact closed form is
     // covered by unit tests).
-    for w in &sim.workers {
-        assert!(w.params.iter().all(|x| x.is_finite()));
-        assert_eq!(w.params, sim.workers[0].params);
+    for i in 0..sim.workers.len() {
+        assert!(sim.params(i).iter().all(|x| x.is_finite()));
+        assert_eq!(sim.params(i), sim.params(0));
     }
 }
 
@@ -300,7 +308,8 @@ fn prop_workers_stay_identical_under_identical_data() {
                 .map(|_| 0.02 * drift_rng.next_gaussian() as f32)
                 .collect();
             for w in sim.workers.iter_mut() {
-                for (x, d) in w.params.iter_mut().zip(&drift) {
+                let st = sim.backend.state_mut(w);
+                for (x, d) in st.params.iter_mut().zip(&drift) {
                     *x += *d;
                 }
             }
@@ -309,7 +318,7 @@ fn prop_workers_stay_identical_under_identical_data() {
                 .post_step(step, &mut sim.ctx())
                 .map_err(|e| e.to_string())?;
             for w in 1..sim.workers.len() {
-                if sim.workers[0].params != sim.workers[w].params {
+                if sim.params(0) != sim.params(w) {
                     return Err(format!("worker {w} diverged at step {step}"));
                 }
             }
@@ -348,8 +357,8 @@ fn compression_reduces_wire_bytes_but_preserves_consensus_shape() {
         .fold(0.0f32, f32::max);
     assert!(maxd < 0.05, "int8 consensus diverged by {maxd}");
     // All params remain finite under quantized syncs.
-    for w in &compressed.workers {
-        assert!(w.params.iter().all(|x| x.is_finite()));
+    for i in 0..compressed.workers.len() {
+        assert!(compressed.params(i).iter().all(|x| x.is_finite()));
     }
 }
 
@@ -400,18 +409,22 @@ fn prop_outer_step_fixed_point() {
 // PJRT-backed tests (need artifacts/tiny)
 // ---------------------------------------------------------------------
 
-fn tiny_engine() -> Option<&'static Engine> {
-    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
-    ENGINE
+fn tiny_backend() -> Option<&'static PjrtBackend> {
+    static BACKEND: OnceLock<Option<PjrtBackend>> = OnceLock::new();
+    BACKEND
         .get_or_init(|| {
             let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
             if !dir.join("tiny").join("meta.json").exists() {
                 eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
                 return None;
             }
-            Some(Engine::load(&dir, "tiny").expect("engine load"))
+            Some(PjrtBackend::load(&dir, "tiny", false).expect("backend load"))
         })
         .as_ref()
+}
+
+fn tiny_engine() -> Option<&'static Engine> {
+    tiny_backend().map(|b| b.engine())
 }
 
 fn tiny_cfg(method: MethodKind) -> RunConfig {
@@ -553,9 +566,9 @@ fn grad_step_matches_finite_difference_direction() {
 
 #[test]
 fn all_three_methods_train_end_to_end() {
-    let Some(engine) = tiny_engine() else { return };
+    let Some(backend) = tiny_backend() else { return };
     for method in MethodKind::all() {
-        let mut tr = Trainer::new(engine, tiny_cfg(method)).unwrap();
+        let mut tr = Trainer::new(backend, tiny_cfg(method)).unwrap();
         let out = tr.run().unwrap();
         assert_eq!(out.curve.points.last().unwrap().step, 24);
         assert!(out.curve.points.iter().all(|p| p.loss.is_finite()));
@@ -563,7 +576,7 @@ fn all_three_methods_train_end_to_end() {
         match method {
             MethodKind::Diloco => {
                 assert!(out.comm_stall_s > 0.0, "diloco must stall");
-                assert_eq!(out.syncs_completed, 3 * engine.meta().n_fragments);
+                assert_eq!(out.syncs_completed, 3 * backend.fragments().k());
             }
             _ => assert_eq!(out.comm_stall_s, 0.0, "{method:?} must overlap"),
         }
@@ -572,9 +585,9 @@ fn all_three_methods_train_end_to_end() {
 
 #[test]
 fn runs_are_deterministic_per_seed() {
-    let Some(engine) = tiny_engine() else { return };
+    let Some(backend) = tiny_backend() else { return };
     let run = || {
-        let mut tr = Trainer::new(engine, tiny_cfg(MethodKind::Cocodc)).unwrap();
+        let mut tr = Trainer::new(backend, tiny_cfg(MethodKind::Cocodc)).unwrap();
         tr.run().unwrap()
     };
     let (a, b) = (run(), run());
@@ -583,7 +596,7 @@ fn runs_are_deterministic_per_seed() {
     }
     let mut cfg2 = tiny_cfg(MethodKind::Cocodc);
     cfg2.seed = 99;
-    let mut tr = Trainer::new(engine, cfg2).unwrap();
+    let mut tr = Trainer::new(backend, cfg2).unwrap();
     let c = tr.run().unwrap();
     assert_ne!(
         a.curve.points.last().unwrap().loss,
@@ -593,14 +606,16 @@ fn runs_are_deterministic_per_seed() {
 
 #[test]
 fn hlo_fragment_ops_path_agrees_with_rust_path() {
-    let Some(engine) = tiny_engine() else { return };
-    let mut cfg_rust = tiny_cfg(MethodKind::Cocodc);
-    cfg_rust.total_steps = 16;
-    let mut cfg_hlo = cfg_rust.clone();
+    let Some(backend) = tiny_backend() else { return };
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let backend_hlo = PjrtBackend::load(&dir, "tiny", true).expect("backend load");
+    let mut cfg = tiny_cfg(MethodKind::Cocodc);
+    cfg.total_steps = 16;
+    let mut cfg_hlo = cfg.clone();
     cfg_hlo.use_hlo_fragment_ops = true;
-    let mut tr1 = Trainer::new(engine, cfg_rust).unwrap();
+    let mut tr1 = Trainer::new(backend, cfg).unwrap();
     let out1 = tr1.run().unwrap();
-    let mut tr2 = Trainer::new(engine, cfg_hlo).unwrap();
+    let mut tr2 = Trainer::new(&backend_hlo, cfg_hlo).unwrap();
     let out2 = tr2.run().unwrap();
     for (a, b) in out1.curve.points.iter().zip(&out2.curve.points) {
         assert!(
@@ -614,18 +629,19 @@ fn hlo_fragment_ops_path_agrees_with_rust_path() {
 
 #[test]
 fn checkpoint_round_trips_through_trainer() {
-    let Some(engine) = tiny_engine() else { return };
-    let mut tr = Trainer::new(engine, tiny_cfg(MethodKind::Cocodc)).unwrap();
+    let Some(backend) = tiny_backend() else { return };
+    let mut tr = Trainer::new(backend, tiny_cfg(MethodKind::Cocodc)).unwrap();
     let _ = tr.run().unwrap();
     let path = std::env::temp_dir().join("cocodc_integration_ckpt.bin");
     tr.save_checkpoint(&path, 24).unwrap();
-    let before: Vec<Vec<f32>> =
-        tr.workers().iter().map(|w| w.params.clone()).collect();
+    let before: Vec<Vec<f32>> = (0..tr.workers().len())
+        .map(|i| tr.worker_params(i).unwrap())
+        .collect();
     let ck = cocodc::checkpoint::Checkpoint::load(&path).unwrap();
-    let mut tr2 = Trainer::new(engine, tiny_cfg(MethodKind::Cocodc)).unwrap();
+    let mut tr2 = Trainer::new(backend, tiny_cfg(MethodKind::Cocodc)).unwrap();
     tr2.restore(&ck).unwrap();
-    for (w, orig) in tr2.workers().iter().zip(&before) {
-        assert_eq!(&w.params, orig);
+    for (i, orig) in before.iter().enumerate() {
+        assert_eq!(&tr2.worker_params(i).unwrap(), orig);
     }
     std::fs::remove_file(path).ok();
 }

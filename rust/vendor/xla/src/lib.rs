@@ -53,6 +53,9 @@ pub enum ElemKind {
 pub trait NativeType: Copy + 'static {
     const KIND: ElemKind;
     fn write_le(data: &[Self], out: &mut Vec<u8>);
+    /// Serialize straight into an existing byte slice (`out.len()` must be
+    /// `4 * data.len()`) — the allocation-free sub-buffer update path.
+    fn write_le_into(data: &[Self], out: &mut [u8]);
     fn read_le(bytes: &[u8]) -> Vec<Self>;
 }
 
@@ -61,6 +64,11 @@ impl NativeType for f32 {
     fn write_le(data: &[Self], out: &mut Vec<u8>) {
         for v in data {
             out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn write_le_into(data: &[Self], out: &mut [u8]) {
+        for (v, chunk) in data.iter().zip(out.chunks_exact_mut(4)) {
+            chunk.copy_from_slice(&v.to_le_bytes());
         }
     }
     fn read_le(bytes: &[u8]) -> Vec<Self> {
@@ -73,6 +81,11 @@ impl NativeType for i32 {
     fn write_le(data: &[Self], out: &mut Vec<u8>) {
         for v in data {
             out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn write_le_into(data: &[Self], out: &mut [u8]) {
+        for (v, chunk) in data.iter().zip(out.chunks_exact_mut(4)) {
+            chunk.copy_from_slice(&v.to_le_bytes());
         }
     }
     fn read_le(bytes: &[u8]) -> Vec<Self> {
@@ -168,6 +181,25 @@ impl Literal {
         Ok(())
     }
 
+    /// Overwrite elements `[offset, offset + data.len())` in place — the
+    /// sub-buffer update the dirty-fragment marshalling path uses to refresh
+    /// a cached argument literal without rebuilding it (serialized straight
+    /// into the backing buffer, no temporary). The real PJRT equivalent is
+    /// host-buffer semantics / buffer donation; see ROADMAP.
+    pub fn write_raw_at<T: NativeType>(&mut self, offset: usize, data: &[T]) -> Result<()> {
+        self.check_kind::<T>()?;
+        if offset + data.len() > self.element_count() {
+            return Err(Error::new(format!(
+                "write_raw_at: range {}..{} exceeds {} elements",
+                offset,
+                offset + data.len(),
+                self.element_count()
+            )));
+        }
+        T::write_le_into(data, &mut self.bytes[offset * 4..(offset + data.len()) * 4]);
+        Ok(())
+    }
+
     pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
         self.check_kind::<T>()?;
         T::read_le(&self.bytes)
@@ -253,7 +285,9 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+    /// Arguments are borrowed so callers can pass long-lived cached
+    /// literals (the dirty-fragment marshalling path) without cloning.
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error::unavailable())
     }
 }
@@ -294,6 +328,15 @@ mod tests {
         assert_eq!(dst, [5.0, 6.0]);
         let s: f32 = Literal::scalar(9.5f32).get_first_element().unwrap();
         assert_eq!(s, 9.5);
+    }
+
+    #[test]
+    fn write_raw_at_patches_sub_range() {
+        let mut l = Literal::vec1(&[0.0f32; 6]);
+        l.write_raw_at(2, &[7.0f32, 8.0]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.0, 0.0, 7.0, 8.0, 0.0, 0.0]);
+        assert!(l.write_raw_at(5, &[1.0f32, 2.0]).is_err());
+        assert!(l.write_raw_at::<i32>(0, &[1]).is_err());
     }
 
     #[test]
