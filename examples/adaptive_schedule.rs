@@ -68,6 +68,7 @@ fn run_method(method: MethodKind, steps: u32) -> anyhow::Result<(String, Vec<usi
             stats: &mut stats,
             pool: &mut pool,
             threads: None,
+            live: None,
         };
         strategy.post_step(step, &mut ctx)?;
     }

@@ -1,0 +1,107 @@
+//! Degraded-mode resilience (DESIGN.md §Faults): the same scripted fault
+//! plan — a mid-run link outage, in-flight transfer loss, and one worker
+//! crashing and rejoining — driven through all three methods on the native
+//! backend (no artifacts needed).
+//!
+//! DiLoCo's blocking all-reduce eats the outage as a dead stall on the
+//! critical path; Streaming DiLoCo keeps computing and retries/requeues the
+//! dropped fragments; CoCoDC additionally feeds the observed transfer times
+//! into its Eq. 9 schedule (the EWMA T_s estimate backs the sync rate off
+//! to its K floor during the outage) and renormalizes the pseudo-gradient
+//! mean over the surviving quorum while the worker is down.
+//!
+//! ```text
+//! cargo run --release --example fault_tolerance -- [--steps 240]
+//! ```
+
+use cocodc::config::{CrashWindow, FaultConfig, FaultWindow, MethodKind, RunConfig, TauMode};
+use cocodc::runtime::{load_backend, Backend, BackendKind};
+use cocodc::util::cli::Args;
+use cocodc::{TrainOutcome, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let steps: u32 = args.get_or("steps", 240)?;
+    let kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
+    args.finish()?;
+    let backend = load_backend(kind, std::path::Path::new("artifacts"), "tiny", false)?;
+
+    // One shared fault plan on the virtual clock: the outage opens a third
+    // of the way in and spans two DiLoCo sync points; the last worker is
+    // down for a stretch inside it; every transfer has a 15% chance of
+    // being lost in flight (retried with exponential backoff).
+    let horizon = steps as f64 * 0.15; // T_c = 0.15 s/step on this preset
+    let plan = FaultConfig {
+        outages: vec![FaultWindow {
+            start_s: 0.30 * horizon,
+            duration_s: 0.35 * horizon,
+        }],
+        transfer_loss_prob: 0.25,
+        crashes: vec![CrashWindow {
+            worker: 3,
+            window: FaultWindow { start_s: 0.50 * horizon, duration_s: 0.20 * horizon },
+        }],
+        ..Default::default()
+    };
+    println!(
+        "fault plan over a ~{horizon:.0}s horizon: outage {:.0}s-{:.0}s, 25% transfer \
+         loss, worker 3 down {:.0}s-{:.0}s\n",
+        plan.outages[0].start_s,
+        plan.outages[0].end_s(),
+        plan.crashes[0].window.start_s,
+        plan.crashes[0].window.end_s(),
+    );
+
+    let mut outcomes: Vec<TrainOutcome> = Vec::new();
+    for method in MethodKind::all() {
+        let mut cfg = RunConfig::paper("tiny", method);
+        cfg.total_steps = steps;
+        cfg.eval_every = steps;
+        cfg.h_steps = 40; // several blocking rounds land inside the outage
+        cfg.tau = TauMode::Network; // let the outage stretch τ, not crash it
+        cfg.faults = plan.clone();
+        let mut tr = Trainer::new(backend.as_ref(), cfg)?;
+        let out = tr.run()?;
+        println!(
+            "[{:<16}] wall {:>6.0}s = compute {:>5.0}s + stall {:>5.0}s | \
+             syncs {:>3} | retries {:>3} drops {:>3} timeouts {:>2} requeues {:>2} | \
+             final loss {:.3}",
+            out.method,
+            out.wall_s,
+            out.compute_s,
+            out.comm_stall_s,
+            out.syncs_completed,
+            out.retries,
+            out.drops,
+            out.timeouts,
+            out.requeues,
+            out.final_train_loss,
+        );
+        outcomes.push(out);
+    }
+
+    let get = |name: &str| {
+        outcomes
+            .iter()
+            .find(|o| o.method == name)
+            .expect("all three methods ran")
+    };
+    let (diloco, cocodc) = (get("diloco"), get("cocodc"));
+    println!(
+        "\nDiLoCo spent {:.0}s stalled on the blocked link; CoCoDC overlapped the \
+         outage away ({:.0}s stalled) and kept training on the surviving quorum.",
+        diloco.comm_stall_s, cocodc.comm_stall_s
+    );
+    anyhow::ensure!(
+        cocodc.comm_stall_s < diloco.comm_stall_s,
+        "overlap must beat blocking under the same fault plan"
+    );
+    let mut activity = 0usize;
+    for o in &outcomes {
+        anyhow::ensure!(o.final_train_loss.is_finite(), "{} diverged under faults", o.method);
+        activity += o.retries + o.drops + o.timeouts + o.requeues;
+    }
+    anyhow::ensure!(activity > 0, "no fault activity at all — the plan never touched the runs");
+    println!("fault tolerance OK: all methods finished, overlap beat blocking");
+    Ok(())
+}

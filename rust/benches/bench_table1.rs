@@ -90,6 +90,7 @@ fn main() {
                 stats: &mut stats,
                 pool: &mut pool,
                 threads: None,
+                live: None,
             };
             strategy.post_step(step, &mut ctx).unwrap();
             black_box(&workers);

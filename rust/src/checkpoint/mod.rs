@@ -44,6 +44,28 @@ pub fn unpack_f64(lo: f32, hi: f32) -> f64 {
     f64::from_bits(unpack_u64(lo, hi))
 }
 
+/// Append each u64 as its two-f32 bit pattern.
+pub fn pack_u64s(out: &mut Vec<f32>, xs: &[u64]) {
+    for &x in xs {
+        out.extend_from_slice(&pack_u64(x));
+    }
+}
+
+/// Inverse of [`pack_u64s`] over a `2*n`-element slice.
+pub fn unpack_u64s(data: &[f32]) -> Vec<u64> {
+    data.chunks_exact(2).map(|c| unpack_u64(c[0], c[1])).collect()
+}
+
+pub fn pack_f64s(out: &mut Vec<f32>, xs: &[f64]) {
+    for &x in xs {
+        out.extend_from_slice(&pack_f64(x));
+    }
+}
+
+pub fn unpack_f64s(data: &[f32]) -> Vec<f64> {
+    data.chunks_exact(2).map(|c| unpack_f64(c[0], c[1])).collect()
+}
+
 impl Checkpoint {
     pub fn new(step: u32) -> Self {
         Checkpoint { step, sections: BTreeMap::new() }
@@ -181,6 +203,22 @@ mod tests {
         let s = back.get("ctx").unwrap();
         assert_eq!(unpack_u64(s[0], s[1]), u64::MAX);
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn slice_packing_round_trips_bit_exactly() {
+        let us = [0u64, 7, u64::MAX, 1 << 63];
+        let mut buf = Vec::new();
+        pack_u64s(&mut buf, &us);
+        assert_eq!(buf.len(), 8);
+        assert_eq!(unpack_u64s(&buf), us);
+        let fs = [0.0f64, -1.5, f64::INFINITY, f64::MAX, 1e-300];
+        let mut buf = Vec::new();
+        pack_f64s(&mut buf, &fs);
+        let back = unpack_f64s(&buf);
+        for (a, b) in fs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -81,6 +81,267 @@ impl Default for NetworkConfig {
     }
 }
 
+/// A closed-open window [start_s, start_s + duration_s) on the virtual
+/// clock during which a fault condition holds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultWindow {
+    pub start_s: f64,
+    pub duration_s: f64,
+}
+
+impl FaultWindow {
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.duration_s
+    }
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start_s && t < self.end_s()
+    }
+}
+
+/// Bandwidth degradation: during `window` the link runs at
+/// `bandwidth_factor` × nominal bandwidth (congestion, partial cuts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Degradation {
+    pub window: FaultWindow,
+    /// Effective-bandwidth multiplier in (0, 1].
+    pub bandwidth_factor: f64,
+}
+
+/// A worker crash: `worker` is down for `window` and rejoins afterwards by
+/// adopting the current global parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashWindow {
+    pub worker: usize,
+    pub window: FaultWindow,
+}
+
+/// Retry/backoff policy for dropped transfers (tentpole: lost transfers
+/// surface as `TransferOutcome::Dropped`; callers retry under this budget).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum transmission attempts per logical transfer (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before the first retry, seconds of virtual time.
+    pub backoff_base_s: f64,
+    /// Multiplier applied to the backoff after each failed attempt.
+    pub backoff_factor: f64,
+    /// Total virtual-time budget for one logical transfer; once exceeded
+    /// the transfer times out and the fragment is requeued.
+    pub timeout_budget_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            backoff_base_s: 0.5,
+            backoff_factor: 2.0,
+            timeout_budget_s: 60.0,
+        }
+    }
+}
+
+/// Scriptable fault plan (the tentpole of DESIGN.md §Faults). All events are
+/// placed on the virtual clock; the probabilistic transfer-loss draw flows
+/// through a dedicated seeded RNG stream so a (seed, plan) pair fully
+/// determines a run, and the stream is checkpointable like the jitter RNG.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultConfig {
+    /// Full link outages: transfers requested inside queue behind the end.
+    pub outages: Vec<FaultWindow>,
+    /// Bandwidth-degradation windows (congestion).
+    pub degradations: Vec<Degradation>,
+    /// Probability in [0, 1) that any scheduled transfer is lost in flight.
+    pub transfer_loss_prob: f64,
+    /// Per-worker compute-time multipliers (>= 1); empty = no stragglers.
+    /// The synchronous inner loop runs at the pace of the slowest live
+    /// worker, so the step cost multiplier is the max over live workers.
+    pub stragglers: Vec<f64>,
+    /// Worker crash/recover events.
+    pub crashes: Vec<CrashWindow>,
+    pub retry: RetryPolicy,
+}
+
+impl FaultConfig {
+    /// True when any fault source is enabled; the fault-free hot path stays
+    /// allocation-free and bit-identical to the pre-fault builds.
+    pub fn is_active(&self) -> bool {
+        !self.outages.is_empty()
+            || !self.degradations.is_empty()
+            || self.transfer_loss_prob > 0.0
+            || self.stragglers.iter().any(|&s| s > 1.0)
+            || !self.crashes.is_empty()
+    }
+
+    /// Canonical severity-parameterized scenario used by `experiments
+    /// faults` and the CI fault matrix: one regional outage, a congestion
+    /// window, probabilistic loss, one straggler and one crash/recover,
+    /// all scaled by `severity` in [0, 1] over a run of `horizon_s`
+    /// virtual seconds with `workers` datacenters.
+    pub fn scenario(severity: f64, horizon_s: f64, workers: usize) -> FaultConfig {
+        let sev = severity.clamp(0.0, 1.0);
+        if sev == 0.0 {
+            return FaultConfig::default();
+        }
+        let mut f = FaultConfig {
+            outages: vec![FaultWindow {
+                start_s: 0.25 * horizon_s,
+                duration_s: 0.30 * sev * horizon_s,
+            }],
+            degradations: vec![Degradation {
+                window: FaultWindow {
+                    start_s: 0.60 * horizon_s,
+                    duration_s: 0.20 * horizon_s,
+                },
+                bandwidth_factor: (1.0 - 0.7 * sev).max(0.25),
+            }],
+            transfer_loss_prob: 0.25 * sev,
+            stragglers: Vec::new(),
+            crashes: Vec::new(),
+            retry: RetryPolicy::default(),
+        };
+        if workers > 1 {
+            f.stragglers = vec![1.0; workers];
+            f.stragglers[1] = 1.0 + 0.5 * sev;
+            f.crashes = vec![CrashWindow {
+                worker: workers - 1,
+                window: FaultWindow {
+                    start_s: 0.45 * horizon_s,
+                    duration_s: 0.15 * sev * horizon_s,
+                },
+            }];
+        }
+        f
+    }
+
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.transfer_loss_prob),
+            "transfer_loss_prob must be in [0,1) — at 1.0 retries never succeed"
+        );
+        for o in &self.outages {
+            anyhow::ensure!(
+                o.duration_s >= 0.0 && o.start_s >= 0.0,
+                "outage windows need start/duration >= 0"
+            );
+        }
+        for d in &self.degradations {
+            anyhow::ensure!(
+                d.bandwidth_factor > 0.0 && d.bandwidth_factor <= 1.0,
+                "bandwidth_factor must be in (0,1]"
+            );
+        }
+        for &s in &self.stragglers {
+            anyhow::ensure!(s >= 1.0, "straggler multipliers must be >= 1");
+        }
+        anyhow::ensure!(
+            self.stragglers.is_empty() || self.stragglers.len() == workers,
+            "stragglers must be empty or one multiplier per worker"
+        );
+        for c in &self.crashes {
+            anyhow::ensure!(c.worker < workers, "crash worker {} out of range", c.worker);
+        }
+        anyhow::ensure!(self.retry.max_attempts >= 1, "retry.max_attempts >= 1");
+        anyhow::ensure!(self.retry.backoff_base_s >= 0.0, "retry.backoff_base_s >= 0");
+        anyhow::ensure!(self.retry.backoff_factor >= 1.0, "retry.backoff_factor >= 1");
+        anyhow::ensure!(self.retry.timeout_budget_s > 0.0, "retry.timeout_budget_s > 0");
+        Ok(())
+    }
+
+    fn window_json(w: &FaultWindow) -> Json {
+        obj(vec![("start_s", num(w.start_s)), ("duration_s", num(w.duration_s))])
+    }
+
+    fn window_from_json(j: &Json) -> anyhow::Result<FaultWindow> {
+        Ok(FaultWindow {
+            start_s: j.field("start_s")?.as_f64()?,
+            duration_s: j.field("duration_s")?.as_f64()?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "outages",
+                Json::Arr(self.outages.iter().map(Self::window_json).collect()),
+            ),
+            (
+                "degradations",
+                Json::Arr(
+                    self.degradations
+                        .iter()
+                        .map(|d| {
+                            obj(vec![
+                                ("window", Self::window_json(&d.window)),
+                                ("bandwidth_factor", num(d.bandwidth_factor)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("transfer_loss_prob", num(self.transfer_loss_prob)),
+            (
+                "stragglers",
+                Json::Arr(self.stragglers.iter().map(|&s| num(s)).collect()),
+            ),
+            (
+                "crashes",
+                Json::Arr(
+                    self.crashes
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("worker", num(c.worker as f64)),
+                                ("window", Self::window_json(&c.window)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "retry",
+                obj(vec![
+                    ("max_attempts", num(self.retry.max_attempts as f64)),
+                    ("backoff_base_s", num(self.retry.backoff_base_s)),
+                    ("backoff_factor", num(self.retry.backoff_factor)),
+                    ("timeout_budget_s", num(self.retry.timeout_budget_s)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultConfig> {
+        let mut f = FaultConfig::default();
+        for w in j.field("outages")?.as_arr()? {
+            f.outages.push(Self::window_from_json(w)?);
+        }
+        for d in j.field("degradations")?.as_arr()? {
+            f.degradations.push(Degradation {
+                window: Self::window_from_json(d.field("window")?)?,
+                bandwidth_factor: d.field("bandwidth_factor")?.as_f64()?,
+            });
+        }
+        f.transfer_loss_prob = j.field("transfer_loss_prob")?.as_f64()?;
+        for s in j.field("stragglers")?.as_arr()? {
+            f.stragglers.push(s.as_f64()?);
+        }
+        for c in j.field("crashes")?.as_arr()? {
+            f.crashes.push(CrashWindow {
+                worker: c.field("worker")?.as_usize()?,
+                window: Self::window_from_json(c.field("window")?)?,
+            });
+        }
+        let r = j.field("retry")?;
+        f.retry = RetryPolicy {
+            max_attempts: r.field("max_attempts")?.as_u64()? as u32,
+            backoff_base_s: r.field("backoff_base_s")?.as_f64()?,
+            backoff_factor: r.field("backoff_factor")?.as_f64()?,
+            timeout_budget_s: r.field("timeout_budget_s")?.as_f64()?,
+        };
+        Ok(f)
+    }
+}
+
 /// Synthetic-C4 corpus generation (DESIGN.md §2: C4 substitute).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DataConfig {
@@ -148,6 +409,9 @@ pub struct RunConfig {
     /// quantized; `int8`/`int4` round-trip the values and charge the WAN
     /// at compressed size).
     pub compression: Codec,
+    /// Scripted fault plan (outages, loss, stragglers, crashes); the
+    /// default plan is empty and keeps the fault-free hot path untouched.
+    pub faults: FaultConfig,
 }
 
 impl Default for RunConfig {
@@ -172,6 +436,7 @@ impl Default for RunConfig {
             parallel_workers: true,
             use_hlo_fragment_ops: false,
             compression: Codec::None,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -200,6 +465,7 @@ impl RunConfig {
         anyhow::ensure!(self.network.step_compute_s > 0.0, "step compute > 0");
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
         anyhow::ensure!(self.eval_batches >= 1, "eval_batches >= 1");
+        self.faults.validate(self.workers)?;
         Ok(())
     }
 
@@ -243,6 +509,7 @@ impl RunConfig {
                 ]),
             ),
             ("compression", s(self.compression.name())),
+            ("faults", self.faults.to_json()),
             ("parallel_workers", Json::Bool(self.parallel_workers)),
             ("use_hlo_fragment_ops", Json::Bool(self.use_hlo_fragment_ops)),
         ])
@@ -288,6 +555,10 @@ impl RunConfig {
         };
         if let Some(c) = j.get("compression") {
             cfg.compression = Codec::parse(c.as_str()?)?;
+        }
+        // Optional for backward compatibility with pre-fault config files.
+        if let Some(f) = j.get("faults") {
+            cfg.faults = FaultConfig::from_json(f)?;
         }
         cfg.parallel_workers = j.field("parallel_workers")?.as_bool()?;
         cfg.use_hlo_fragment_ops = j.field("use_hlo_fragment_ops")?.as_bool()?;
@@ -342,6 +613,62 @@ mod tests {
         let mut c = RunConfig::default();
         c.gamma = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn faults_json_round_trip_and_back_compat() {
+        let mut c = RunConfig::paper("exp", MethodKind::Cocodc);
+        c.faults = FaultConfig::scenario(0.6, 300.0, 4);
+        let back = RunConfig::from_json(&Json::parse(&c.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // Pre-fault config files (no "faults" key) still parse, with an
+        // inactive default plan.
+        let mut legacy = RunConfig::paper("exp", MethodKind::Cocodc);
+        legacy.faults = FaultConfig::default();
+        let j = legacy.to_json_string().replace("\"faults\"", "\"faults_ignored\"");
+        let parsed = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(!parsed.faults.is_active());
+    }
+
+    #[test]
+    fn fault_validation_rejects_bad_plans() {
+        let mut c = RunConfig::default();
+        c.faults.transfer_loss_prob = 1.0; // retries could never succeed
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.faults.crashes.push(CrashWindow {
+            worker: 99,
+            window: FaultWindow { start_s: 0.0, duration_s: 1.0 },
+        });
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.faults.stragglers = vec![0.5; c.workers]; // < 1 would speed workers up
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.faults.retry.max_attempts = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_scales_with_severity_and_validates() {
+        assert!(!FaultConfig::scenario(0.0, 100.0, 4).is_active());
+        let lo = FaultConfig::scenario(0.3, 100.0, 4);
+        let hi = FaultConfig::scenario(0.9, 100.0, 4);
+        lo.validate(4).unwrap();
+        hi.validate(4).unwrap();
+        assert!(hi.outages[0].duration_s > lo.outages[0].duration_s);
+        assert!(hi.transfer_loss_prob > lo.transfer_loss_prob);
+        assert!(hi.degradations[0].bandwidth_factor < lo.degradations[0].bandwidth_factor);
+        assert!(hi.is_active() && lo.is_active());
+    }
+
+    #[test]
+    fn fault_window_contains_is_closed_open() {
+        let w = FaultWindow { start_s: 10.0, duration_s: 5.0 };
+        assert!(!w.contains(9.999));
+        assert!(w.contains(10.0));
+        assert!(w.contains(14.999));
+        assert!(!w.contains(15.0));
     }
 
     #[test]

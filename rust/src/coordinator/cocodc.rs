@@ -13,18 +13,52 @@
 //!    `R_p = ‖Δθ_p^g‖₂ / I_p` (Eq. 11). Selection is a pure function of
 //!    globally replicated history, so all workers agree without extra
 //!    coordination messages.
+//!
+//! Under faults, the T_s term in Eq. 9 is a *live* estimate: an EWMA over
+//! observed transfer resolutions (byte-normalized to the mean fragment)
+//! replaces the static ring-time model, so the adaptive schedule backs off
+//! automatically when the link degrades — transfers observed through an
+//! outage stretch the estimate, N collapses toward its K floor — and
+//! catches up once post-outage observations shrink it again.
+//!
+//! CoCoDC also never blocks a worker on an overdue fragment: with a fixed
+//! overlap depth the apply is *deferred* to the transfer's actual arrival
+//! (τ_eff = max(τ, arrival steps)) instead of stalling at t+τ the way
+//! Streaming's α-blend must — Alg. 1 compensates for the realized
+//! staleness `step − t_init`, so a later apply is corrected, not stale.
+//! On a healthy link arrival ≤ τ and the schedule is unchanged; under an
+//! outage this converts Streaming's stall seconds into compensated lag.
 
-use crate::config::RunConfig;
+use crate::checkpoint::{pack_f64s, pack_u64s, unpack_f64s, unpack_u64s, Checkpoint};
+use crate::config::{RunConfig, TauMode};
 use crate::coordinator::fragments::FragmentTable;
+use crate::util::pool::BufferPool;
+use crate::util::saturating_f64_to_u32;
 use crate::util::threadpool::ScopedTask;
 use crate::util::vecops;
 
-use super::streaming::{Pending, StreamingDiloco};
+use super::streaming::{load_pendings, save_pendings, Pending, StreamingDiloco};
 use super::strategy::{SyncCtx, SyncStrategy};
 
 /// Fan the per-worker delay-compensation out to the worker pool only when
 /// the fragment is big enough that the memory pass dominates the handoff.
 const PAR_FRAGMENT_MIN: usize = 1 << 13;
+
+/// EWMA smoothing for the live T_s estimate: heavy enough on fresh
+/// observations to react to an outage within a couple of syncs, damped
+/// enough that a single jittered transfer doesn't whipsaw the schedule.
+const TS_BETA: f64 = 0.3;
+
+/// Why [`Cocodc::select_fragment`] picked its fragment — returned alongside
+/// the index so guard-hit accounting reflects the *actual* selection path
+/// instead of re-deriving (and possibly disagreeing with) the condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectReason {
+    /// Alg. 2 line 2: the fragment exceeded H steps without a sync.
+    StalenessGuard,
+    /// Largest change rate R_p (Eq. 11).
+    MaxRate,
+}
 
 pub struct Cocodc {
     pending: Vec<Pending>,
@@ -39,6 +73,10 @@ pub struct Cocodc {
     /// Initiation interval h = ⌊H/N⌋ (recomputed from live T_c/T_s
     /// estimates at each initiation opportunity).
     next_init: u32,
+    /// Live T_s estimate: EWMA over observed transfer resolutions,
+    /// normalized to the mean fragment's wire bytes. None until the first
+    /// observation (falls back to the static ring-time model).
+    ts_ewma: Option<f64>,
 }
 
 impl Cocodc {
@@ -50,29 +88,79 @@ impl Cocodc {
             last_completed: vec![0; k],
             last_initiated: vec![0; k],
             next_init: 1,
+            ts_ewma: None,
         }
     }
 
     /// Eq. 9/10: target syncs per H window and the resulting interval.
+    /// The division saturates explicitly: a degraded T_s near zero (or a
+    /// NaN from degenerate inputs) must clamp, not wrap.
     pub fn schedule_params(cfg: &RunConfig, frags: &FragmentTable, t_sync: f64) -> (u32, u32) {
         let k = frags.k() as u32;
         let h_steps = cfg.h_steps as f64;
         let t_c = cfg.network.step_compute_s;
-        let n = ((cfg.gamma * h_steps * t_c / t_sync).floor() as u32).max(k);
+        let n = saturating_f64_to_u32((cfg.gamma * h_steps * t_c / t_sync).floor()).max(k);
         let h = (cfg.h_steps / n).max(1);
         (n, h)
     }
 
-    /// Alg. 2: deterministic fragment selection at step `t`.
-    /// Returns None when every candidate is already in flight.
-    fn select_fragment(&self, t: u32, h_steps: u32) -> Option<usize> {
+    /// Fold one observed transfer resolution (seconds, already normalized
+    /// to mean-fragment bytes) into the live T_s estimate.
+    fn observe_ts(&mut self, obs: f64) {
+        if !obs.is_finite() || obs <= 0.0 {
+            return;
+        }
+        self.ts_ewma = Some(match self.ts_ewma {
+            Some(prev) => TS_BETA * obs + (1.0 - TS_BETA) * prev,
+            None => obs,
+        });
+    }
+
+    /// T_s observation for a pending whose transfer just resolved:
+    /// elapsed virtual time from request to resolution, scaled to the mean
+    /// fragment's wire size (the latency term doesn't scale with bytes,
+    /// but for a schedule estimator the byte-normalization is what keeps
+    /// differently-sized fragments comparable). Undelivered resolutions
+    /// observe the timeout budget — a conservative floor that still pushes
+    /// the schedule toward its K floor during an outage.
+    fn ts_observation(pend: &Pending, requested_at: f64, delivered: bool, ctx: &SyncCtx) -> f64 {
+        if delivered {
+            (pend.finish_time - requested_at).max(1e-9) * ctx.frags.mean_bytes()
+                / pend.wire_bytes.max(1.0)
+        } else {
+            ctx.net.faults().retry().timeout_budget_s
+        }
+    }
+
+    /// Defer a delivered pending's apply to the transfer's actual arrival
+    /// when a fixed τ would make it stall: τ_eff = max(τ, arrival). A pure
+    /// function of the deterministic transfer timeline, so all workers
+    /// agree. TauMode::Network already schedules applies at arrival.
+    fn defer_apply_to_arrival(pend: &mut Pending, step: u32, requested_at: f64, ctx: &SyncCtx) {
+        if !pend.delivered {
+            return;
+        }
+        if let TauMode::Fixed { tau } = ctx.cfg.tau {
+            let arrival = ctx.net.tau_steps(
+                requested_at,
+                pend.finish_time,
+                ctx.cfg.network.step_compute_s,
+            );
+            pend.apply_step = step.saturating_add(arrival.max(tau));
+        }
+    }
+
+    /// Alg. 2: deterministic fragment selection at step `t`, with the
+    /// reason it was selected. Returns None when every candidate is
+    /// already in flight.
+    fn select_fragment(&self, t: u32, h_steps: u32) -> Option<(usize, SelectReason)> {
         let k = self.change_rate.len();
         let in_flight =
             |p: usize| self.pending.iter().any(|q| q.frag == p);
         // Staleness guard: any fragment not synchronized for >= H steps.
         for p in 0..k {
             if t.saturating_sub(self.last_initiated[p]) >= h_steps && !in_flight(p) {
-                return Some(p);
+                return Some((p, SelectReason::StalenessGuard));
             }
         }
         // Otherwise the largest change rate R_p.
@@ -84,13 +172,15 @@ impl Cocodc {
                     // Deterministic tie-break on index (all workers agree).
                     .then(b.cmp(&a))
             })
+            .map(|p| (p, SelectReason::MaxRate))
     }
 
     /// Drain due syncs in place (stable order, no queue rebuild) and apply
     /// Alg. 1 per worker — fanned out on the persistent worker pool when a
     /// pool is attached and the fragment is large enough to pay for it
     /// (elementwise per-worker work, so serial and parallel results are
-    /// bit-identical).
+    /// bit-identical). While a worker is crashed the fan-out falls back to
+    /// a serial loop that skips it.
     fn complete_due(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
         let mut i = 0;
         while i < self.pending.len() {
@@ -118,9 +208,11 @@ impl Cocodc {
             // Alg. 1 per worker: delay-compensated adoption applied on the
             // backend's resident fragment, straight from the (disjointly
             // borrowed) global fragment slice.
-            let tau = (step - pend.t_init).max(1) as f32;
+            let tau = (step.saturating_sub(pend.t_init)).max(1) as f32;
             let h = ctx.cfg.h_steps as f32;
             let lambda = ctx.cfg.lambda;
+            let all_live = ctx.all_live();
+            let live = ctx.live;
             let snaps = pend
                 .snapshots
                 .as_ref()
@@ -130,7 +222,11 @@ impl Cocodc {
                 let new_g: &[f32] = &ctx.global.theta_g[frag.range()];
                 let workers = &mut *ctx.workers;
                 match ctx.threads {
-                    Some(tp) if workers.len() > 1 && frag.size >= PAR_FRAGMENT_MIN => {
+                    Some(tp)
+                        if all_live
+                            && workers.len() > 1
+                            && frag.size >= PAR_FRAGMENT_MIN =>
+                    {
                         let mut results: Vec<Option<anyhow::Result<()>>> =
                             workers.iter().map(|_| None).collect();
                         let tasks: Vec<ScopedTask<'_>> = workers
@@ -151,9 +247,15 @@ impl Cocodc {
                         }
                     }
                     _ => {
-                        for (w, snap) in workers.iter_mut().zip(snaps.iter()) {
-                            backend
-                                .delay_comp_fragment(w, frag, new_g, snap, tau, h, lambda)?;
+                        for (m, (w, snap)) in
+                            workers.iter_mut().zip(snaps.iter()).enumerate()
+                        {
+                            // Crashed workers adopt the global fragment
+                            // state when they rejoin; skip them here.
+                            if live.map_or(true, |l| l[m]) {
+                                backend
+                                    .delay_comp_fragment(w, frag, new_g, snap, tau, h, lambda)?;
+                            }
                         }
                     }
                 }
@@ -166,23 +268,44 @@ impl Cocodc {
 
 impl SyncStrategy for Cocodc {
     fn post_step(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        // Retransmit requeued fragments first; their resolutions feed the
+        // live T_s estimate (a timed-out transfer is exactly the evidence
+        // the schedule should back off on).
+        for i in 0..self.pending.len() {
+            let requested_at = ctx.clock.now();
+            if let Some(delivered) = StreamingDiloco::retransmit(&mut self.pending[i], step, ctx) {
+                Self::defer_apply_to_arrival(&mut self.pending[i], step, requested_at, ctx);
+                let obs = Self::ts_observation(&self.pending[i], requested_at, delivered, ctx);
+                self.observe_ts(obs);
+            }
+        }
         self.complete_due(step, ctx)?;
         if step == 0 || step < self.next_init {
             return Ok(());
         }
-        // Recompute Eq. 9/10 from the current T_s estimate (mean fragment).
-        let t_sync = ctx.net.t_sync(ctx.frags.mean_bytes());
+        // Eq. 9/10 from the live T_s estimate (EWMA over observed
+        // transfers), falling back to the static ring-time model until the
+        // first observation.
+        let t_sync = self
+            .ts_ewma
+            .unwrap_or_else(|| ctx.net.t_sync(ctx.frags.mean_bytes()));
         let (_n, h) = Self::schedule_params(ctx.cfg, ctx.frags, t_sync);
-        if let Some(p) = self.select_fragment(step, ctx.cfg.h_steps) {
-            let guard = step.saturating_sub(self.last_initiated[p]) >= ctx.cfg.h_steps;
-            if guard && self.change_rate[p].is_finite() {
+        if let Some((p, reason)) = self.select_fragment(step, ctx.cfg.h_steps) {
+            // Guard-hit accounting uses the selection's own reason; the
+            // is_finite filter keeps cold-start picks (never-synced
+            // fragments with R_p = ∞) out of the counter.
+            if reason == SelectReason::StalenessGuard && self.change_rate[p].is_finite() {
                 ctx.stats.staleness_guard_hits += 1;
             }
-            let pend = StreamingDiloco::initiate(p, step, true, ctx)?;
+            let requested_at = ctx.clock.now();
+            let mut pend = StreamingDiloco::initiate(p, step, true, ctx)?;
+            Self::defer_apply_to_arrival(&mut pend, step, requested_at, ctx);
+            let obs = Self::ts_observation(&pend, requested_at, pend.delivered, ctx);
+            self.observe_ts(obs);
             self.last_initiated[p] = step;
             self.pending.push(pend);
         }
-        self.next_init = step + h;
+        self.next_init = step.saturating_add(h);
         Ok(())
     }
 
@@ -192,6 +315,48 @@ impl SyncStrategy for Cocodc {
 
     fn name(&self) -> &'static str {
         "cocodc"
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint) {
+        save_pendings(ck, &self.pending);
+        let k = self.change_rate.len();
+        let mut sched = Vec::with_capacity(6 * k + 6);
+        pack_f64s(&mut sched, &self.change_rate);
+        let as_u64: Vec<u64> = self.last_completed.iter().map(|&x| x as u64).collect();
+        pack_u64s(&mut sched, &as_u64);
+        let as_u64: Vec<u64> = self.last_initiated.iter().map(|&x| x as u64).collect();
+        pack_u64s(&mut sched, &as_u64);
+        pack_u64s(
+            &mut sched,
+            &[self.next_init as u64, self.ts_ewma.is_some() as u64],
+        );
+        pack_f64s(&mut sched, &[self.ts_ewma.unwrap_or(0.0)]);
+        ck.insert("strategy/sched", sched);
+    }
+
+    fn load_state(&mut self, ck: &Checkpoint, pool: &mut BufferPool) -> anyhow::Result<()> {
+        for p in std::mem::take(&mut self.pending) {
+            p.recycle(pool);
+        }
+        self.pending = load_pendings(ck, pool)?;
+        if let Some(s) = ck.get("strategy/sched") {
+            let k = self.change_rate.len();
+            anyhow::ensure!(s.len() == 6 * k + 6, "strategy/sched malformed");
+            self.change_rate = unpack_f64s(&s[0..2 * k]);
+            self.last_completed = unpack_u64s(&s[2 * k..4 * k])
+                .iter()
+                .map(|&x| x as u32)
+                .collect();
+            self.last_initiated = unpack_u64s(&s[4 * k..6 * k])
+                .iter()
+                .map(|&x| x as u32)
+                .collect();
+            let tail = unpack_u64s(&s[6 * k..6 * k + 4]);
+            self.next_init = tail[0] as u32;
+            let ewma = unpack_f64s(&s[6 * k + 4..6 * k + 6])[0];
+            self.ts_ewma = if tail[1] != 0 { Some(ewma) } else { None };
+        }
+        Ok(())
     }
 }
 
@@ -224,16 +389,36 @@ mod tests {
     }
 
     #[test]
+    fn schedule_params_saturates_on_degenerate_t_sync() {
+        let cfg = RunConfig::default();
+        // T_s → 0: the ratio explodes to +inf; N clamps at u32::MAX
+        // (h floors at 1) instead of wrapping.
+        let (n, h) = Cocodc::schedule_params(&cfg, &frags(), 0.0);
+        assert_eq!(n, u32::MAX);
+        assert_eq!(h, 1);
+        // NaN T_s (0/0-style degenerate estimate): falls to the K floor.
+        let (n, h) = Cocodc::schedule_params(&cfg, &frags(), f64::NAN);
+        assert_eq!(n, 4);
+        assert_eq!(h, 25);
+        // Negative T_s (clock skew artifact): ratio is negative, K floor.
+        let (n, _) = Cocodc::schedule_params(&cfg, &frags(), -1.0);
+        assert_eq!(n, 4);
+    }
+
+    #[test]
     fn selection_prefers_stale_then_max_rate() {
         let cfg = RunConfig::default();
         let mut c = Cocodc::new(&cfg, &frags());
         // All rates finite; fragment 2 hottest.
         c.change_rate = vec![1.0, 2.0, 5.0, 0.5];
         c.last_initiated = vec![90, 90, 90, 90];
-        assert_eq!(c.select_fragment(100, 100), Some(2));
+        assert_eq!(c.select_fragment(100, 100), Some((2, SelectReason::MaxRate)));
         // Fragment 3 violates the staleness guard -> wins regardless of R.
         c.last_initiated[3] = 0;
-        assert_eq!(c.select_fragment(100, 100), Some(3));
+        assert_eq!(
+            c.select_fragment(100, 100),
+            Some((3, SelectReason::StalenessGuard))
+        );
     }
 
     #[test]
@@ -247,10 +432,13 @@ mod tests {
             t_init: 99,
             apply_step: 104,
             finish_time: 0.0,
+            wire_bytes: 0.0,
+            delivered: true,
             delta_avg: vec![],
             snapshots: None,
+            participants: None,
         });
-        assert_eq!(c.select_fragment(100, 100), Some(1));
+        assert_eq!(c.select_fragment(100, 100), Some((1, SelectReason::MaxRate)));
     }
 
     #[test]
@@ -259,9 +447,30 @@ mod tests {
         let mut c = Cocodc::new(&cfg, &frags());
         // Nothing synced yet: all ∞; deterministic tie-break -> fragment 0.
         c.last_initiated = vec![1; 4];
-        assert_eq!(c.select_fragment(2, 100), Some(0));
+        assert_eq!(c.select_fragment(2, 100), Some((0, SelectReason::MaxRate)));
         c.change_rate[0] = 3.0; // fragment 0 done once, others still ∞
         c.change_rate[1] = 2.0;
-        assert!(matches!(c.select_fragment(2, 100), Some(2)));
+        assert!(matches!(
+            c.select_fragment(2, 100),
+            Some((2, SelectReason::MaxRate))
+        ));
+    }
+
+    #[test]
+    fn ts_ewma_blends_observations() {
+        let cfg = RunConfig::default();
+        let mut c = Cocodc::new(&cfg, &frags());
+        assert_eq!(c.ts_ewma, None);
+        c.observe_ts(1.0);
+        assert_eq!(c.ts_ewma, Some(1.0));
+        c.observe_ts(11.0); // outage-stretched observation pulls it up...
+        let after = c.ts_ewma.unwrap();
+        assert!((after - (0.3 * 11.0 + 0.7)).abs() < 1e-12);
+        c.observe_ts(1.0); // ...and recovery pulls it back down.
+        assert!(c.ts_ewma.unwrap() < after);
+        // Degenerate observations are ignored.
+        c.observe_ts(f64::NAN);
+        c.observe_ts(-5.0);
+        assert!(c.ts_ewma.unwrap().is_finite());
     }
 }

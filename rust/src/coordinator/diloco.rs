@@ -3,6 +3,16 @@
 //! of the new global state by every worker. Compute and communication are
 //! strictly serialized — the resource underutilization the paper's §I
 //! motivates against — which the virtual clock charges as a stall.
+//!
+//! Under a fault plan the blocking design has no overlap to hide behind:
+//! every dropped attempt, backoff wait and timeout is a dead stall on the
+//! critical path (the measured baseline the resilience experiments compare
+//! against). The strategy never gives up — a timed-out budget just starts a
+//! fresh one from the later virtual time, since there is no pending queue
+//! to park the round in.
+
+use crate::checkpoint::{pack_u64s, unpack_u64s, Checkpoint};
+use crate::util::pool::BufferPool;
 
 use super::strategy::{SyncCtx, SyncStrategy};
 
@@ -25,33 +35,50 @@ impl SyncStrategy for Diloco {
         }
         self.rounds += 1;
         // Blocking full-model ring all-reduce: charge the WAN and stall.
-        let now = ctx.clock.now();
+        // Losses retry inside the budget; an exhausted budget stalls to its
+        // resolution time and starts over (each round strictly advances the
+        // clock, so this terminates).
         let bytes = ctx.cfg.compression.wire_bytes(ctx.frags.total_params());
-        let transfer = ctx.net.schedule_allreduce(now, bytes);
-        ctx.clock.stall_until(transfer.finish);
-        ctx.stats.bytes += bytes;
         ctx.stats.syncs_initiated += ctx.frags.k();
+        let transfer = loop {
+            let now = ctx.clock.now();
+            let sched = ctx.net.schedule_with_retries(now, bytes);
+            ctx.stats.retries += sched.retries() as usize;
+            ctx.stats.drops += sched.drops as usize;
+            ctx.stats.bytes += bytes * sched.attempts as f64;
+            match sched.transfer {
+                Some(t) => break t,
+                None => {
+                    ctx.stats.timeouts += 1;
+                    ctx.clock.stall_until(sched.resolved_at);
+                }
+            }
+        };
+        ctx.stats.queue_delay_dist.record(transfer.queue_delay());
+        ctx.clock.stall_until(transfer.finish);
         ctx.stats.syncs_completed += ctx.frags.k();
 
         // Per fragment: Δ^g = mean(θ^m − θ^g); outer step; adopt. The
         // pseudo-gradient is averaged backend-side straight over resident
         // worker state (no per-worker fragment copies); `delta` lives in a
         // pooled buffer and the refreshed global is written back through
-        // the fragment API — no steady-state allocations.
+        // the fragment API — no steady-state allocations. While a worker is
+        // crashed the mean renormalizes over survivors and the adoption
+        // write skips it (it adopts θ^g wholesale on rejoin).
+        let live = ctx.live;
         for p in 0..ctx.frags.k() {
             let frag = ctx.frags.get(p);
             let mut delta = ctx.pool.take(frag.size);
-            {
-                let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
-                ctx.backend.pseudo_mean_fragment(ctx.workers, frag, theta_g, &mut delta)?;
-            }
+            ctx.pseudo_mean_live(p, &mut delta)?;
             ctx.cfg.compression.round_trip(&mut delta);
             ctx.outer_step(p, &delta)?;
             ctx.stats.per_fragment[p] += 1;
             {
                 let new_g = &ctx.global.theta_g[frag.range()];
-                for w in ctx.workers.iter_mut() {
-                    ctx.backend.write_fragment(w, frag, new_g)?;
+                for (m, w) in ctx.workers.iter_mut().enumerate() {
+                    if live.map_or(true, |l| l[m]) {
+                        ctx.backend.write_fragment(w, frag, new_g)?;
+                    }
                 }
             }
             ctx.pool.put(delta);
@@ -65,5 +92,19 @@ impl SyncStrategy for Diloco {
 
     fn name(&self) -> &'static str {
         "diloco"
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint) {
+        let mut s = Vec::with_capacity(2);
+        pack_u64s(&mut s, &[self.rounds as u64]);
+        ck.insert("strategy/diloco", s);
+    }
+
+    fn load_state(&mut self, ck: &Checkpoint, _pool: &mut BufferPool) -> anyhow::Result<()> {
+        if let Some(s) = ck.get("strategy/diloco") {
+            anyhow::ensure!(s.len() == 2, "strategy/diloco malformed");
+            self.rounds = unpack_u64s(s)[0] as usize;
+        }
+        Ok(())
     }
 }

@@ -1,14 +1,17 @@
 //! The `SyncStrategy` trait: how a cross-region method reacts after each
 //! lockstep local training step, plus the state shared by all methods.
 
+use crate::checkpoint::Checkpoint;
 use crate::config::{MethodKind, RunConfig};
 use crate::coordinator::fragments::FragmentTable;
 use crate::coordinator::{cocodc::Cocodc, diloco::Diloco, streaming::StreamingDiloco};
+use crate::metrics::Dist;
 use crate::network::WanSimulator;
 use crate::runtime::{Backend, WorkerHandle};
 use crate::simclock::VirtualClock;
 use crate::util::pool::BufferPool;
 use crate::util::threadpool::WorkerPool;
+use crate::util::vecops;
 
 /// Consensus state shared (deterministically replicated) by all workers:
 /// the last-synchronized global fragment states θ_p^g and the outer
@@ -44,6 +47,19 @@ pub struct SyncStats {
     pub staleness_guard_hits: usize,
     /// Times a worker stalled waiting for an overdue fragment.
     pub apply_stalls: usize,
+    /// Retransmission attempts after in-flight losses (fault plan).
+    pub retries: usize,
+    /// Transfer attempts lost in flight.
+    pub drops: usize,
+    /// Logical transfers that exhausted their retry/timeout budget.
+    pub timeouts: usize,
+    /// Timed-out fragments re-entered into the pending queue for later
+    /// retransmission.
+    pub requeues: usize,
+    /// Distribution of effective overlap depths τ over delivered syncs.
+    pub tau_dist: Dist,
+    /// Distribution of transfer queue delays (seconds) over delivered syncs.
+    pub queue_delay_dist: Dist,
 }
 
 impl SyncStats {
@@ -77,6 +93,11 @@ pub struct SyncCtx<'a> {
     /// Persistent worker threads for per-worker fan-out (None = serial;
     /// results are bit-identical either way, fan-out is elementwise).
     pub threads: Option<&'a WorkerPool>,
+    /// Per-worker liveness mask maintained by the trainer's fault plan
+    /// (None = everyone live, the common case). Crashed workers keep their
+    /// frozen resident state but are excluded from pseudo-gradient means
+    /// and from sync result application until they rejoin.
+    pub live: Option<&'a [bool]>,
 }
 
 impl<'a> SyncCtx<'a> {
@@ -91,6 +112,49 @@ impl<'a> SyncCtx<'a> {
         let mom = &mut self.global.outer_momentum[frag.range()];
         self.backend.outer_step_fragment(frag, tg, delta, mom, lr, mu)
     }
+
+    pub fn is_live(&self, m: usize) -> bool {
+        self.live.map_or(true, |l| l.get(m).copied().unwrap_or(true))
+    }
+
+    pub fn all_live(&self) -> bool {
+        self.live.map_or(true, |l| l.iter().all(|&x| x))
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live
+            .map_or(self.workers.len(), |l| l.iter().filter(|&&x| x).count())
+    }
+
+    /// Averaged pseudo-gradient of fragment `p` over the *surviving*
+    /// workers (quorum semantics: the mean renormalizes over live workers,
+    /// so a crashed worker's frozen replica never dilutes the consensus).
+    /// With everyone live this is the backend's zero-copy resident-state
+    /// path — bit-identical to the pre-fault builds; the degraded path
+    /// copies live rows into pooled buffers (allocation there is fine: it
+    /// only runs while a worker is down).
+    pub fn pseudo_mean_live(&mut self, p: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        let frag = self.frags.get(p);
+        if self.all_live() {
+            let theta_g = self.frags.slice(&self.global.theta_g, p);
+            return self.backend.pseudo_mean_fragment(self.workers, frag, theta_g, out);
+        }
+        anyhow::ensure!(self.live_count() > 0, "no live workers to average");
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for (m, w) in self.workers.iter().enumerate() {
+            if self.live.map_or(true, |l| l[m]) {
+                let mut buf = self.pool.take(frag.size);
+                self.backend.read_fragment(w, frag, &mut buf)?;
+                rows.push(buf);
+            }
+        }
+        let theta_g = self.frags.slice(&self.global.theta_g, p);
+        vecops::fused_pseudo_mean(out, &rows, theta_g);
+        for r in rows {
+            self.pool.put(r);
+        }
+        Ok(())
+    }
 }
 
 /// A cross-region synchronization method (one of the paper's three).
@@ -103,6 +167,22 @@ pub trait SyncStrategy: Send {
     fn pending(&self) -> usize;
 
     fn name(&self) -> &'static str;
+
+    /// Serialize strategy-internal state (in-flight syncs, schedule
+    /// history) into `strategy/*` checkpoint sections so a resumed run
+    /// replays identically even with transfers in flight — including across
+    /// an active fault window.
+    fn save_state(&self, ck: &mut Checkpoint) {
+        let _ = ck;
+    }
+
+    /// Inverse of [`SyncStrategy::save_state`]; pre-existing in-flight
+    /// state is recycled into `pool`. Checkpoints without `strategy/*`
+    /// sections (older format) restore to an empty schedule.
+    fn load_state(&mut self, ck: &Checkpoint, pool: &mut BufferPool) -> anyhow::Result<()> {
+        let _ = (ck, pool);
+        Ok(())
+    }
 }
 
 /// Instantiate the configured method.

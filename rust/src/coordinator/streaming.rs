@@ -14,13 +14,23 @@
 //! inconsistency (only fragment p refreshed) enter — the effects CoCoDC
 //! compensates for.
 //!
+//! Degraded-mode semantics (DESIGN.md §Faults): transfers are driven
+//! through the WAN's retry/backoff path; a logical transfer that exhausts
+//! its budget leaves its `Pending` in the queue *undelivered* and the data
+//! (captured at initiation) is retransmitted at the next post-step — a
+//! requeue, not a new sync. While workers are crashed the pseudo-gradient
+//! mean renormalizes over survivors and results are applied only to live
+//! workers.
+//!
 //! Hot-path discipline (see DESIGN.md §Hot path): snapshots and the
 //! averaged pseudo-gradient live in pooled buffers recycled across syncs,
 //! the averaging itself is the fused one-pass-per-worker kernel, the blend
 //! is the fused α-kernel over a borrowed θ_g slice (no fragment copy), and
 //! due entries drain from the pending queue in place — steady state does
-//! zero heap allocations per initiate/complete cycle.
+//! zero heap allocations per initiate/complete cycle on the fault-free
+//! path (the degraded paths may allocate; they only run during faults).
 
+use crate::checkpoint::{pack_f64s, pack_u64s, unpack_f64s, unpack_u64s, Checkpoint};
 use crate::config::RunConfig;
 use crate::config::TauMode;
 use crate::coordinator::fragments::FragmentTable;
@@ -37,16 +47,28 @@ pub(crate) struct Pending {
     pub frag: usize,
     /// Initiation step t_p.
     pub t_init: u32,
-    /// Local step t_l at which the result is applied (t_p + τ).
+    /// Local step t_l at which the result is applied (t_p + τ);
+    /// `u32::MAX` while undelivered (timed out, awaiting retransmission).
     pub apply_step: u32,
-    /// Virtual time the all-reduce finishes (for stall accounting).
+    /// Virtual time the all-reduce finishes (for stall accounting). For an
+    /// undelivered entry: the time the timeout was detected (no
+    /// retransmission before then).
     pub finish_time: f64,
+    /// Bytes one transmission attempt puts on the wire (retransmissions
+    /// re-charge it).
+    pub wire_bytes: f64,
+    /// False when the retry budget was exhausted: the fragment sits in the
+    /// queue awaiting retransmission of the already-captured data.
+    pub delivered: bool,
     /// Averaged pseudo-gradient Δθ_p^g (computed at initiation: the data is
     /// fixed once the transfer starts).
     pub delta_avg: Vec<f32>,
     /// Per-worker parameter snapshots θ_{p,t_p}^m (needed by CoCoDC's
     /// delay compensation; None for plain streaming to save memory).
     pub snapshots: Option<Vec<Vec<f32>>>,
+    /// Live mask at initiation when some worker was crashed (None = all
+    /// workers participated — the fast, allocation-free case).
+    pub participants: Option<Vec<bool>>,
 }
 
 impl Pending {
@@ -57,6 +79,99 @@ impl Pending {
             pool.put_shell(snaps);
         }
     }
+}
+
+/// Serialize the pending queue into `strategy/*` sections so in-flight
+/// syncs survive checkpoint/restore (including mid fault window).
+pub(crate) fn save_pendings(ck: &mut Checkpoint, pending: &[Pending]) {
+    let mut count = Vec::new();
+    pack_u64s(&mut count, &[pending.len() as u64]);
+    ck.insert("strategy/pending_count", count);
+    for (i, p) in pending.iter().enumerate() {
+        let mut meta = Vec::new();
+        pack_u64s(
+            &mut meta,
+            &[
+                p.frag as u64,
+                p.t_init as u64,
+                p.apply_step as u64,
+                p.delivered as u64,
+                p.snapshots.as_ref().map_or(0, |s| s.len() as u64),
+                p.participants.as_ref().map_or(0, |l| l.len() as u64),
+            ],
+        );
+        pack_f64s(&mut meta, &[p.finish_time, p.wire_bytes]);
+        if let Some(l) = &p.participants {
+            meta.extend(l.iter().map(|&b| if b { 1.0f32 } else { 0.0 }));
+        }
+        ck.insert(&format!("strategy/p{i}/meta"), meta);
+        ck.insert(&format!("strategy/p{i}/delta"), p.delta_avg.clone());
+        if let Some(snaps) = &p.snapshots {
+            for (j, s) in snaps.iter().enumerate() {
+                ck.insert(&format!("strategy/p{i}/snap{j}"), s.clone());
+            }
+        }
+    }
+}
+
+/// Inverse of [`save_pendings`]; buffers come from `pool`. Returns an
+/// empty queue for checkpoints without `strategy/*` sections (older
+/// format: in-flight syncs were simply not captured).
+pub(crate) fn load_pendings(
+    ck: &Checkpoint,
+    pool: &mut BufferPool,
+) -> anyhow::Result<Vec<Pending>> {
+    let Some(cnt) = ck.get("strategy/pending_count") else {
+        return Ok(Vec::new());
+    };
+    anyhow::ensure!(cnt.len() == 2, "strategy/pending_count malformed");
+    let n = unpack_u64s(cnt)[0] as usize;
+    anyhow::ensure!(n <= 4096, "implausible pending count {n}");
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let need = |name: String| {
+            ck.get(&name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing section {name}"))
+        };
+        let meta = need(format!("strategy/p{i}/meta"))?;
+        anyhow::ensure!(meta.len() >= 16, "strategy/p{i}/meta malformed");
+        let u = unpack_u64s(&meta[0..12]);
+        let f = unpack_f64s(&meta[12..16]);
+        let (n_snap, n_part) = (u[4] as usize, u[5] as usize);
+        anyhow::ensure!(meta.len() == 16 + n_part, "strategy/p{i}/meta malformed");
+        let participants = if n_part == 0 {
+            None
+        } else {
+            Some(meta[16..].iter().map(|&x| x != 0.0).collect())
+        };
+        let delta_src = need(format!("strategy/p{i}/delta"))?;
+        let mut delta_avg = pool.take(delta_src.len());
+        delta_avg.copy_from_slice(delta_src);
+        let snapshots = if n_snap == 0 {
+            None
+        } else {
+            let mut shell = pool.take_shell();
+            for j in 0..n_snap {
+                let src = need(format!("strategy/p{i}/snap{j}"))?;
+                let mut buf = pool.take(src.len());
+                buf.copy_from_slice(src);
+                shell.push(buf);
+            }
+            Some(shell)
+        };
+        out.push(Pending {
+            frag: u[0] as usize,
+            t_init: u[1] as u32,
+            apply_step: u[2] as u32,
+            finish_time: f[0],
+            wire_bytes: f[1],
+            delivered: u[3] != 0,
+            delta_avg,
+            snapshots,
+            participants,
+        });
+    }
+    Ok(out)
 }
 
 pub struct StreamingDiloco {
@@ -78,6 +193,10 @@ impl StreamingDiloco {
     /// worker fragments are read out of the backend's resident state —
     /// the only parameter data that crosses the runtime boundary per sync;
     /// plain streaming averages backend-side with zero fragment copies.
+    ///
+    /// The transfer runs through the WAN's retry/backoff path; on budget
+    /// exhaustion the returned entry is undelivered (requeued) and will be
+    /// retransmitted by [`StreamingDiloco::retransmit`].
     pub(crate) fn initiate(
         p: usize,
         t: u32,
@@ -86,6 +205,7 @@ impl StreamingDiloco {
     ) -> anyhow::Result<Pending> {
         let frag = ctx.frags.get(p);
         let mut delta_avg = ctx.pool.take(frag.size);
+        let all_live = ctx.all_live();
         let snaps = if keep_snapshots {
             let mut snaps = ctx.pool.take_shell();
             for w in ctx.workers.iter() {
@@ -94,44 +214,132 @@ impl StreamingDiloco {
                 snaps.push(buf);
             }
             let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
-            // Average from the snapshots (bit-identical to the resident
-            // rows they were copied from — same kernel, same order).
-            vecops::fused_pseudo_mean(&mut delta_avg, &snaps, theta_g);
+            if all_live {
+                // Average from the snapshots (bit-identical to the resident
+                // rows they were copied from — same kernel, same order).
+                vecops::fused_pseudo_mean(&mut delta_avg, &snaps, theta_g);
+            } else {
+                // Quorum: the mean renormalizes over surviving workers so a
+                // crashed worker's frozen replica never dilutes consensus.
+                anyhow::ensure!(ctx.live_count() > 0, "no live workers to average");
+                let rows: Vec<&[f32]> = snaps
+                    .iter()
+                    .enumerate()
+                    .filter(|(m, _)| ctx.is_live(*m))
+                    .map(|(_, r)| r.as_slice())
+                    .collect();
+                vecops::fused_pseudo_mean(&mut delta_avg, &rows, theta_g);
+            }
             Some(snaps)
         } else {
-            let theta_g = ctx.frags.slice(&ctx.global.theta_g, p);
-            ctx.backend.pseudo_mean_fragment(ctx.workers, frag, theta_g, &mut delta_avg)?;
+            ctx.pseudo_mean_live(p, &mut delta_avg)?;
             None
         };
+        let participants = if all_live { None } else { ctx.live.map(|l| l.to_vec()) };
         // What the wire would carry: round-trip through the codec and pay
         // for the compressed size (Streaming DiLoCo ships quantized
         // pseudo-gradients; the optimizer sees the dequantized values).
         ctx.cfg.compression.round_trip(&mut delta_avg);
         let wire = ctx.cfg.compression.wire_bytes(frag.size);
-        let transfer = ctx.net.schedule_allreduce(ctx.clock.now(), wire);
-        ctx.stats.bytes += wire;
+        let now = ctx.clock.now();
+        let sched = ctx.net.schedule_with_retries(now, wire);
         ctx.stats.syncs_initiated += 1;
-        let tau = match ctx.cfg.tau {
-            TauMode::Fixed { tau } => tau,
-            TauMode::Network => ctx.net.tau_steps(
-                ctx.clock.now(),
-                transfer.finish,
-                ctx.cfg.network.step_compute_s,
-            ),
-        };
-        Ok(Pending {
-            frag: p,
-            t_init: t,
-            apply_step: t + tau,
-            finish_time: transfer.finish,
-            delta_avg,
-            snapshots: snaps,
-        })
+        ctx.stats.retries += sched.retries() as usize;
+        ctx.stats.drops += sched.drops as usize;
+        // Lost attempts consumed the wire too.
+        ctx.stats.bytes += wire * sched.attempts as f64;
+        match sched.transfer {
+            Some(transfer) => {
+                let tau = match ctx.cfg.tau {
+                    TauMode::Fixed { tau } => tau,
+                    TauMode::Network => ctx.net.tau_steps(
+                        now,
+                        transfer.finish,
+                        ctx.cfg.network.step_compute_s,
+                    ),
+                };
+                ctx.stats.tau_dist.record(tau as f64);
+                ctx.stats.queue_delay_dist.record(transfer.queue_delay());
+                Ok(Pending {
+                    frag: p,
+                    t_init: t,
+                    apply_step: t.saturating_add(tau),
+                    finish_time: transfer.finish,
+                    wire_bytes: wire,
+                    delivered: true,
+                    delta_avg,
+                    snapshots: snaps,
+                    participants,
+                })
+            }
+            None => {
+                // Budget exhausted: keep the captured data queued and
+                // retransmit once the failure is detected.
+                ctx.stats.timeouts += 1;
+                ctx.stats.requeues += 1;
+                Ok(Pending {
+                    frag: p,
+                    t_init: t,
+                    apply_step: u32::MAX,
+                    finish_time: sched.resolved_at,
+                    wire_bytes: wire,
+                    delivered: false,
+                    delta_avg,
+                    snapshots: snaps,
+                    participants,
+                })
+            }
+        }
+    }
+
+    /// Retransmit an undelivered (timed-out) pending once its failure is
+    /// known on the virtual clock. Returns None when there was nothing to
+    /// do, `Some(delivered)` after a retransmission round. The fragment
+    /// data is NOT re-captured — the sync semantically belongs to `t_init`
+    /// and its staleness keeps growing, which the delay-compensated apply
+    /// sees through `apply_step − t_init`.
+    pub(crate) fn retransmit(
+        pend: &mut Pending,
+        step: u32,
+        ctx: &mut SyncCtx,
+    ) -> Option<bool> {
+        if pend.delivered || pend.finish_time > ctx.clock.now() {
+            return None;
+        }
+        let now = ctx.clock.now();
+        let sched = ctx.net.schedule_with_retries(now, pend.wire_bytes);
+        // Every attempt here retransmits the original logical transfer.
+        ctx.stats.retries += sched.attempts as usize;
+        ctx.stats.drops += sched.drops as usize;
+        ctx.stats.bytes += pend.wire_bytes * sched.attempts as f64;
+        match sched.transfer {
+            Some(t) => {
+                let tau = match ctx.cfg.tau {
+                    TauMode::Fixed { tau } => tau,
+                    TauMode::Network => {
+                        ctx.net.tau_steps(now, t.finish, ctx.cfg.network.step_compute_s)
+                    }
+                };
+                ctx.stats.tau_dist.record(tau as f64);
+                ctx.stats.queue_delay_dist.record(t.queue_delay());
+                pend.delivered = true;
+                pend.finish_time = t.finish;
+                pend.apply_step = step.saturating_add(tau);
+                Some(true)
+            }
+            None => {
+                ctx.stats.timeouts += 1;
+                ctx.stats.requeues += 1;
+                pend.finish_time = sched.resolved_at;
+                Some(false)
+            }
+        }
     }
 
     /// Complete every pending sync due at `step`: outer step + α-blend.
     /// Due entries are extracted in place (stable order) — the pending
-    /// queue is never rebuilt.
+    /// queue is never rebuilt. Undelivered entries (`apply_step ==
+    /// u32::MAX`) are never due.
     fn complete_due(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
         let mut i = 0;
         while i < self.pending.len() {
@@ -152,13 +360,18 @@ impl StreamingDiloco {
             ctx.stats.syncs_completed += 1;
             ctx.stats.per_fragment[p] += 1;
             let alpha = ctx.cfg.alpha;
+            let live = ctx.live;
             {
                 // θ_g and worker handles are disjoint SyncCtx fields: the
                 // backend blends its resident fragment straight from the
-                // borrowed global slice, no fragment copy.
+                // borrowed global slice, no fragment copy. Workers crashed
+                // *right now* are skipped — they adopt the full global
+                // fragment state when they rejoin.
                 let new_g = &ctx.global.theta_g[frag.range()];
-                for w in ctx.workers.iter_mut() {
-                    ctx.backend.alpha_blend_fragment(w, frag, new_g, alpha)?;
+                for (m, w) in ctx.workers.iter_mut().enumerate() {
+                    if live.map_or(true, |l| l[m]) {
+                        ctx.backend.alpha_blend_fragment(w, frag, new_g, alpha)?;
+                    }
                 }
             }
             pend.recycle(ctx.pool);
@@ -169,6 +382,11 @@ impl StreamingDiloco {
 
 impl SyncStrategy for StreamingDiloco {
     fn post_step(&mut self, step: u32, ctx: &mut SyncCtx) -> anyhow::Result<()> {
+        // Requeued fragments first: retransmission precedes new initiations
+        // so a stale fragment cannot starve behind fresh traffic.
+        for pend in self.pending.iter_mut() {
+            let _ = Self::retransmit(pend, step, ctx);
+        }
         self.complete_due(step, ctx)?;
         if step == 0 {
             return Ok(());
@@ -191,5 +409,17 @@ impl SyncStrategy for StreamingDiloco {
 
     fn name(&self) -> &'static str {
         "streaming_diloco"
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint) {
+        save_pendings(ck, &self.pending);
+    }
+
+    fn load_state(&mut self, ck: &Checkpoint, pool: &mut BufferPool) -> anyhow::Result<()> {
+        for p in std::mem::take(&mut self.pending) {
+            p.recycle(pool);
+        }
+        self.pending = load_pendings(ck, pool)?;
+        Ok(())
     }
 }

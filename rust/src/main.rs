@@ -10,7 +10,7 @@
 
 use std::path::PathBuf;
 
-use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::config::{FaultConfig, MethodKind, RunConfig, TauMode};
 use cocodc::metrics::{table1, write_curves_csv};
 use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
@@ -39,6 +39,9 @@ train/compare flags:
   --tau-network       derive tau from the WAN simulator
   --alpha X --lambda X --gamma X --seed N --eval-every N
   --codec C           pseudo-gradient wire codec: none|int8|int4
+  --fault-severity X  scripted WAN fault scenario of severity X in (0,1]:
+                      link outage + bandwidth degradation + transfer loss
+                      + straggler + worker crash/recover, scaled by X
   --hlo-fragment-ops  run outer/delay-comp through Pallas artifacts
   --out FILE          write validation curve CSV
   --save FILE         write final checkpoint (train only)
@@ -99,6 +102,12 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     if let Some(c) = args.get("codec") {
         cfg.compression = cocodc::compression::Codec::parse(c)?;
     }
+    if let Some(sev) = args.get_parse::<f64>("fault-severity")? {
+        // Scenario windows are placed relative to the compute-only horizon;
+        // stalls only push the run further past them.
+        let horizon = cfg.total_steps as f64 * cfg.network.step_compute_s;
+        cfg.faults = FaultConfig::scenario(sev, horizon, cfg.workers);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -137,6 +146,21 @@ fn summarize(o: &cocodc::TrainOutcome) {
         o.curve.final_ppl().unwrap_or(f64::NAN),
         o.real_s,
     );
+    if o.retries + o.drops + o.timeouts + o.requeues > 0 {
+        println!(
+            "[{}] faults: retries={} drops={} timeouts={} requeues={} \
+             tau mean={:.1} max={:.0} queue_delay mean={:.2}s max={:.2}s",
+            o.method,
+            o.retries,
+            o.drops,
+            o.timeouts,
+            o.requeues,
+            o.tau_dist.mean(),
+            o.tau_dist.max_or_zero(),
+            o.queue_delay_dist.mean(),
+            o.queue_delay_dist.max_or_zero(),
+        );
+    }
 }
 
 fn main() -> anyhow::Result<()> {

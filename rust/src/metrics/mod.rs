@@ -4,6 +4,57 @@
 use std::io::Write;
 use std::path::Path;
 
+/// A streaming scalar distribution (count/sum/min/max), `Copy` so hot-path
+/// recording never allocates. Used for the τ and queue-delay distributions
+/// in `SyncStats`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Dist {
+    fn default() -> Self {
+        Dist { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+impl Dist {
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Min with empty-distribution reporting as 0 (for CSV emission).
+    pub fn min_or_zero(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max_or_zero(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
 /// One validation measurement.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvalPoint {
@@ -166,6 +217,21 @@ mod tests {
             c.push(s, s as f64 * 0.1, loss);
         }
         c
+    }
+
+    #[test]
+    fn dist_tracks_count_sum_min_max() {
+        let mut d = Dist::default();
+        assert_eq!(d.mean(), 0.0);
+        assert_eq!(d.min_or_zero(), 0.0);
+        assert_eq!(d.max_or_zero(), 0.0);
+        for x in [3.0, 1.0, 2.0] {
+            d.record(x);
+        }
+        assert_eq!(d.count, 3);
+        assert!((d.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(d.min, 1.0);
+        assert_eq!(d.max, 3.0);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Runtime fault plan: evaluates the scripted [`FaultConfig`] against the
+//! virtual clock and owns the transfer-loss RNG stream.
+//!
+//! Determinism contract (DESIGN.md §Faults): every probabilistic draw flows
+//! through a dedicated seeded xoshiro stream (`0xFA17`), separate from the
+//! jitter stream, so adding faults never perturbs jitter sequences and a
+//! (seed, plan) pair fully determines which transfers are lost. The stream
+//! is only consumed when `transfer_loss_prob > 0`, and its position is
+//! checkpointable alongside the jitter RNG so resumed runs replay the same
+//! losses.
+
+use crate::config::{FaultConfig, RetryPolicy};
+use crate::util::Rng;
+
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    rng: Rng,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig, seed: u64) -> Self {
+        FaultPlan { cfg, rng: Rng::new(seed, 0xFA17) }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.cfg.is_active()
+    }
+
+    pub fn retry(&self) -> RetryPolicy {
+        self.cfg.retry
+    }
+
+    /// If `t` falls inside an outage, the end of the *latest* outage window
+    /// covering it (adjacent/overlapping windows chain).
+    pub fn outage_end(&self, t: f64) -> Option<f64> {
+        let mut cursor = t;
+        let mut end = None;
+        // Chase chained windows: an outage ending inside another extends it.
+        loop {
+            let mut advanced = false;
+            for o in &self.cfg.outages {
+                if o.contains(cursor) && o.end_s() > cursor {
+                    cursor = o.end_s();
+                    end = Some(cursor);
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                return end;
+            }
+        }
+    }
+
+    /// Effective-bandwidth multiplier at time `t` (stacked degradation
+    /// windows multiply).
+    pub fn bandwidth_factor(&self, t: f64) -> f64 {
+        let mut f = 1.0;
+        for d in &self.cfg.degradations {
+            if d.window.contains(t) {
+                f *= d.bandwidth_factor;
+            }
+        }
+        f
+    }
+
+    /// Draw whether the next transfer is lost in flight. Consumes the RNG
+    /// stream only when loss is enabled, so fault-free plans (and plans with
+    /// outages but no loss) stay bit-identical to builds without this call.
+    pub fn draw_loss(&mut self) -> bool {
+        self.cfg.transfer_loss_prob > 0.0 && self.rng.next_f64() < self.cfg.transfer_loss_prob
+    }
+
+    /// Is `worker` inside one of its crash windows at time `t`?
+    pub fn is_crashed(&self, worker: usize, t: f64) -> bool {
+        self.cfg
+            .crashes
+            .iter()
+            .any(|c| c.worker == worker && c.window.contains(t))
+    }
+
+    /// Per-step compute-time multiplier: the synchronous inner loop paces at
+    /// the slowest *live* worker, so this is the max straggler multiplier
+    /// over workers marked live (1.0 with no stragglers or all crashed).
+    pub fn compute_multiplier(&self, live: &[bool]) -> f64 {
+        if self.cfg.stragglers.is_empty() {
+            return 1.0;
+        }
+        let mut m = 1.0f64;
+        for (w, &alive) in live.iter().enumerate() {
+            if alive {
+                if let Some(&s) = self.cfg.stragglers.get(w) {
+                    m = m.max(s);
+                }
+            }
+        }
+        m
+    }
+
+    /// Loss-RNG state for checkpointing (jitter RNG is captured separately
+    /// by the simulator).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub fn restore_rng(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CrashWindow, Degradation, FaultWindow};
+
+    fn window(start: f64, dur: f64) -> FaultWindow {
+        FaultWindow { start_s: start, duration_s: dur }
+    }
+
+    #[test]
+    fn outage_end_chases_chained_windows() {
+        let cfg = FaultConfig {
+            outages: vec![window(10.0, 5.0), window(14.0, 10.0)],
+            ..Default::default()
+        };
+        let p = FaultPlan::new(cfg, 1);
+        assert_eq!(p.outage_end(5.0), None);
+        assert_eq!(p.outage_end(11.0), Some(24.0)); // 10→15 chains into 14→24
+        assert_eq!(p.outage_end(20.0), Some(24.0));
+        assert_eq!(p.outage_end(24.0), None);
+    }
+
+    #[test]
+    fn degradations_stack_multiplicatively() {
+        let cfg = FaultConfig {
+            degradations: vec![
+                Degradation { window: window(0.0, 100.0), bandwidth_factor: 0.5 },
+                Degradation { window: window(50.0, 10.0), bandwidth_factor: 0.4 },
+            ],
+            ..Default::default()
+        };
+        let p = FaultPlan::new(cfg, 1);
+        assert!((p.bandwidth_factor(10.0) - 0.5).abs() < 1e-12);
+        assert!((p.bandwidth_factor(55.0) - 0.2).abs() < 1e-12);
+        assert!((p.bandwidth_factor(200.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_draws_are_deterministic_and_skip_rng_when_disabled() {
+        let cfg = FaultConfig { transfer_loss_prob: 0.5, ..Default::default() };
+        let mut a = FaultPlan::new(cfg.clone(), 7);
+        let mut b = FaultPlan::new(cfg, 7);
+        for _ in 0..64 {
+            assert_eq!(a.draw_loss(), b.draw_loss());
+        }
+        // Disabled loss must not consume the stream.
+        let mut c = FaultPlan::new(FaultConfig::default(), 7);
+        let before = c.rng_state();
+        for _ in 0..64 {
+            assert!(!c.draw_loss());
+        }
+        assert_eq!(c.rng_state(), before);
+    }
+
+    #[test]
+    fn loss_rng_state_round_trips() {
+        let cfg = FaultConfig { transfer_loss_prob: 0.3, ..Default::default() };
+        let mut a = FaultPlan::new(cfg.clone(), 9);
+        for _ in 0..17 {
+            a.draw_loss();
+        }
+        let mut b = FaultPlan::new(cfg, 1234);
+        b.restore_rng(a.rng_state());
+        for _ in 0..50 {
+            assert_eq!(a.draw_loss(), b.draw_loss());
+        }
+    }
+
+    #[test]
+    fn crash_windows_and_straggler_pacing() {
+        let cfg = FaultConfig {
+            stragglers: vec![1.0, 1.8, 1.0, 1.2],
+            crashes: vec![CrashWindow { worker: 3, window: window(10.0, 5.0) }],
+            ..Default::default()
+        };
+        let p = FaultPlan::new(cfg, 1);
+        assert!(!p.is_crashed(3, 9.0));
+        assert!(p.is_crashed(3, 12.0));
+        assert!(!p.is_crashed(3, 15.0));
+        assert!(!p.is_crashed(0, 12.0));
+        assert!((p.compute_multiplier(&[true; 4]) - 1.8).abs() < 1e-12);
+        // Slowest worker crashed → pace at the next-slowest live one.
+        assert!((p.compute_multiplier(&[true, false, true, true]) - 1.2).abs() < 1e-12);
+        let none = FaultPlan::new(FaultConfig::default(), 1);
+        assert!((none.compute_multiplier(&[true; 4]) - 1.0).abs() < 1e-12);
+    }
+}

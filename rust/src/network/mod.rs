@@ -2,10 +2,12 @@
 //! timeline (transfers queue behind each other, matching the paper's
 //! streaming schedule where one fragment is in flight at a time).
 
+pub mod faults;
 pub mod ring;
 
-use crate::config::NetworkConfig;
-use crate::util::Rng;
+use crate::config::{FaultConfig, NetworkConfig};
+use crate::util::{saturating_f64_to_u32, Rng};
+use faults::FaultPlan;
 
 /// A scheduled collective transfer on the simulated WAN.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,6 +30,42 @@ impl Transfer {
     }
 }
 
+/// Result of a single failure-aware scheduling attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TransferOutcome {
+    Delivered(Transfer),
+    /// The transfer was lost in flight; the link time was still consumed
+    /// and the loss is detected (missing all-reduce completion) at
+    /// `detected_at` — the caller must handle this, typically by retrying.
+    Dropped { requested: f64, detected_at: f64, bytes: f64 },
+}
+
+/// Outcome of a logical transfer driven through retry + exponential
+/// backoff under the configured [`crate::config::RetryPolicy`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyncSchedule {
+    /// The delivered transfer, or `None` when the retry/timeout budget was
+    /// exhausted (the fragment must be requeued by the strategy).
+    pub transfer: Option<Transfer>,
+    /// Transmission attempts made (1 on the loss-free fast path).
+    pub attempts: u32,
+    /// Attempts lost in flight (`attempts - 1` on success, `attempts` on
+    /// exhaustion).
+    pub drops: u32,
+    /// Virtual time the final outcome was known: delivery time on success,
+    /// last loss-detection time on exhaustion.
+    pub resolved_at: f64,
+}
+
+impl SyncSchedule {
+    pub fn delivered(&self) -> bool {
+        self.transfer.is_some()
+    }
+    pub fn retries(&self) -> u32 {
+        self.attempts.saturating_sub(1)
+    }
+}
+
 /// Simulated WAN shared by the M datacenters.
 ///
 /// The model: all-reduce of S bytes over an M-node ring costs
@@ -41,21 +79,48 @@ pub struct WanSimulator {
     workers: usize,
     busy_until: f64,
     rng: Rng,
+    faults: FaultPlan,
     /// Total bytes moved per link (for utilization reporting).
     pub bytes_sent: f64,
     pub transfers: usize,
+    /// Transfers lost in flight by the fault plan.
+    pub drops: usize,
+}
+
+/// Checkpointable simulator state (see [`WanSimulator::state`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetState {
+    pub busy_until: f64,
+    pub bytes_sent: f64,
+    pub transfers: usize,
+    pub drops: usize,
+    pub jitter_rng: [u64; 4],
+    pub fault_rng: [u64; 4],
 }
 
 impl WanSimulator {
     pub fn new(cfg: NetworkConfig, workers: usize, seed: u64) -> Self {
+        Self::with_faults(cfg, workers, seed, FaultConfig::default())
+    }
+
+    /// Simulator with a scripted fault plan. The loss RNG stream is forked
+    /// from the same seed as the jitter stream but never shares draws, so
+    /// enabling faults leaves jitter sequences untouched.
+    pub fn with_faults(cfg: NetworkConfig, workers: usize, seed: u64, faults: FaultConfig) -> Self {
         WanSimulator {
             cfg,
             workers,
             busy_until: 0.0,
             rng: Rng::new(seed, 0xC0C0),
+            faults: FaultPlan::new(faults, seed),
             bytes_sent: 0.0,
             transfers: 0,
+            drops: 0,
         }
+    }
+
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// Pure cost of one ring all-reduce of `bytes` (no queueing/jitter).
@@ -69,9 +134,24 @@ impl WanSimulator {
     }
 
     /// Schedule an all-reduce at virtual time `now`; returns its timeline.
+    /// Infallible: scripted outages and bandwidth degradation apply (they
+    /// only stretch the timeline), but probabilistic loss does not — use
+    /// [`WanSimulator::try_schedule_allreduce`] or
+    /// [`WanSimulator::schedule_with_retries`] for the failure-aware path.
     pub fn schedule_allreduce(&mut self, now: f64, bytes: f64) -> Transfer {
-        let start = now.max(self.busy_until);
-        let mut dur = self.ring_time(bytes);
+        let mut start = now.max(self.busy_until);
+        // A transfer requested during a scripted outage queues behind its
+        // end (chained windows are chased by `outage_end`).
+        if let Some(end) = self.faults.outage_end(start) {
+            start = end;
+        }
+        let bw_factor = self.faults.bandwidth_factor(start);
+        let mut dur = ring::ring_allreduce_time(
+            bytes,
+            self.workers,
+            self.cfg.latency_s,
+            self.cfg.bandwidth_bps * bw_factor,
+        );
         if self.cfg.jitter > 0.0 {
             // Multiplicative jitter in [1-j, 1+j], deterministic per seed.
             let u = 2.0 * self.rng.next_f64() - 1.0;
@@ -89,10 +169,72 @@ impl WanSimulator {
         t
     }
 
+    /// Failure-aware scheduling: the transfer may be lost in flight
+    /// (consuming link time either way), surfacing as
+    /// [`TransferOutcome::Dropped`] that the caller must handle.
+    pub fn try_schedule_allreduce(&mut self, now: f64, bytes: f64) -> TransferOutcome {
+        let t = self.schedule_allreduce(now, bytes);
+        if self.faults.draw_loss() {
+            self.drops += 1;
+            TransferOutcome::Dropped { requested: now, detected_at: t.finish, bytes }
+        } else {
+            TransferOutcome::Delivered(t)
+        }
+    }
+
+    /// Drive one logical transfer through retry + exponential backoff under
+    /// the plan's [`crate::config::RetryPolicy`], all accounted on the
+    /// virtual clock: each retry re-enters the link queue after a backoff
+    /// of `base · factor^(drops-1)` seconds from loss detection, bounded by
+    /// `max_attempts` and a total `timeout_budget_s` from `now`.
+    pub fn schedule_with_retries(&mut self, now: f64, bytes: f64) -> SyncSchedule {
+        let policy = self.faults.retry();
+        let deadline = now + policy.timeout_budget_s;
+        let mut request_at = now;
+        let mut attempts = 0u32;
+        let mut drops = 0u32;
+        loop {
+            attempts += 1;
+            match self.try_schedule_allreduce(request_at, bytes) {
+                TransferOutcome::Delivered(t) => {
+                    return SyncSchedule {
+                        transfer: Some(t),
+                        attempts,
+                        drops,
+                        resolved_at: t.finish,
+                    };
+                }
+                TransferOutcome::Dropped { detected_at, .. } => {
+                    drops += 1;
+                    if attempts >= policy.max_attempts {
+                        return SyncSchedule {
+                            transfer: None,
+                            attempts,
+                            drops,
+                            resolved_at: detected_at,
+                        };
+                    }
+                    let backoff =
+                        policy.backoff_base_s * policy.backoff_factor.powi(drops as i32 - 1);
+                    request_at = detected_at + backoff;
+                    if request_at > deadline {
+                        return SyncSchedule {
+                            transfer: None,
+                            attempts,
+                            drops,
+                            resolved_at: detected_at,
+                        };
+                    }
+                }
+            }
+        }
+    }
+
     /// Effective overlap depth in steps for a transfer completing at
-    /// `finish`, given per-step compute time: τ_eff = ceil((finish-now)/T_c).
+    /// `finish`, given per-step compute time: τ_eff = ceil((finish-now)/T_c),
+    /// saturating explicitly on huge `finish` or degenerate inputs.
     pub fn tau_steps(&self, now: f64, finish: f64, step_compute_s: f64) -> u32 {
-        (((finish - now) / step_compute_s).ceil()).max(1.0) as u32
+        saturating_f64_to_u32((((finish - now) / step_compute_s).ceil()).max(1.0)).max(1)
     }
 
     /// Average single-fragment sync time T_s for the adaptive scheduler
@@ -117,18 +259,28 @@ impl WanSimulator {
         &self.cfg
     }
 
-    /// Checkpointable simulator state: (busy_until, bytes_sent, transfers,
-    /// jitter-RNG state). With this restored, a resumed run schedules
-    /// transfers identically to the uninterrupted one.
-    pub fn state(&self) -> (f64, f64, usize, [u64; 4]) {
-        (self.busy_until, self.bytes_sent, self.transfers, self.rng.state())
+    /// Checkpointable simulator state: link timeline, counters and both RNG
+    /// streams (jitter + transfer loss). With this restored, a resumed run
+    /// schedules — and loses — transfers identically to the uninterrupted
+    /// one, even mid fault window.
+    pub fn state(&self) -> NetState {
+        NetState {
+            busy_until: self.busy_until,
+            bytes_sent: self.bytes_sent,
+            transfers: self.transfers,
+            drops: self.drops,
+            jitter_rng: self.rng.state(),
+            fault_rng: self.faults.rng_state(),
+        }
     }
 
-    pub fn restore(&mut self, busy_until: f64, bytes_sent: f64, transfers: usize, rng: [u64; 4]) {
-        self.busy_until = busy_until;
-        self.bytes_sent = bytes_sent;
-        self.transfers = transfers;
-        self.rng = Rng::from_state(rng);
+    pub fn restore(&mut self, st: NetState) {
+        self.busy_until = st.busy_until;
+        self.bytes_sent = st.bytes_sent;
+        self.transfers = st.transfers;
+        self.drops = st.drops;
+        self.rng = Rng::from_state(st.jitter_rng);
+        self.faults.restore_rng(st.fault_rng);
     }
 }
 
@@ -198,6 +350,168 @@ mod tests {
         w.inject_outage_until(50.0);
         let t2 = w.schedule_allreduce(10.0, 1e6);
         assert!(t2.start >= t.finish);
+    }
+
+    #[test]
+    fn tau_steps_saturates_on_degenerate_inputs() {
+        let w = WanSimulator::new(net(), 4, 0);
+        // Huge finish / tiny step compute must clamp, not wrap.
+        assert_eq!(w.tau_steps(0.0, 1e300, 1e-9), u32::MAX);
+        assert_eq!(w.tau_steps(0.0, f64::INFINITY, 0.1), u32::MAX);
+        // NaN propagation (0/0-style inputs) falls back to the τ>=1 floor.
+        assert_eq!(w.tau_steps(0.0, f64::NAN, 0.1), 1);
+        assert_eq!(w.tau_steps(0.0, 1.0, 0.0), u32::MAX); // 1/0 = inf
+        // Transfers finishing in the past still cost one step.
+        assert_eq!(w.tau_steps(100.0, 0.0, 0.1), 1);
+    }
+
+    fn fault_cfg() -> crate::config::FaultConfig {
+        crate::config::FaultConfig::default()
+    }
+
+    #[test]
+    fn scripted_outage_queues_transfers_behind_it() {
+        use crate::config::FaultWindow;
+        let mut f = fault_cfg();
+        f.outages.push(FaultWindow { start_s: 10.0, duration_s: 20.0 });
+        let mut w = WanSimulator::with_faults(net(), 4, 0, f);
+        let before = w.schedule_allreduce(0.0, 1e6);
+        assert_eq!(before.start, 0.0);
+        let during = w.schedule_allreduce(15.0, 1e6);
+        assert_eq!(during.start, 30.0);
+        assert!(during.queue_delay() >= 15.0);
+        let after = w.schedule_allreduce(40.0, 1e6);
+        assert_eq!(after.start, 40.0);
+    }
+
+    #[test]
+    fn degradation_window_stretches_transfers() {
+        use crate::config::{Degradation, FaultWindow};
+        let mut f = fault_cfg();
+        f.degradations.push(Degradation {
+            window: FaultWindow { start_s: 100.0, duration_s: 100.0 },
+            bandwidth_factor: 0.25,
+        });
+        let mut w = WanSimulator::with_faults(net(), 4, 0, f);
+        let clean = w.schedule_allreduce(0.0, 8e6);
+        let slow = w.schedule_allreduce(150.0, 8e6);
+        assert!(
+            slow.duration() > 2.0 * clean.duration(),
+            "degraded window must stretch the bandwidth term"
+        );
+        let recovered = w.schedule_allreduce(300.0, 8e6);
+        assert!((recovered.duration() - clean.duration()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_loss_is_deterministic_and_counted() {
+        let mut f = fault_cfg();
+        f.transfer_loss_prob = 0.5;
+        let mut a = WanSimulator::with_faults(net(), 4, 11, f.clone());
+        let mut b = WanSimulator::with_faults(net(), 4, 11, f);
+        let mut dropped = 0;
+        for i in 0..100 {
+            let now = i as f64 * 10.0;
+            let oa = a.try_schedule_allreduce(now, 1e6);
+            let ob = b.try_schedule_allreduce(now, 1e6);
+            assert_eq!(oa, ob);
+            if let TransferOutcome::Dropped { detected_at, requested, .. } = oa {
+                dropped += 1;
+                // Loss is detected when the missing completion is noticed.
+                assert!(detected_at > requested);
+            }
+        }
+        assert!(dropped > 20 && dropped < 80, "dropped={dropped}");
+        assert_eq!(a.drops, dropped);
+        // A loss-free plan never consumes the loss stream or drops.
+        let mut c = WanSimulator::new(net(), 4, 11);
+        for i in 0..100 {
+            assert!(matches!(
+                c.try_schedule_allreduce(i as f64 * 10.0, 1e6),
+                TransferOutcome::Delivered(_)
+            ));
+        }
+        assert_eq!(c.drops, 0);
+    }
+
+    #[test]
+    fn retries_back_off_exponentially_and_respect_budget() {
+        let mut f = fault_cfg();
+        f.transfer_loss_prob = 0.9;
+        f.retry.max_attempts = 3;
+        f.retry.backoff_base_s = 1.0;
+        f.retry.backoff_factor = 2.0;
+        f.retry.timeout_budget_s = 1e6;
+        let mut w = WanSimulator::with_faults(net(), 4, 5, f);
+        // Drive many logical transfers; at 90% loss with 3 attempts some
+        // exhaust their budget.
+        let mut exhausted = 0;
+        let mut delivered = 0;
+        let mut now = 0.0;
+        for _ in 0..200 {
+            let s = w.schedule_with_retries(now, 1e6);
+            assert!(s.attempts <= 3);
+            assert_eq!(s.drops, if s.delivered() { s.attempts - 1 } else { s.attempts });
+            if s.delivered() {
+                delivered += 1;
+                assert_eq!(s.resolved_at, s.transfer.unwrap().finish);
+            } else {
+                exhausted += 1;
+            }
+            now = s.resolved_at + 5.0;
+        }
+        assert!(exhausted > 0 && delivered > 0, "exhausted={exhausted} delivered={delivered}");
+
+        // Backoff spacing: with deterministic timing, a retried attempt may
+        // not re-enter the queue earlier than detection + base backoff.
+        let mut f2 = fault_cfg();
+        f2.transfer_loss_prob = 0.9;
+        f2.retry.backoff_base_s = 7.0;
+        f2.retry.max_attempts = 2;
+        let mut w2 = WanSimulator::with_faults(net(), 4, 6, f2);
+        for i in 0..50 {
+            let now = i as f64 * 1000.0;
+            let s = w2.schedule_with_retries(now, 1e3);
+            if s.attempts == 2 {
+                if let Some(t) = s.transfer {
+                    assert!(t.start >= now + 7.0, "retry at {} ignores backoff", t.start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tight_timeout_budget_gives_up_before_max_attempts() {
+        let mut f = fault_cfg();
+        f.transfer_loss_prob = 0.999;
+        f.retry.max_attempts = 100;
+        f.retry.backoff_base_s = 10.0;
+        f.retry.timeout_budget_s = 15.0;
+        let mut w = WanSimulator::with_faults(net(), 4, 3, f);
+        let s = w.schedule_with_retries(0.0, 1e6);
+        assert!(!s.delivered());
+        // First loss detected ~0.36s in; first retry would start at ~10.4s
+        // (inside budget), second at ~30s (outside) — far fewer than 100.
+        assert!(s.attempts < 5, "attempts={}", s.attempts);
+    }
+
+    #[test]
+    fn net_state_round_trip_replays_losses() {
+        let mut f = fault_cfg();
+        f.transfer_loss_prob = 0.4;
+        let mut a = WanSimulator::with_faults(net(), 4, 21, f.clone());
+        for i in 0..37 {
+            a.try_schedule_allreduce(i as f64 * 3.0, 1e5);
+        }
+        let snap = a.state();
+        let mut b = WanSimulator::with_faults(net(), 4, 999, f); // wrong seed on purpose
+        b.restore(snap);
+        assert_eq!(b.state(), snap);
+        for i in 37..80 {
+            let now = i as f64 * 3.0;
+            assert_eq!(a.try_schedule_allreduce(now, 1e5), b.try_schedule_allreduce(now, 1e5));
+        }
+        assert_eq!(a.drops, b.drops);
     }
 
     #[test]

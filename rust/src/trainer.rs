@@ -21,7 +21,9 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::checkpoint::{pack_f64, pack_u64, unpack_f64, unpack_u64, Checkpoint};
+use crate::checkpoint::{
+    pack_f64, pack_f64s, pack_u64, pack_u64s, unpack_f64, unpack_u64, unpack_u64s, Checkpoint,
+};
 use crate::config::RunConfig;
 use crate::coordinator::{
     make_strategy, FragmentTable, GlobalState, SyncStats, SyncStrategy,
@@ -29,7 +31,7 @@ use crate::coordinator::{
 use crate::coordinator::strategy::SyncCtx;
 use crate::data::batches::{Batch, BatchStream};
 use crate::data::Split;
-use crate::metrics::Curve;
+use crate::metrics::{Curve, Dist};
 use crate::network::WanSimulator;
 use crate::runtime::{Backend, TrainState, WorkerHandle};
 use crate::simclock::VirtualClock;
@@ -54,6 +56,18 @@ pub struct TrainOutcome {
     /// Real elapsed seconds of the simulation itself.
     pub real_s: f64,
     pub final_train_loss: f32,
+    /// Retransmission attempts after in-flight transfer losses.
+    pub retries: usize,
+    /// Transfer attempts lost in flight by the fault plan.
+    pub drops: usize,
+    /// Logical transfers that exhausted their retry/timeout budget.
+    pub timeouts: usize,
+    /// Timed-out fragments re-entered into the pending queue.
+    pub requeues: usize,
+    /// Distribution of effective overlap depths τ over delivered syncs.
+    pub tau_dist: Dist,
+    /// Distribution of transfer queue delays (s) over delivered syncs.
+    pub queue_delay_dist: Dist,
 }
 
 /// One full cross-region training run.
@@ -78,6 +92,9 @@ pub struct Trainer<'b> {
     /// Next local step to execute (1-based; advanced by [`Trainer::step_once`],
     /// restored from checkpoints).
     next_step: u32,
+    /// Per-worker liveness under the fault plan's crash windows (all true
+    /// when no faults are scripted). Refreshed at the top of every step.
+    live: Vec<bool>,
     // Reused per-round scratch (zero steady-state allocations).
     step_batches: Vec<Batch>,
     step_losses: Vec<Option<anyhow::Result<f32>>>,
@@ -105,7 +122,7 @@ impl<'b> Trainer<'b> {
             .map(|_| backend.create_worker())
             .collect::<anyhow::Result<_>>()?;
         let global = GlobalState::new(&init);
-        let net = WanSimulator::new(cfg.network, cfg.workers, cfg.seed);
+        let net = WanSimulator::with_faults(cfg.network, cfg.workers, cfg.seed, cfg.faults.clone());
         let strategy = make_strategy(&cfg, &frags);
         let streams: Vec<BatchStream> = (0..cfg.workers)
             .map(|m| {
@@ -140,6 +157,7 @@ impl<'b> Trainer<'b> {
         } else {
             None
         };
+        let live = vec![true; cfg.workers];
         let step_batches =
             (0..cfg.workers).map(|_| Batch::empty(model.batch_size, model.seq_len)).collect();
         let step_losses = (0..cfg.workers).map(|_| None).collect();
@@ -159,6 +177,7 @@ impl<'b> Trainer<'b> {
             bufs: BufferPool::new(),
             threads,
             next_step: 1,
+            live,
             step_batches,
             step_losses,
             eval_losses,
@@ -206,14 +225,25 @@ impl<'b> Trainer<'b> {
         Ok(total / self.val_batches.len() as f64)
     }
 
-    /// Execute one lockstep round of local steps on all workers, reusing
-    /// the persistent worker pool (no per-step thread spawn) and trainer
-    /// scratch (no per-round allocations).
+    /// Execute one lockstep round of local steps on all *live* workers,
+    /// reusing the persistent worker pool (no per-step thread spawn) and
+    /// trainer scratch (no per-round allocations). Crashed workers neither
+    /// consume batches nor step — their streams and resident state freeze
+    /// until they rejoin.
     fn step_all(&mut self) -> anyhow::Result<f32> {
         let backend = self.backend;
         let m = self.workers.len();
-        for (s, b) in self.streams.iter_mut().zip(self.step_batches.iter_mut()) {
-            s.next_batch_into(b);
+        let live = &self.live;
+        let n_live = live.iter().filter(|&&x| x).count();
+        for ((s, b), &alive) in self
+            .streams
+            .iter_mut()
+            .zip(self.step_batches.iter_mut())
+            .zip(live.iter())
+        {
+            if alive {
+                s.next_batch_into(b);
+            }
         }
         for slot in self.step_losses.iter_mut() {
             *slot = None;
@@ -225,7 +255,9 @@ impl<'b> Trainer<'b> {
                     .iter_mut()
                     .zip(&self.step_batches)
                     .zip(self.step_losses.iter_mut())
-                    .map(|((w, b), slot)| {
+                    .zip(live.iter())
+                    .filter(|(_, &alive)| alive)
+                    .map(|(((w, b), slot), _)| {
                         Box::new(move || {
                             *slot = Some(backend.train_step(w, &b.tokens, &b.targets));
                         }) as ScopedTask<'_>
@@ -234,29 +266,69 @@ impl<'b> Trainer<'b> {
                 tp.scoped(tasks);
             }
             _ => {
-                for ((w, b), slot) in self
+                for (((w, b), slot), &alive) in self
                     .workers
                     .iter_mut()
                     .zip(&self.step_batches)
                     .zip(self.step_losses.iter_mut())
+                    .zip(live.iter())
                 {
-                    *slot = Some(backend.train_step(w, &b.tokens, &b.targets));
+                    if alive {
+                        *slot = Some(backend.train_step(w, &b.tokens, &b.targets));
+                    }
                 }
             }
         }
         let mut mean = 0.0f32;
         for l in self.step_losses.iter_mut() {
-            mean += l.take().expect("every worker stepped")? / m as f32;
+            if let Some(r) = l.take() {
+                // Dividing each term (not the sum) keeps the all-live path
+                // bit-identical to the pre-fault builds.
+                mean += r? / n_live as f32;
+            }
         }
         Ok(mean)
+    }
+
+    /// Reconcile the liveness mask with the fault plan's crash windows at
+    /// the current virtual time. A worker whose crash window just ended
+    /// rejoins by adopting the current global fragment state θ^g wholesale
+    /// (its inner-optimizer moments stay frozen from before the crash).
+    fn refresh_live(&mut self) -> anyhow::Result<()> {
+        if !self.net.faults().is_active() {
+            return Ok(());
+        }
+        let now = self.clock.now();
+        for m in 0..self.workers.len() {
+            let crashed = self.net.faults().is_crashed(m, now);
+            if crashed {
+                self.live[m] = false;
+            } else if !self.live[m] {
+                for p in 0..self.frags.k() {
+                    let frag = self.frags.get(p);
+                    let new_g = &self.global.theta_g[frag.range()];
+                    self.backend.write_fragment(&mut self.workers[m], frag, new_g)?;
+                }
+                self.live[m] = true;
+            }
+        }
+        anyhow::ensure!(
+            self.live.iter().any(|&x| x),
+            "fault plan crashed every worker at t={now:.3}s"
+        );
+        Ok(())
     }
 
     /// One full training step: lockstep local steps, clock accounting and
     /// the strategy's post-step sync work. Returns (step, mean train loss).
     pub fn step_once(&mut self) -> anyhow::Result<(u32, f32)> {
         let step = self.next_step;
+        self.refresh_live()?;
         let loss = self.step_all()?;
-        self.clock.advance_compute(self.cfg.network.step_compute_s);
+        // Lockstep: the slowest live worker paces the round (straggler
+        // multipliers from the fault plan; 1.0 when none are scripted).
+        let pace = self.net.faults().compute_multiplier(&self.live);
+        self.clock.advance_compute(self.cfg.network.step_compute_s * pace);
         let mut ctx = SyncCtx {
             workers: &mut self.workers,
             global: &mut self.global,
@@ -268,6 +340,7 @@ impl<'b> Trainer<'b> {
             stats: &mut self.stats,
             pool: &mut self.bufs,
             threads: self.threads.as_ref(),
+            live: Some(&self.live),
         };
         self.strategy.post_step(step, &mut ctx)?;
         self.next_step = step + 1;
@@ -321,17 +394,21 @@ impl<'b> Trainer<'b> {
             comm_stall_s: self.clock.comm_stall_s(),
             real_s: t0.elapsed().as_secs_f64(),
             final_train_loss: last_train_loss,
+            retries: self.stats.retries,
+            drops: self.stats.drops,
+            timeouts: self.stats.timeouts,
+            requeues: self.stats.requeues,
+            tau_dist: self.stats.tau_dist,
+            queue_delay_dist: self.stats.queue_delay_dist,
         })
     }
 
     /// Snapshot the full training state *and* run context: worker states,
-    /// global consensus, virtual clock, sync statistics, WAN simulator and
-    /// data-stream cursors — everything a resumed run needs to continue the
-    /// same trajectory and report the same wall-clock curve.
-    ///
-    /// Note: in-flight fragment syncs are not captured; checkpoints taken
-    /// while transfers are pending resume with those syncs re-initiated by
-    /// the strategy's schedule.
+    /// global consensus, virtual clock, sync statistics, WAN simulator
+    /// (both RNG streams), liveness mask, strategy-internal schedule state
+    /// (including in-flight fragment syncs) and data-stream cursors —
+    /// everything a resumed run needs to continue the same trajectory, even
+    /// from the middle of an active fault window with transfers in flight.
     pub fn checkpoint(&self, step: u32) -> anyhow::Result<Checkpoint> {
         let mut ck = Checkpoint::new(step);
         ck.insert("global/theta_g", self.global.theta_g.clone());
@@ -359,19 +436,27 @@ impl<'b> Trainer<'b> {
             stats.extend(pack_u64(c as u64));
         }
         stats.extend(pack_f64(s.bytes));
+        pack_u64s(
+            &mut stats,
+            &[s.retries as u64, s.drops as u64, s.timeouts as u64, s.requeues as u64],
+        );
+        for d in [&s.tau_dist, &s.queue_delay_dist] {
+            pack_u64s(&mut stats, &[d.count]);
+            pack_f64s(&mut stats, &[d.sum, d.min, d.max]);
+        }
         for &c in &s.per_fragment {
             stats.extend(pack_u64(c as u64));
         }
         ck.insert("run/stats", stats);
-        let (busy, bytes, transfers, rng) = self.net.state();
-        let mut net = Vec::new();
-        net.extend(pack_f64(busy));
-        net.extend(pack_f64(bytes));
-        net.extend(pack_u64(transfers as u64));
-        for x in rng {
-            net.extend(pack_u64(x));
-        }
+        let nst = self.net.state();
+        let mut net = Vec::with_capacity(24);
+        pack_f64s(&mut net, &[nst.busy_until, nst.bytes_sent]);
+        pack_u64s(&mut net, &[nst.transfers as u64, nst.drops as u64]);
+        pack_u64s(&mut net, &nst.jitter_rng);
+        pack_u64s(&mut net, &nst.fault_rng);
         ck.insert("run/net", net);
+        ck.insert("run/live", self.live.iter().map(|&x| x as u32 as f32).collect());
+        self.strategy.save_state(&mut ck);
         for (i, stream) in self.streams.iter().enumerate() {
             let mut cur = Vec::with_capacity(8);
             for x in stream.cursor() {
@@ -430,31 +515,72 @@ impl<'b> Trainer<'b> {
         }
         if let Some(s) = ck.get("run/stats") {
             let k = self.frags.k();
-            anyhow::ensure!(s.len() == 10 + 2 * k, "run/stats section malformed");
+            // Legacy layout (10 + 2k): counters + bytes + per-fragment.
+            // Current layout (34 + 2k) adds fault counters and the τ /
+            // queue-delay distributions between bytes and per-fragment.
+            anyhow::ensure!(
+                s.len() == 10 + 2 * k || s.len() == 34 + 2 * k,
+                "run/stats section malformed"
+            );
             self.stats.syncs_initiated = unpack_u64(s[0], s[1]) as usize;
             self.stats.syncs_completed = unpack_u64(s[2], s[3]) as usize;
             self.stats.staleness_guard_hits = unpack_u64(s[4], s[5]) as usize;
             self.stats.apply_stalls = unpack_u64(s[6], s[7]) as usize;
             self.stats.bytes = unpack_f64(s[8], s[9]);
+            let mut off = 10;
+            if s.len() == 34 + 2 * k {
+                self.stats.retries = unpack_u64(s[10], s[11]) as usize;
+                self.stats.drops = unpack_u64(s[12], s[13]) as usize;
+                self.stats.timeouts = unpack_u64(s[14], s[15]) as usize;
+                self.stats.requeues = unpack_u64(s[16], s[17]) as usize;
+                let mut dists = [Dist::default(); 2];
+                for (i, d) in dists.iter_mut().enumerate() {
+                    let b = 18 + 8 * i;
+                    *d = Dist {
+                        count: unpack_u64(s[b], s[b + 1]),
+                        sum: unpack_f64(s[b + 2], s[b + 3]),
+                        min: unpack_f64(s[b + 4], s[b + 5]),
+                        max: unpack_f64(s[b + 6], s[b + 7]),
+                    };
+                }
+                self.stats.tau_dist = dists[0];
+                self.stats.queue_delay_dist = dists[1];
+                off = 34;
+            }
             for p in 0..k {
-                self.stats.per_fragment[p] = unpack_u64(s[10 + 2 * p], s[11 + 2 * p]) as usize;
+                self.stats.per_fragment[p] =
+                    unpack_u64(s[off + 2 * p], s[off + 1 + 2 * p]) as usize;
             }
         }
         if let Some(nst) = ck.get("run/net") {
-            anyhow::ensure!(nst.len() == 14, "run/net section malformed");
-            let rng = [
-                unpack_u64(nst[6], nst[7]),
-                unpack_u64(nst[8], nst[9]),
-                unpack_u64(nst[10], nst[11]),
-                unpack_u64(nst[12], nst[13]),
-            ];
-            self.net.restore(
-                unpack_f64(nst[0], nst[1]),
-                unpack_f64(nst[2], nst[3]),
-                unpack_u64(nst[4], nst[5]) as usize,
-                rng,
-            );
+            // Legacy layout (14): busy, bytes, transfers, jitter RNG.
+            // Current layout (24) adds the drop counter and the fault-loss
+            // RNG stream; legacy checkpoints predate faults, so leaving the
+            // freshly seeded loss stream in place is exact.
+            anyhow::ensure!(nst.len() == 14 || nst.len() == 24, "run/net section malformed");
+            let mut st = self.net.state();
+            st.busy_until = unpack_f64(nst[0], nst[1]);
+            st.bytes_sent = unpack_f64(nst[2], nst[3]);
+            st.transfers = unpack_u64(nst[4], nst[5]) as usize;
+            if nst.len() == 14 {
+                st.drops = 0;
+                let u = unpack_u64s(&nst[6..14]);
+                st.jitter_rng = [u[0], u[1], u[2], u[3]];
+            } else {
+                st.drops = unpack_u64(nst[6], nst[7]) as usize;
+                let u = unpack_u64s(&nst[8..24]);
+                st.jitter_rng = [u[0], u[1], u[2], u[3]];
+                st.fault_rng = [u[4], u[5], u[6], u[7]];
+            }
+            self.net.restore(st);
         }
+        if let Some(lv) = ck.get("run/live") {
+            anyhow::ensure!(lv.len() == self.workers.len(), "run/live section malformed");
+            for (dst, &x) in self.live.iter_mut().zip(lv) {
+                *dst = x != 0.0;
+            }
+        }
+        self.strategy.load_state(ck, &mut self.bufs)?;
         for (i, stream) in self.streams.iter_mut().enumerate() {
             if let Some(cur) = ck.get(&format!("run/stream{i}")) {
                 anyhow::ensure!(cur.len() == 8, "run/stream{i} section malformed");

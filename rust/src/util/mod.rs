@@ -16,3 +16,40 @@ pub mod vecops;
 pub use pool::{BufferPool, PoolStats};
 pub use rng::Rng;
 pub use threadpool::{ScopedTask, WorkerPool};
+
+/// Explicitly saturating f64 → u32 conversion: NaN maps to 0, values below
+/// zero clamp to 0, values at or above `u32::MAX` clamp to `u32::MAX`.
+/// Used where schedule arithmetic (τ derivation, Eq. 9 fragment counts) can
+/// produce huge or degenerate intermediates — `as` saturates too since Rust
+/// 1.45, but this spells the policy out and is guarded by tests.
+#[inline]
+pub fn saturating_f64_to_u32(x: f64) -> u32 {
+    if x.is_nan() {
+        return 0;
+    }
+    if x <= 0.0 {
+        0
+    } else if x >= u32::MAX as f64 {
+        u32::MAX
+    } else {
+        x as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::saturating_f64_to_u32;
+
+    #[test]
+    fn saturating_cast_covers_degenerate_inputs() {
+        assert_eq!(saturating_f64_to_u32(f64::NAN), 0);
+        assert_eq!(saturating_f64_to_u32(f64::NEG_INFINITY), 0);
+        assert_eq!(saturating_f64_to_u32(-1.0), 0);
+        assert_eq!(saturating_f64_to_u32(0.0), 0);
+        assert_eq!(saturating_f64_to_u32(1.9), 1);
+        assert_eq!(saturating_f64_to_u32(4.0), 4);
+        assert_eq!(saturating_f64_to_u32(u32::MAX as f64), u32::MAX);
+        assert_eq!(saturating_f64_to_u32(1e300), u32::MAX);
+        assert_eq!(saturating_f64_to_u32(f64::INFINITY), u32::MAX);
+    }
+}

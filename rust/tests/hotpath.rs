@@ -253,6 +253,7 @@ impl Sim {
             stats: &mut self.stats,
             pool: &mut self.pool,
             threads: None,
+            live: None,
         }
     }
 }
