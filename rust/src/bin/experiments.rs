@@ -10,12 +10,15 @@
 //! experiments ablate-tau      # overlap-depth robustness sweep
 //! experiments faults          # degraded-WAN resilience sweep (severity
 //!                             # curve: outage+loss+crash vs all 3 methods)
+//! experiments recovery        # in-flight corruption sweep with the
+//!                             # snapshot ring + divergence sentinel armed
 //! experiments all             # everything above
 //! ```
 //!
 //! Flags: --artifacts DIR --outdir DIR --preset NAME --steps N --seed N
 //!        --ppl X --eval-every N --backend {auto|pjrt|native}
 //!        --severity S[,S...]  (faults only; default 0.0,0.3,0.6)
+//!        --corruption P[,P...]  (recovery only; default 0.0,0.3,0.7)
 //!
 //! With `--backend native` (or auto and no artifacts present) every
 //! experiment runs the pure-rust transformer backend — the full evaluation
@@ -26,8 +29,8 @@
 
 use std::path::PathBuf;
 
-use cocodc::config::{FaultConfig, MethodKind, RunConfig, TauMode};
-use cocodc::metrics::{table1, write_curves_csv, Curve};
+use cocodc::config::{Corruption, FaultConfig, FaultWindow, MethodKind, RunConfig, TauMode};
+use cocodc::metrics::{max_loss_gap, table1, write_curves_csv, Curve};
 use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
 use cocodc::{TrainOutcome, Trainer};
@@ -41,6 +44,7 @@ struct Cli {
     ppl: f64,
     eval_every: u32,
     severities: Vec<f64>,
+    corruptions: Vec<f64>,
 }
 
 fn base_cfg(cli: &Cli, method: MethodKind) -> RunConfig {
@@ -279,6 +283,101 @@ fn faults(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// RECOVERY: in-flight corruption sweep with the self-healing state layer
+/// armed (snapshot ring + divergence sentinel). A mid-run corruption window
+/// flips bits in delivered fragment payloads; the strategies detect the
+/// checksum mismatch, quarantine the payload and retransmit through the
+/// fault-plan retry path, so the corrupted runs should converge back onto
+/// the fault-free curve once every payload lands intact.
+fn recovery(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
+    println!("== RECOVERY: fragment-corruption sweep (ring + sentinel armed) ==");
+    let mut rows = String::from(
+        "corruption_prob,method,final_loss,final_ppl,corrupt_fragments,quarantined,\
+         retries,requeues,rollbacks,fallback_loads,nonfinite_losses,\
+         max_loss_gap_vs_clean,wall_s\n",
+    );
+    let mut curves = Vec::new();
+    for method in [MethodKind::StreamingDiloco, MethodKind::Cocodc] {
+        let mut clean: Option<Curve> = None;
+        for &prob in &cli.corruptions {
+            let mut cfg = base_cfg(cli, method);
+            // Corruption window over the middle of the compute horizon;
+            // the tail of the run is clean so retransmissions drain.
+            let horizon = cfg.total_steps as f64 * cfg.network.step_compute_s;
+            if prob > 0.0 {
+                cfg.faults.corruptions.push(Corruption {
+                    window: FaultWindow {
+                        start_s: 0.10 * horizon,
+                        duration_s: 0.40 * horizon,
+                    },
+                    prob,
+                });
+            }
+            let ring_dir = cli.outdir.join(format!("ring_{}_{prob}", method.name()));
+            std::fs::remove_dir_all(&ring_dir).ok();
+            cfg.recovery.snapshot_every = (cli.steps / 4).max(1);
+            cfg.recovery.snapshot_dir = ring_dir.to_string_lossy().into_owned();
+            let out = run(backend, cfg, &format!("{}_corrupt{prob}", method.name()))?;
+            let fl = out.curve.final_loss().unwrap_or(f64::NAN);
+            anyhow::ensure!(
+                fl.is_finite(),
+                "non-finite final loss at corruption {prob} for {}",
+                method.name()
+            );
+            // A corrupt payload must never be applied: every detection is a
+            // quarantine, and a non-trivial window must actually fire.
+            anyhow::ensure!(
+                out.quarantined == out.corrupt_fragments,
+                "{}: {} corrupt fragments but {} quarantined",
+                method.name(),
+                out.corrupt_fragments,
+                out.quarantined
+            );
+            anyhow::ensure!(
+                prob == 0.0 || out.corrupt_fragments > 0,
+                "corruption window at p={prob} never fired for {}",
+                method.name()
+            );
+            let gap = clean.as_ref().and_then(|c| max_loss_gap(&out.curve, c));
+            println!(
+                "  p={prob} {:<18} corrupt={} quarantined={} retries={} rollbacks={} \
+                 gap_vs_clean={}",
+                method.name(),
+                out.corrupt_fragments,
+                out.quarantined,
+                out.retries,
+                out.rollbacks,
+                gap.map(|g| format!("{g:.4}")).unwrap_or_else(|| "-".into()),
+            );
+            rows.push_str(&format!(
+                "{prob},{},{:.4},{:.4},{},{},{},{},{},{},{},{},{:.1}\n",
+                out.method,
+                fl,
+                out.curve.final_ppl().unwrap_or(f64::NAN),
+                out.corrupt_fragments,
+                out.quarantined,
+                out.retries,
+                out.requeues,
+                out.rollbacks,
+                out.fallback_loads,
+                out.nonfinite_losses,
+                gap.map(|g| format!("{g:.6}")).unwrap_or_default(),
+                out.wall_s,
+            ));
+            if prob == 0.0 {
+                clean = Some(out.curve.clone());
+            }
+            curves.push(out.curve);
+        }
+    }
+    std::fs::create_dir_all(&cli.outdir)?;
+    std::fs::write(cli.outdir.join("recovery.csv"), rows)?;
+    write_curves_csv(cli.outdir.join("recovery_curves.csv"), &curves)?;
+    println!("recovery table -> {}", cli.outdir.join("recovery.csv").display());
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
 /// Rebuild the Table-I comparison from previously written curve CSVs
 /// (`experiments report --curves a.csv,b.csv --ppl 20`).
 fn report(files: &str, ppl: f64) -> anyhow::Result<()> {
@@ -329,6 +428,17 @@ fn main() -> anyhow::Result<()> {
                 .collect::<anyhow::Result<Vec<f64>>>()?,
             None => vec![0.0, 0.3, 0.6],
         },
+        corruptions: match args.get("corruption") {
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("--corruption {x}: {e}"))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?,
+            None => vec![0.0, 0.3, 0.7],
+        },
     };
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let kind = BackendKind::parse(args.get("backend").unwrap_or("auto"))?;
@@ -352,6 +462,7 @@ fn main() -> anyhow::Result<()> {
         "ablate-tau" => ablate_tau(&cli, backend.as_ref())?,
         "ablate-codec" => ablate_codec(&cli, backend.as_ref())?,
         "faults" => faults(&cli, backend.as_ref())?,
+        "recovery" => recovery(&cli, backend.as_ref())?,
         "all" => {
             fig1(&cli, backend.as_ref())?;
             wallclock(&cli, backend.as_ref())?;
@@ -359,6 +470,7 @@ fn main() -> anyhow::Result<()> {
             ablate_gamma(&cli, backend.as_ref())?;
             ablate_tau(&cli, backend.as_ref())?;
             faults(&cli, backend.as_ref())?;
+            recovery(&cli, backend.as_ref())?;
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }

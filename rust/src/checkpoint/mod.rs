@@ -2,13 +2,23 @@
 //! format with an FNV-1a integrity checksum. Stores the full training state
 //! (per-worker params + inner optimizer moments, global fragment states,
 //! outer momentum) so long cross-region runs can resume after preemption.
+//!
+//! Format v2 extends the checksum to cover the header and every length field
+//! (v1 hashed only section names + payloads), so a bit-flip anywhere after
+//! the magic is detected instead of silently changing `step` or a section
+//! length. Saves are atomic: tmp file + fsync + rename + directory fsync,
+//! so a crash mid-save can never destroy an existing good file. See
+//! [`ring::CheckpointRing`] for the durable last-K ring with manifest.
+
+pub mod ring;
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"CCDC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+const FNV_BASIS: u64 = 0xcbf29ce484222325;
 
 /// A checkpoint is an ordered map of named f32 vectors plus a step counter.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -21,6 +31,17 @@ fn fnv1a(bytes: &[u8], mut hash: u64) -> u64 {
     for &b in bytes {
         hash ^= b as u64;
         hash = hash.wrapping_mul(0x100000001b3);
+    }
+    hash
+}
+
+/// FNV-1a over the little-endian bytes of an f32 slice. This is the same
+/// hash the checkpoint file format uses over section payloads, reused as the
+/// per-fragment WAN payload checksum so integrity is one algorithm everywhere.
+pub fn checksum_f32(data: &[f32]) -> u64 {
+    let mut hash = FNV_BASIS;
+    for x in data {
+        hash = fnv1a(&x.to_le_bytes(), hash);
     }
     hash
 }
@@ -66,6 +87,35 @@ pub fn unpack_f64s(data: &[f32]) -> Vec<f64> {
     data.chunks_exact(2).map(|c| unpack_f64(c[0], c[1])).collect()
 }
 
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "ckpt".to_string());
+    path.with_file_name(format!("{name}.tmp"))
+}
+
+/// Crash-safe file replacement: write a sibling tmp file, fsync it, rename
+/// over the target, then fsync the parent directory. A crash at any point
+/// leaves either the old file or the new one, never a torn mix.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let tmp = tmp_sibling(path);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                d.sync_all().ok();
+            }
+        }
+    }
+    Ok(())
+}
+
 impl Checkpoint {
     pub fn new(step: u32) -> Self {
         Checkpoint { step, sections: BTreeMap::new() }
@@ -79,58 +129,108 @@ impl Checkpoint {
         self.sections.get(name).map(|v| v.as_slice())
     }
 
-    pub fn save<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
-        if let Some(dir) = path.as_ref().parent() {
-            std::fs::create_dir_all(dir)?;
+    /// Serialize to the v2 on-disk byte layout (including trailing hash).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        let mut hash = FNV_BASIS;
+        for word in [VERSION, self.step, self.sections.len() as u32] {
+            let b = word.to_le_bytes();
+            out.extend_from_slice(&b);
+            hash = fnv1a(&b, hash);
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
-        let mut hash = 0xcbf29ce484222325u64;
         for (name, data) in &self.sections {
             let nb = name.as_bytes();
-            f.write_all(&(nb.len() as u32).to_le_bytes())?;
-            f.write_all(nb)?;
-            f.write_all(&(data.len() as u64).to_le_bytes())?;
-            // SAFETY-free: serialize via to_le_bytes per element would be
-            // slow; reinterpret through chunks instead.
-            let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
-            f.write_all(&bytes)?;
+            let nlen = (nb.len() as u32).to_le_bytes();
+            out.extend_from_slice(&nlen);
+            hash = fnv1a(&nlen, hash);
+            out.extend_from_slice(nb);
             hash = fnv1a(nb, hash);
-            hash = fnv1a(&bytes, hash);
+            let dlen = (data.len() as u64).to_le_bytes();
+            out.extend_from_slice(&dlen);
+            hash = fnv1a(&dlen, hash);
+            let start = out.len();
+            out.reserve(data.len() * 4);
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            hash = fnv1a(&out[start..], hash);
         }
-        f.write_all(&hash.to_le_bytes())?;
-        Ok(())
+        out.extend_from_slice(&hash.to_le_bytes());
+        out
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        write_atomic(path, &self.to_bytes())
     }
 
     pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let file_len = std::fs::metadata(path.as_ref())?.len();
+        let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "not a CoCoDC checkpoint");
         let mut u32b = [0u8; 4];
         f.read_exact(&mut u32b)?;
-        anyhow::ensure!(u32::from_le_bytes(u32b) == VERSION, "version mismatch");
+        let version = u32::from_le_bytes(u32b);
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "unsupported checkpoint version {version}"
+        );
+        // v1 hashed only section names + payloads; v2 covers everything
+        // after the magic, so header/length bit-flips are detected too.
+        let hash_all = version >= 2;
+        let mut hash = FNV_BASIS;
+        if hash_all {
+            hash = fnv1a(&u32b, hash);
+        }
         f.read_exact(&mut u32b)?;
         let step = u32::from_le_bytes(u32b);
+        if hash_all {
+            hash = fnv1a(&u32b, hash);
+        }
         f.read_exact(&mut u32b)?;
         let n_sections = u32::from_le_bytes(u32b) as usize;
+        if hash_all {
+            hash = fnv1a(&u32b, hash);
+        }
+        // Payload bytes can never exceed what the file holds beyond the
+        // 16-byte header and 8-byte trailing hash; validating lengths against
+        // this budget keeps a corrupted length field from triggering an
+        // arbitrary-size allocation before read_exact gets a chance to fail.
+        let mut remaining = file_len.saturating_sub(16 + 8);
         let mut sections = BTreeMap::new();
-        let mut hash = 0xcbf29ce484222325u64;
         for _ in 0..n_sections {
             f.read_exact(&mut u32b)?;
             let name_len = u32::from_le_bytes(u32b) as usize;
             anyhow::ensure!(name_len <= 4096, "corrupt section name length");
+            if hash_all {
+                hash = fnv1a(&u32b, hash);
+            }
             let mut name = vec![0u8; name_len];
             f.read_exact(&mut name)?;
+            hash = fnv1a(&name, hash);
             let mut u64b = [0u8; 8];
             f.read_exact(&mut u64b)?;
-            let len = u64::from_le_bytes(u64b) as usize;
-            let mut bytes = vec![0u8; len * 4];
+            if hash_all {
+                hash = fnv1a(&u64b, hash);
+            }
+            let len64 = u64::from_le_bytes(u64b);
+            let byte_len = match len64.checked_mul(4) {
+                Some(b) if b <= remaining => b as usize,
+                _ => anyhow::bail!(
+                    "corrupt checkpoint: section length {len64} exceeds file size"
+                ),
+            };
+            remaining -= byte_len as u64;
+            let mut bytes = vec![0u8; byte_len];
             f.read_exact(&mut bytes)?;
-            hash = fnv1a(&name, hash);
             hash = fnv1a(&bytes, hash);
             let data: Vec<f32> = bytes
                 .chunks_exact(4)
@@ -145,6 +245,14 @@ impl Checkpoint {
             "checkpoint checksum mismatch (truncated or corrupted file)"
         );
         Ok(Checkpoint { step, sections })
+    }
+
+    /// Load the newest checkpoint in a ring directory that passes integrity
+    /// checks, skipping torn/corrupt files. Returns the checkpoint and how
+    /// many newer candidates were skipped.
+    pub fn load_newest_valid<P: AsRef<Path>>(dir: P) -> anyhow::Result<(Self, usize)> {
+        let mut r = ring::CheckpointRing::new(dir.as_ref(), usize::MAX)?;
+        r.load_newest_valid()
     }
 }
 
@@ -180,6 +288,73 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn save_leaves_no_tmp_file_and_replaces_atomically() {
+        let p = tmp("atomic");
+        let mut c = Checkpoint::new(1);
+        c.insert("x", vec![1.0; 8]);
+        c.save(&p).unwrap();
+        let mut c2 = Checkpoint::new(2);
+        c2.insert("x", vec![2.0; 8]);
+        c2.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, c2);
+        let tmp_path = p.with_file_name(format!(
+            "{}.tmp",
+            p.file_name().unwrap().to_string_lossy()
+        ));
+        assert!(!tmp_path.exists(), "atomic save left tmp file behind");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corrupt_length_field_is_rejected_without_huge_alloc() {
+        // Flip the section data-length field to u64::MAX: load must Err
+        // (validated against file size) instead of attempting a ~2^66-byte
+        // allocation and aborting.
+        let mut c = Checkpoint::new(7);
+        c.insert("x", vec![1.0; 16]);
+        let p = tmp("hugelen");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Layout: magic(4) version(4) step(4) n_sections(4) name_len(4)
+        // name(1, "x") data_len(8) ...
+        let off = 4 + 4 + 4 + 4 + 4 + 1;
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn header_bit_flips_are_detected_in_v2() {
+        // v1's hash covered only names + payloads, so a flipped `step` field
+        // loaded "successfully" with the wrong step. v2 must reject it.
+        let mut c = Checkpoint::new(1000);
+        c.insert("x", vec![3.0; 8]);
+        let p = tmp("headerflip");
+        c.save(&p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        for off in 4..16 {
+            let mut bytes = clean.clone();
+            bytes[off] ^= 0x01;
+            std::fs::write(&p, &bytes).unwrap();
+            assert!(
+                Checkpoint::load(&p).is_err(),
+                "flip at header offset {off} was not detected"
+            );
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn checksum_f32_matches_byte_stream_hash() {
+        let data = vec![1.5f32, -2.25, 0.0, f32::from_bits(0xFFFF_FFFF)];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(checksum_f32(&data), fnv1a(&bytes, FNV_BASIS));
+        assert_ne!(checksum_f32(&[1.0]), checksum_f32(&[-1.0]));
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Durable checkpoint ring: a directory holding the last K checkpoints plus
+//! a small JSON manifest. Every write is atomic (tmp + fsync + rename), so a
+//! crash mid-save can never destroy an already-written snapshot, and
+//! [`CheckpointRing::load_newest_valid`] walks the ring newest-first and
+//! falls back past torn or corrupt files.
+//!
+//! Layout of a ring directory:
+//!
+//! ```text
+//! <dir>/ckpt-0000000010.bin    checkpoint at step 10 (format v2)
+//! <dir>/ckpt-0000000020.bin    checkpoint at step 20
+//! <dir>/manifest.json          { "version": 1, "last_good": 20,
+//!                                "entries": [ {"step":10,"file":"..."}, ... ] }
+//! ```
+//!
+//! The manifest is advisory: recovery merges it with a directory scan, so a
+//! missing or stale manifest (e.g. a crash between the checkpoint rename and
+//! the manifest rename) only costs an extra integrity check, never data.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+use super::{write_atomic, Checkpoint};
+
+/// Env hook for crash testing: set `COCODC_CKPT_KILL=torn:<step>` and the
+/// ring will write a half-length (torn) file for that step *without* the
+/// atomic dance or a manifest update, then abort the process with exit code
+/// 3 — simulating a kill arriving mid-save. CI's recovery-matrix job uses
+/// this to prove resume falls back to the previous snapshot.
+pub const KILL_ENV: &str = "COCODC_CKPT_KILL";
+
+const MANIFEST: &str = "manifest.json";
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RingEntry {
+    pub step: u32,
+    pub file: String,
+}
+
+#[derive(Debug)]
+pub struct CheckpointRing {
+    dir: PathBuf,
+    keep: usize,
+    /// Sorted by step ascending; newest last.
+    entries: Vec<RingEntry>,
+    last_good: Option<u32>,
+}
+
+fn entry_file(step: u32) -> String {
+    format!("ckpt-{step:010}.bin")
+}
+
+/// Parse the step out of a `ckpt-<step>.bin` filename.
+fn parse_entry_file(name: &str) -> Option<u32> {
+    let stem = name.strip_prefix("ckpt-")?.strip_suffix(".bin")?;
+    stem.parse::<u32>().ok()
+}
+
+impl CheckpointRing {
+    /// Open (or create) a ring directory, merging the manifest — if present
+    /// and parseable — with a scan for `ckpt-*.bin` files.
+    pub fn new<P: AsRef<Path>>(dir: P, keep: usize) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let keep = keep.max(1);
+        let mut entries: Vec<RingEntry> = Vec::new();
+        let mut last_good = None;
+        if let Ok(text) = std::fs::read_to_string(dir.join(MANIFEST)) {
+            if let Ok(j) = Json::parse(&text) {
+                if let Some(lg) = j.get("last_good") {
+                    if let Ok(step) = lg.as_u64() {
+                        last_good = Some(step as u32);
+                    }
+                }
+                if let Some(arr) = j.get("entries").and_then(|e| e.as_arr().ok()) {
+                    for e in arr {
+                        let step = e.get("step").and_then(|s| s.as_u64().ok());
+                        let file = e.get("file").and_then(|f| f.as_str().ok());
+                        if let (Some(step), Some(file)) = (step, file) {
+                            entries.push(RingEntry {
+                                step: step as u32,
+                                file: file.to_string(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        // Merge with what's actually on disk: files the manifest missed
+        // (crash before the manifest write) are still recovery candidates.
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(step) = parse_entry_file(&name) {
+                    if !entries.iter().any(|e| e.step == step) {
+                        entries.push(RingEntry { step, file: name });
+                    }
+                }
+            }
+        }
+        entries.sort_by_key(|e| e.step);
+        entries.dedup_by_key(|e| e.step);
+        Ok(CheckpointRing { dir, keep, entries, last_good })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entries(&self) -> &[RingEntry] {
+        &self.entries
+    }
+
+    pub fn last_good(&self) -> Option<u32> {
+        self.last_good
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Atomically save `ck` into the ring, prune to the newest `keep`
+    /// snapshots, and persist the manifest. Honors the [`KILL_ENV`] crash
+    /// hook (writes a torn file and aborts) when it names this step.
+    pub fn save(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let file = entry_file(ck.step);
+        let path = self.dir.join(&file);
+        if let Ok(spec) = std::env::var(KILL_ENV) {
+            if spec == format!("torn:{}", ck.step) {
+                let bytes = ck.to_bytes();
+                // Simulate a non-atomic writer killed mid-save: a partial
+                // file under the final name, no fsync, no manifest update.
+                std::fs::write(&path, &bytes[..bytes.len() / 2])?;
+                eprintln!(
+                    "[ckpt-ring] {KILL_ENV} hook: wrote torn checkpoint for step {} and aborting",
+                    ck.step
+                );
+                std::process::exit(3);
+            }
+        }
+        ck.save(&path)?;
+        self.entries.retain(|e| e.step != ck.step);
+        self.entries.push(RingEntry { step: ck.step, file });
+        self.entries.sort_by_key(|e| e.step);
+        while self.entries.len() > self.keep {
+            let old = self.entries.remove(0);
+            std::fs::remove_file(self.dir.join(&old.file)).ok();
+        }
+        self.last_good = Some(ck.step);
+        self.write_manifest()
+    }
+
+    fn write_manifest(&self) -> anyhow::Result<()> {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("step", json::num(e.step as f64)),
+                    ("file", json::s(&e.file)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("version", json::num(1.0)),
+            ("keep", json::num(self.keep.min(u32::MAX as usize) as f64)),
+            ("entries", Json::Arr(entries)),
+        ];
+        if let Some(step) = self.last_good {
+            fields.push(("last_good", json::num(step as f64)));
+        }
+        let text = json::obj(fields).to_string_pretty();
+        write_atomic(&self.dir.join(MANIFEST), text.as_bytes())
+    }
+
+    /// Load the newest entry that passes integrity checks, walking backwards
+    /// past torn/corrupt/missing files. Returns the checkpoint and how many
+    /// newer candidates were skipped (0 = the newest file was good).
+    pub fn load_newest_valid(&mut self) -> anyhow::Result<(Checkpoint, usize)> {
+        anyhow::ensure!(!self.entries.is_empty(), "checkpoint ring is empty");
+        let mut skipped = 0usize;
+        for e in self.entries.iter().rev() {
+            match Checkpoint::load(self.dir.join(&e.file)) {
+                Ok(ck) => {
+                    self.last_good = Some(e.step);
+                    return Ok((ck, skipped));
+                }
+                Err(err) => {
+                    eprintln!(
+                        "[ckpt-ring] skipping {} (step {}): {err}",
+                        e.file, e.step
+                    );
+                    skipped += 1;
+                }
+            }
+        }
+        anyhow::bail!("no valid checkpoint in ring at {}", self.dir.display())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cocodc_ring_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn ck(step: u32) -> Checkpoint {
+        let mut c = Checkpoint::new(step);
+        c.insert("x", vec![step as f32; 32]);
+        c
+    }
+
+    #[test]
+    fn ring_prunes_to_keep_and_tracks_last_good() {
+        let d = tmp_dir("prune");
+        let mut r = CheckpointRing::new(&d, 3).unwrap();
+        for step in [10, 20, 30, 40, 50] {
+            r.save(&ck(step)).unwrap();
+        }
+        assert_eq!(
+            r.entries().iter().map(|e| e.step).collect::<Vec<_>>(),
+            vec![30, 40, 50]
+        );
+        assert_eq!(r.last_good(), Some(50));
+        assert!(!d.join(entry_file(10)).exists());
+        assert!(d.join(entry_file(30)).exists());
+        let (back, skipped) = r.load_newest_valid().unwrap();
+        assert_eq!((back.step, skipped), (50, 0));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn load_newest_valid_skips_torn_newest_file() {
+        let d = tmp_dir("torn");
+        let mut r = CheckpointRing::new(&d, 4).unwrap();
+        r.save(&ck(10)).unwrap();
+        r.save(&ck(20)).unwrap();
+        r.save(&ck(30)).unwrap();
+        // Tear the newest file in half, as a killed non-atomic writer would.
+        let newest = d.join(entry_file(30));
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let (back, skipped) = r.load_newest_valid().unwrap();
+        assert_eq!((back.step, skipped), (20, 1));
+        assert_eq!(back, ck(20));
+        assert_eq!(r.last_good(), Some(20));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn reopen_without_manifest_falls_back_to_directory_scan() {
+        let d = tmp_dir("scan");
+        let mut r = CheckpointRing::new(&d, 4).unwrap();
+        r.save(&ck(10)).unwrap();
+        r.save(&ck(20)).unwrap();
+        std::fs::remove_file(d.join(MANIFEST)).unwrap();
+        let mut r2 = CheckpointRing::new(&d, 4).unwrap();
+        assert_eq!(
+            r2.entries().iter().map(|e| e.step).collect::<Vec<_>>(),
+            vec![10, 20]
+        );
+        let (back, skipped) = r2.load_newest_valid().unwrap();
+        assert_eq!((back.step, skipped), (20, 0));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn save_dedups_same_step_entries() {
+        let d = tmp_dir("dedup");
+        let mut r = CheckpointRing::new(&d, 3).unwrap();
+        r.save(&ck(10)).unwrap();
+        r.save(&ck(10)).unwrap();
+        assert_eq!(r.entries().len(), 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -115,6 +115,18 @@ pub struct CrashWindow {
     pub window: FaultWindow,
 }
 
+/// Payload corruption: transfers *delivered* inside `window` have a single
+/// bit flipped in the fragment payload with probability `prob` (seeded draw
+/// on a dedicated RNG stream). Checksums carried with each fragment let the
+/// receiving strategy detect, quarantine and retransmit — a corrupt payload
+/// must never be applied.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Corruption {
+    pub window: FaultWindow,
+    /// Per-delivery corruption probability in (0, 1].
+    pub prob: f64,
+}
+
 /// Retry/backoff policy for dropped transfers (tentpole: lost transfers
 /// surface as `TransferOutcome::Dropped`; callers retry under this budget).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -159,6 +171,8 @@ pub struct FaultConfig {
     pub stragglers: Vec<f64>,
     /// Worker crash/recover events.
     pub crashes: Vec<CrashWindow>,
+    /// Payload bit-flip windows (in-flight fragment corruption).
+    pub corruptions: Vec<Corruption>,
     pub retry: RetryPolicy,
 }
 
@@ -171,6 +185,7 @@ impl FaultConfig {
             || self.transfer_loss_prob > 0.0
             || self.stragglers.iter().any(|&s| s > 1.0)
             || !self.crashes.is_empty()
+            || !self.corruptions.is_empty()
     }
 
     /// Canonical severity-parameterized scenario used by `experiments
@@ -198,6 +213,13 @@ impl FaultConfig {
             transfer_loss_prob: 0.25 * sev,
             stragglers: Vec::new(),
             crashes: Vec::new(),
+            corruptions: vec![Corruption {
+                window: FaultWindow {
+                    start_s: 0.10 * horizon_s,
+                    duration_s: 0.10 * horizon_s,
+                },
+                prob: 0.5 * sev,
+            }],
             retry: RetryPolicy::default(),
         };
         if workers > 1 {
@@ -240,6 +262,16 @@ impl FaultConfig {
         );
         for c in &self.crashes {
             anyhow::ensure!(c.worker < workers, "crash worker {} out of range", c.worker);
+        }
+        for c in &self.corruptions {
+            anyhow::ensure!(
+                c.prob > 0.0 && c.prob <= 1.0,
+                "corruption prob must be in (0,1]"
+            );
+            anyhow::ensure!(
+                c.window.start_s >= 0.0 && c.window.duration_s >= 0.0,
+                "corruption windows need start/duration >= 0"
+            );
         }
         anyhow::ensure!(self.retry.max_attempts >= 1, "retry.max_attempts >= 1");
         anyhow::ensure!(self.retry.backoff_base_s >= 0.0, "retry.backoff_base_s >= 0");
@@ -299,6 +331,20 @@ impl FaultConfig {
                 ),
             ),
             (
+                "corruptions",
+                Json::Arr(
+                    self.corruptions
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("window", Self::window_json(&c.window)),
+                                ("prob", num(c.prob)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "retry",
                 obj(vec![
                     ("max_attempts", num(self.retry.max_attempts as f64)),
@@ -330,6 +376,16 @@ impl FaultConfig {
                 worker: c.field("worker")?.as_usize()?,
                 window: Self::window_from_json(c.field("window")?)?,
             });
+        }
+        // Optional key: fault configs written before the corruption fault
+        // class existed still parse.
+        if let Some(cs) = j.get("corruptions") {
+            for c in cs.as_arr()? {
+                f.corruptions.push(Corruption {
+                    window: Self::window_from_json(c.field("window")?)?,
+                    prob: c.field("prob")?.as_f64()?,
+                });
+            }
         }
         let r = j.field("retry")?;
         f.retry = RetryPolicy {
@@ -366,6 +422,83 @@ impl Default for DataConfig {
             zipf_exponent: 1.1,
             heterogeneity: 0.8,
         }
+    }
+}
+
+/// Self-healing state layer: checkpoint ring cadence and the divergence
+/// sentinel (DESIGN.md §Recovery). Disabled by default (`snapshot_every ==
+/// 0`) so existing runs are untouched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryConfig {
+    /// Snapshot the full training state into the ring every this many steps
+    /// (0 = recovery disabled).
+    pub snapshot_every: u32,
+    /// Number of snapshots kept in the ring.
+    pub snapshot_ring: usize,
+    /// Ring directory; must be non-empty when snapshots are enabled.
+    pub snapshot_dir: String,
+    /// Rollback budget: after this many rollbacks in one run, a further
+    /// divergence is a hard error instead of an infinite replay loop.
+    pub max_rollbacks: u32,
+    /// Sentinel threshold: a train-loss z-score above this (against the
+    /// loss EWMA/variance) counts as divergence. Non-finite loss always does.
+    pub sentinel_zscore: f64,
+    /// Number of loss observations before z-score spikes can fire (the
+    /// EWMA needs warm-up; non-finite detection is active from step one).
+    pub sentinel_warmup: u32,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            snapshot_every: 0,
+            snapshot_ring: 4,
+            snapshot_dir: String::new(),
+            max_rollbacks: 3,
+            sentinel_zscore: 6.0,
+            sentinel_warmup: 16,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    pub fn is_active(&self) -> bool {
+        self.snapshot_every > 0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.snapshot_every > 0 {
+            anyhow::ensure!(self.snapshot_ring >= 1, "snapshot_ring must be >= 1");
+            anyhow::ensure!(
+                !self.snapshot_dir.is_empty(),
+                "snapshot_dir required when snapshot_every > 0"
+            );
+        }
+        anyhow::ensure!(self.sentinel_zscore > 0.0, "sentinel_zscore must be > 0");
+        anyhow::ensure!(self.sentinel_warmup >= 2, "sentinel_warmup must be >= 2");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("snapshot_every", num(self.snapshot_every as f64)),
+            ("snapshot_ring", num(self.snapshot_ring as f64)),
+            ("snapshot_dir", s(&self.snapshot_dir)),
+            ("max_rollbacks", num(self.max_rollbacks as f64)),
+            ("sentinel_zscore", num(self.sentinel_zscore)),
+            ("sentinel_warmup", num(self.sentinel_warmup as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RecoveryConfig> {
+        Ok(RecoveryConfig {
+            snapshot_every: j.field("snapshot_every")?.as_u64()? as u32,
+            snapshot_ring: j.field("snapshot_ring")?.as_usize()?,
+            snapshot_dir: j.field("snapshot_dir")?.as_str()?.to_string(),
+            max_rollbacks: j.field("max_rollbacks")?.as_u64()? as u32,
+            sentinel_zscore: j.field("sentinel_zscore")?.as_f64()?,
+            sentinel_warmup: j.field("sentinel_warmup")?.as_u64()? as u32,
+        })
     }
 }
 
@@ -412,6 +545,8 @@ pub struct RunConfig {
     /// Scripted fault plan (outages, loss, stragglers, crashes); the
     /// default plan is empty and keeps the fault-free hot path untouched.
     pub faults: FaultConfig,
+    /// Checkpoint ring + divergence sentinel (disabled by default).
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for RunConfig {
@@ -437,6 +572,7 @@ impl Default for RunConfig {
             use_hlo_fragment_ops: false,
             compression: Codec::None,
             faults: FaultConfig::default(),
+            recovery: RecoveryConfig::default(),
         }
     }
 }
@@ -466,6 +602,7 @@ impl RunConfig {
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
         anyhow::ensure!(self.eval_batches >= 1, "eval_batches >= 1");
         self.faults.validate(self.workers)?;
+        self.recovery.validate()?;
         Ok(())
     }
 
@@ -510,6 +647,7 @@ impl RunConfig {
             ),
             ("compression", s(self.compression.name())),
             ("faults", self.faults.to_json()),
+            ("recovery", self.recovery.to_json()),
             ("parallel_workers", Json::Bool(self.parallel_workers)),
             ("use_hlo_fragment_ops", Json::Bool(self.use_hlo_fragment_ops)),
         ])
@@ -559,6 +697,9 @@ impl RunConfig {
         // Optional for backward compatibility with pre-fault config files.
         if let Some(f) = j.get("faults") {
             cfg.faults = FaultConfig::from_json(f)?;
+        }
+        if let Some(r) = j.get("recovery") {
+            cfg.recovery = RecoveryConfig::from_json(r)?;
         }
         cfg.parallel_workers = j.field("parallel_workers")?.as_bool()?;
         cfg.use_hlo_fragment_ops = j.field("use_hlo_fragment_ops")?.as_bool()?;
@@ -659,7 +800,52 @@ mod tests {
         assert!(hi.outages[0].duration_s > lo.outages[0].duration_s);
         assert!(hi.transfer_loss_prob > lo.transfer_loss_prob);
         assert!(hi.degradations[0].bandwidth_factor < lo.degradations[0].bandwidth_factor);
+        assert!(hi.corruptions[0].prob > lo.corruptions[0].prob);
         assert!(hi.is_active() && lo.is_active());
+    }
+
+    #[test]
+    fn corruption_config_round_trips_and_validates() {
+        let mut c = RunConfig::default();
+        c.faults.corruptions.push(Corruption {
+            window: FaultWindow { start_s: 5.0, duration_s: 20.0 },
+            prob: 0.4,
+        });
+        assert!(c.faults.is_active());
+        c.validate().unwrap();
+        let back = RunConfig::from_json(&Json::parse(&c.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        c.faults.corruptions[0].prob = 0.0;
+        assert!(c.validate().is_err());
+        c.faults.corruptions[0].prob = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn recovery_config_round_trips_and_validates() {
+        let mut c = RunConfig::default();
+        c.recovery = RecoveryConfig {
+            snapshot_every: 10,
+            snapshot_ring: 3,
+            snapshot_dir: "/tmp/ring".into(),
+            max_rollbacks: 2,
+            sentinel_zscore: 4.0,
+            sentinel_warmup: 8,
+        };
+        assert!(c.recovery.is_active());
+        c.validate().unwrap();
+        let back = RunConfig::from_json(&Json::parse(&c.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        c.recovery.snapshot_dir.clear();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.recovery.snapshot_every = 5;
+        c.recovery.snapshot_dir = "/tmp/ring".into();
+        c.recovery.snapshot_ring = 0;
+        assert!(c.validate().is_err());
+        // Disabled recovery ignores ring/dir settings entirely.
+        assert!(!RunConfig::default().recovery.is_active());
+        RunConfig::default().validate().unwrap();
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! On a healthy link arrival ≤ τ and the schedule is unchanged; under an
 //! outage this converts Streaming's stall seconds into compensated lag.
 
-use crate::checkpoint::{pack_f64s, pack_u64s, unpack_f64s, unpack_u64s, Checkpoint};
+use crate::checkpoint::{checksum_f32, pack_f64s, pack_u64s, unpack_f64s, unpack_u64s, Checkpoint};
 use crate::config::{RunConfig, TauMode};
 use crate::coordinator::fragments::FragmentTable;
 use crate::util::pool::BufferPool;
@@ -185,6 +185,20 @@ impl Cocodc {
         let mut i = 0;
         while i < self.pending.len() {
             if self.pending[i].apply_step > step {
+                i += 1;
+                continue;
+            }
+            // Deferred-apply re-verification: CoCoDC holds payloads for
+            // τ_eff steps before applying, so the integrity check runs
+            // again here — a mismatching payload is quarantined and
+            // retransmitted, never delay-compensated into worker state.
+            if checksum_f32(&self.pending[i].delta_avg) != self.pending[i].checksum {
+                let pend = &mut self.pending[i];
+                ctx.stats.corrupt_fragments += 1;
+                ctx.stats.quarantined += 1;
+                pend.delivered = false;
+                pend.apply_step = u32::MAX;
+                pend.finish_time = ctx.clock.now();
                 i += 1;
                 continue;
             }
@@ -437,6 +451,7 @@ mod tests {
             delta_avg: vec![],
             snapshots: None,
             participants: None,
+            checksum: checksum_f32(&[]),
         });
         assert_eq!(c.select_fragment(100, 100), Some((1, SelectReason::MaxRate)));
     }

@@ -47,7 +47,21 @@ impl SyncStrategy for Diloco {
             ctx.stats.drops += sched.drops as usize;
             ctx.stats.bytes += bytes * sched.attempts as f64;
             match sched.transfer {
-                Some(t) => break t,
+                Some(t) => {
+                    if sched.corruption.is_some() {
+                        // Checksum mismatch on arrival. The blocking
+                        // baseline has no pending queue to park a corrupt
+                        // payload in, so the whole round is quarantined
+                        // (never applied) and retransmitted from the later
+                        // virtual time — one more dead stall on the
+                        // critical path.
+                        ctx.stats.corrupt_fragments += ctx.frags.k();
+                        ctx.stats.quarantined += ctx.frags.k();
+                        ctx.clock.stall_until(t.finish);
+                        continue;
+                    }
+                    break t;
+                }
                 None => {
                     ctx.stats.timeouts += 1;
                     ctx.clock.stall_until(sched.resolved_at);

@@ -56,6 +56,13 @@ pub struct SyncStats {
     /// Timed-out fragments re-entered into the pending queue for later
     /// retransmission.
     pub requeues: usize,
+    /// Fragment payloads that arrived with a checksum mismatch (in-flight
+    /// bit flips from the corruption fault class).
+    pub corrupt_fragments: usize,
+    /// Corrupt fragments quarantined instead of applied; each is requeued
+    /// for retransmission, so this must always equal `corrupt_fragments` —
+    /// a corrupt payload is never applied.
+    pub quarantined: usize,
     /// Distribution of effective overlap depths τ over delivered syncs.
     pub tau_dist: Dist,
     /// Distribution of transfer queue delays (seconds) over delivered syncs.

@@ -30,7 +30,9 @@
 //! zero heap allocations per initiate/complete cycle on the fault-free
 //! path (the degraded paths may allocate; they only run during faults).
 
-use crate::checkpoint::{pack_f64s, pack_u64s, unpack_f64s, unpack_u64s, Checkpoint};
+use crate::checkpoint::{
+    checksum_f32, pack_f64s, pack_u64s, unpack_f64s, unpack_u64, unpack_u64s, Checkpoint,
+};
 use crate::config::RunConfig;
 use crate::config::TauMode;
 use crate::coordinator::fragments::FragmentTable;
@@ -69,6 +71,10 @@ pub(crate) struct Pending {
     /// Live mask at initiation when some worker was crashed (None = all
     /// workers participated — the fast, allocation-free case).
     pub participants: Option<Vec<bool>>,
+    /// FNV checksum of `delta_avg` (post-codec) carried with the payload
+    /// over the WAN. The receiver verifies it at arrival and again at apply
+    /// time — a mismatching payload is quarantined, never applied.
+    pub checksum: u64,
 }
 
 impl Pending {
@@ -79,6 +85,49 @@ impl Pending {
             pool.put_shell(snaps);
         }
     }
+}
+
+/// Simulate the in-flight bit flip a corruption draw encodes and check it
+/// against the carried checksum: flip the seeded bit in `payload`, compare
+/// the FNV hash, then restore the original word — the retained sender-side
+/// copy stays intact for retransmission. Returns true when the mismatch is
+/// detected (always, barring an FNV collision).
+pub(crate) fn corrupt_payload_detected(payload: &mut [f32], checksum: u64, draw: u64) -> bool {
+    if payload.is_empty() {
+        return false;
+    }
+    let bit = (draw as usize) % (payload.len() * 32);
+    let (idx, shift) = (bit / 32, bit % 32);
+    let orig = payload[idx];
+    payload[idx] = f32::from_bits(orig.to_bits() ^ (1u32 << shift));
+    let detected = checksum_f32(payload) != checksum;
+    payload[idx] = orig;
+    detected
+}
+
+/// Receiver-side integrity check at arrival: when the WAN flagged this
+/// delivery as corrupted, verify the payload against its checksum and — on
+/// mismatch — quarantine the pending (mark undelivered, to be retransmitted
+/// by the existing retry path) instead of ever applying it. Returns true
+/// when the pending was quarantined.
+pub(crate) fn quarantine_if_corrupt(
+    pend: &mut Pending,
+    draw: Option<u64>,
+    detected_at: f64,
+    ctx: &mut SyncCtx,
+) -> bool {
+    let Some(draw) = draw else {
+        return false;
+    };
+    if !corrupt_payload_detected(&mut pend.delta_avg, pend.checksum, draw) {
+        return false;
+    }
+    ctx.stats.corrupt_fragments += 1;
+    ctx.stats.quarantined += 1;
+    pend.delivered = false;
+    pend.apply_step = u32::MAX;
+    pend.finish_time = detected_at;
+    true
 }
 
 /// Serialize the pending queue into `strategy/*` sections so in-flight
@@ -101,6 +150,7 @@ pub(crate) fn save_pendings(ck: &mut Checkpoint, pending: &[Pending]) {
             ],
         );
         pack_f64s(&mut meta, &[p.finish_time, p.wire_bytes]);
+        pack_u64s(&mut meta, &[p.checksum]);
         if let Some(l) = &p.participants {
             meta.extend(l.iter().map(|&b| if b { 1.0f32 } else { 0.0 }));
         }
@@ -138,11 +188,20 @@ pub(crate) fn load_pendings(
         let u = unpack_u64s(&meta[0..12]);
         let f = unpack_f64s(&meta[12..16]);
         let (n_snap, n_part) = (u[4] as usize, u[5] as usize);
-        anyhow::ensure!(meta.len() == 16 + n_part, "strategy/p{i}/meta malformed");
+        // Current layout carries the payload checksum at [16..18]; legacy
+        // (pre-integrity) checkpoints lack it and we recompute from the
+        // delta below. `n_part` disambiguates the two lengths.
+        let (checksum, part_off) = if meta.len() == 18 + n_part {
+            (Some(unpack_u64(meta[16], meta[17])), 18)
+        } else if meta.len() == 16 + n_part {
+            (None, 16)
+        } else {
+            anyhow::bail!("strategy/p{i}/meta malformed");
+        };
         let participants = if n_part == 0 {
             None
         } else {
-            Some(meta[16..].iter().map(|&x| x != 0.0).collect())
+            Some(meta[part_off..].iter().map(|&x| x != 0.0).collect())
         };
         let delta_src = need(format!("strategy/p{i}/delta"))?;
         let mut delta_avg = pool.take(delta_src.len());
@@ -159,6 +218,7 @@ pub(crate) fn load_pendings(
             }
             Some(shell)
         };
+        let checksum = checksum.unwrap_or_else(|| checksum_f32(&delta_avg));
         out.push(Pending {
             frag: u[0] as usize,
             t_init: u[1] as u32,
@@ -169,6 +229,7 @@ pub(crate) fn load_pendings(
             delta_avg,
             snapshots,
             participants,
+            checksum,
         });
     }
     Ok(out)
@@ -240,6 +301,9 @@ impl StreamingDiloco {
         // for the compressed size (Streaming DiLoCo ships quantized
         // pseudo-gradients; the optimizer sees the dequantized values).
         ctx.cfg.compression.round_trip(&mut delta_avg);
+        // Payload checksum travels with the fragment; the receiver verifies
+        // it at arrival and the apply path re-verifies before the outer step.
+        let checksum = checksum_f32(&delta_avg);
         let wire = ctx.cfg.compression.wire_bytes(frag.size);
         let now = ctx.clock.now();
         let sched = ctx.net.schedule_with_retries(now, wire);
@@ -260,7 +324,7 @@ impl StreamingDiloco {
                 };
                 ctx.stats.tau_dist.record(tau as f64);
                 ctx.stats.queue_delay_dist.record(transfer.queue_delay());
-                Ok(Pending {
+                let mut pend = Pending {
                     frag: p,
                     t_init: t,
                     apply_step: t.saturating_add(tau),
@@ -270,7 +334,12 @@ impl StreamingDiloco {
                     delta_avg,
                     snapshots: snaps,
                     participants,
-                })
+                    checksum,
+                };
+                // Arrival integrity check: a corrupt payload re-enters the
+                // queue undelivered and is retransmitted, never applied.
+                quarantine_if_corrupt(&mut pend, sched.corruption, transfer.finish, ctx);
+                Ok(pend)
             }
             None => {
                 // Budget exhausted: keep the captured data queued and
@@ -287,6 +356,7 @@ impl StreamingDiloco {
                     delta_avg,
                     snapshots: snaps,
                     participants,
+                    checksum,
                 })
             }
         }
@@ -325,6 +395,11 @@ impl StreamingDiloco {
                 pend.delivered = true;
                 pend.finish_time = t.finish;
                 pend.apply_step = step.saturating_add(tau);
+                if quarantine_if_corrupt(pend, sched.corruption, t.finish, ctx) {
+                    // Corrupted again in flight: back to the queue for the
+                    // next retransmission round.
+                    return Some(false);
+                }
                 Some(true)
             }
             None => {
@@ -344,6 +419,19 @@ impl StreamingDiloco {
         let mut i = 0;
         while i < self.pending.len() {
             if self.pending[i].apply_step > step {
+                i += 1;
+                continue;
+            }
+            // Apply-time re-verification (defense in depth): a payload that
+            // no longer matches its checksum is quarantined here too —
+            // nothing corrupt ever reaches the outer step.
+            if checksum_f32(&self.pending[i].delta_avg) != self.pending[i].checksum {
+                let pend = &mut self.pending[i];
+                ctx.stats.corrupt_fragments += 1;
+                ctx.stats.quarantined += 1;
+                pend.delivered = false;
+                pend.apply_step = u32::MAX;
+                pend.finish_time = ctx.clock.now();
                 i += 1;
                 continue;
             }
@@ -421,5 +509,26 @@ impl SyncStrategy for StreamingDiloco {
         }
         self.pending = load_pendings(ck, pool)?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corrupt_payload_detection_flips_checks_and_restores() {
+        let mut payload = vec![1.0f32, -2.5, 3.25, 0.0];
+        let original = payload.clone();
+        let checksum = checksum_f32(&payload);
+        for draw in [0u64, 1, 31, 32, 127, u64::MAX, 0xDEAD_BEEF] {
+            assert!(
+                corrupt_payload_detected(&mut payload, checksum, draw),
+                "single-bit flip (draw {draw}) must mismatch the checksum"
+            );
+            assert_eq!(payload, original, "sender-side copy must be restored");
+        }
+        // An empty payload has no bit to flip.
+        assert!(!corrupt_payload_detected(&mut [], checksum_f32(&[]), 7));
     }
 }

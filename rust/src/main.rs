@@ -10,7 +10,7 @@
 
 use std::path::PathBuf;
 
-use cocodc::config::{FaultConfig, MethodKind, RunConfig, TauMode};
+use cocodc::config::{Corruption, FaultConfig, FaultWindow, MethodKind, RunConfig, TauMode};
 use cocodc::metrics::{table1, write_curves_csv};
 use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
@@ -42,6 +42,16 @@ train/compare flags:
   --fault-severity X  scripted WAN fault scenario of severity X in (0,1]:
                       link outage + bandwidth degradation + transfer loss
                       + straggler + worker crash/recover, scaled by X
+  --fault-corruption P  corrupt each delivered fragment payload with
+                      probability P in (0,1] (in-flight bit flips; corrupt
+                      payloads are quarantined and retransmitted)
+  --snapshot-every N  snapshot the full run state into a durable checkpoint
+                      ring every N steps (0 = off; enables the divergence
+                      sentinel + rollback)
+  --snapshot-ring K   keep the last K ring snapshots (default 4)
+  --snapshot-dir DIR  ring directory (default: checkpoints/ring)
+  --resume            resume from the newest loadable ring snapshot
+                      (train only; torn/corrupt snapshots are skipped)
   --hlo-fragment-ops  run outer/delay-comp through Pallas artifacts
   --out FILE          write validation curve CSV
   --save FILE         write final checkpoint (train only)
@@ -49,7 +59,7 @@ train/compare flags:
   --quiet             suppress per-eval logging
 ";
 
-const BOOL_FLAGS: &[&str] = &["tau-network", "hlo-fragment-ops", "quiet"];
+const BOOL_FLAGS: &[&str] = &["tau-network", "hlo-fragment-ops", "quiet", "resume"];
 
 fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     let mut cfg = match args.get("config") {
@@ -108,6 +118,26 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
         let horizon = cfg.total_steps as f64 * cfg.network.step_compute_s;
         cfg.faults = FaultConfig::scenario(sev, horizon, cfg.workers);
     }
+    if let Some(prob) = args.get_parse::<f64>("fault-corruption")? {
+        // Whole-run corruption window (composes with --fault-severity's
+        // scenario, which replaces cfg.faults wholesale above).
+        cfg.faults.corruptions.push(Corruption {
+            window: FaultWindow { start_s: 0.0, duration_s: f64::INFINITY },
+            prob,
+        });
+    }
+    if let Some(v) = args.get_parse::<u32>("snapshot-every")? {
+        cfg.recovery.snapshot_every = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("snapshot-ring")? {
+        cfg.recovery.snapshot_ring = v;
+    }
+    if let Some(d) = args.get("snapshot-dir") {
+        cfg.recovery.snapshot_dir = d.to_string();
+    }
+    if cfg.recovery.snapshot_every > 0 && cfg.recovery.snapshot_dir.is_empty() {
+        cfg.recovery.snapshot_dir = "checkpoints/ring".to_string();
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -161,6 +191,22 @@ fn summarize(o: &cocodc::TrainOutcome) {
             o.queue_delay_dist.max_or_zero(),
         );
     }
+    if o.rollbacks > 0
+        || o.fallback_loads > 0
+        || o.corrupt_fragments > 0
+        || o.nonfinite_losses > 0
+    {
+        println!(
+            "[{}] recovery: rollbacks={} fallback_loads={} corrupt_fragments={} \
+             quarantined={} nonfinite_losses={}",
+            o.method,
+            o.rollbacks,
+            o.fallback_loads,
+            o.corrupt_fragments,
+            o.quarantined,
+            o.nonfinite_losses,
+        );
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -173,6 +219,12 @@ fn main() -> anyhow::Result<()> {
             let backend = build_backend(&args, &artifacts, &cfg.preset, cfg.use_hlo_fragment_ops)?;
             let mut tr = Trainer::new(backend.as_ref(), cfg)?;
             tr.verbose = !args.switch("quiet");
+            if args.switch("resume") {
+                match tr.resume_from_ring()? {
+                    Some(step) => eprintln!("resumed from ring snapshot at step {step}"),
+                    None => eprintln!("no ring snapshot to resume from; starting fresh"),
+                }
+            }
             let out = tr.run()?;
             summarize(&out);
             if let Some(path) = args.get("out") {

@@ -129,6 +129,23 @@ impl Curve {
     }
 }
 
+/// Largest absolute validation-loss gap between two curves over the steps
+/// they share (exact step matches only). None when the curves share no
+/// step. Used by the recovery experiments to bound how far a faulted run
+/// strays from its fault-free twin.
+pub fn max_loss_gap(a: &Curve, b: &Curve) -> Option<f64> {
+    let mut gap: Option<f64> = None;
+    for pa in &a.points {
+        for pb in &b.points {
+            if pa.step == pb.step {
+                let d = (pa.loss - pb.loss).abs();
+                gap = Some(gap.map_or(d, |g: f64| g.max(d)));
+            }
+        }
+    }
+    gap
+}
+
 /// Write multiple curves as a long-format CSV:
 /// `method,step,wall_s,loss,ppl` (one row per eval point).
 pub fn write_curves_csv<P: AsRef<Path>>(path: P, curves: &[Curve]) -> anyhow::Result<()> {
@@ -254,6 +271,17 @@ mod tests {
     fn immediate_crossing_returns_first_step() {
         let c = curve(&[(0, 5f64.ln())]);
         assert_eq!(c.steps_to_ppl(20.0), Some(0.0));
+    }
+
+    #[test]
+    fn max_loss_gap_over_shared_steps() {
+        let a = curve(&[(0, 3.0), (10, 2.5), (20, 2.0)]);
+        let b = curve(&[(0, 3.2), (20, 1.6), (30, 1.5)]);
+        // Shared steps 0 and 20; gaps 0.2 and 0.4.
+        let g = max_loss_gap(&a, &b).unwrap();
+        assert!((g - 0.4).abs() < 1e-12, "g={g}");
+        let empty = Curve::new("x");
+        assert!(max_loss_gap(&a, &empty).is_none());
     }
 
     #[test]

@@ -16,11 +16,18 @@ use crate::util::Rng;
 pub struct FaultPlan {
     cfg: FaultConfig,
     rng: Rng,
+    /// Payload-corruption stream (`0xB17F`), separate from the loss stream
+    /// so enabling corruption never perturbs which transfers are dropped.
+    corrupt_rng: Rng,
 }
 
 impl FaultPlan {
     pub fn new(cfg: FaultConfig, seed: u64) -> Self {
-        FaultPlan { cfg, rng: Rng::new(seed, 0xFA17) }
+        FaultPlan {
+            cfg,
+            rng: Rng::new(seed, 0xFA17),
+            corrupt_rng: Rng::new(seed, 0xB17F),
+        }
     }
 
     pub fn config(&self) -> &FaultConfig {
@@ -75,6 +82,35 @@ impl FaultPlan {
         self.cfg.transfer_loss_prob > 0.0 && self.rng.next_f64() < self.cfg.transfer_loss_prob
     }
 
+    /// Corruption probability at time `t`: overlapping windows combine as
+    /// independent corruption events, `1 − Π(1 − p_i)`.
+    pub fn corruption_prob(&self, t: f64) -> f64 {
+        let mut survive = 1.0;
+        for c in &self.cfg.corruptions {
+            if c.window.contains(t) {
+                survive *= 1.0 - c.prob;
+            }
+        }
+        1.0 - survive
+    }
+
+    /// Draw whether a transfer *departing* at `t` is corrupted in flight.
+    /// `Some(draw)` carries a seeded u64 the receiver uses to pick which
+    /// payload bit to flip; `None` means the payload arrives intact. The
+    /// stream is only consumed when a corruption window covers `t`, so runs
+    /// without corruption faults stay bit-identical.
+    pub fn draw_corruption(&mut self, t: f64) -> Option<u64> {
+        let p = self.corruption_prob(t);
+        if p <= 0.0 {
+            return None;
+        }
+        if self.corrupt_rng.next_f64() < p {
+            Some(self.corrupt_rng.next_u64())
+        } else {
+            None
+        }
+    }
+
     /// Is `worker` inside one of its crash windows at time `t`?
     pub fn is_crashed(&self, worker: usize, t: f64) -> bool {
         self.cfg
@@ -109,6 +145,14 @@ impl FaultPlan {
 
     pub fn restore_rng(&mut self, s: [u64; 4]) {
         self.rng = Rng::from_state(s);
+    }
+
+    pub fn corrupt_rng_state(&self) -> [u64; 4] {
+        self.corrupt_rng.state()
+    }
+
+    pub fn restore_corrupt_rng(&mut self, s: [u64; 4]) {
+        self.corrupt_rng = Rng::from_state(s);
     }
 }
 
@@ -177,6 +221,61 @@ mod tests {
         b.restore_rng(a.rng_state());
         for _ in 0..50 {
             assert_eq!(a.draw_loss(), b.draw_loss());
+        }
+    }
+
+    #[test]
+    fn corruption_draws_are_windowed_deterministic_and_skip_rng_when_off() {
+        use crate::config::Corruption;
+        let cfg = FaultConfig {
+            corruptions: vec![
+                Corruption { window: window(10.0, 10.0), prob: 0.5 },
+                Corruption { window: window(15.0, 10.0), prob: 0.5 },
+            ],
+            ..Default::default()
+        };
+        let mut a = FaultPlan::new(cfg.clone(), 7);
+        let mut b = FaultPlan::new(cfg.clone(), 7);
+        // Overlap combines as independent events: 1 − 0.5·0.5 = 0.75.
+        assert!((a.corruption_prob(17.0) - 0.75).abs() < 1e-12);
+        assert!((a.corruption_prob(12.0) - 0.5).abs() < 1e-12);
+        assert!((a.corruption_prob(30.0)).abs() < 1e-12);
+        let mut hits = 0;
+        for i in 0..64 {
+            let t = 10.0 + (i as f64) * 0.2;
+            let da = a.draw_corruption(t);
+            assert_eq!(da, b.draw_corruption(t));
+            hits += da.is_some() as usize;
+        }
+        assert!(hits > 0, "a 0.5+ prob window should corrupt something");
+        // Outside every window (or with no corruption configured) the
+        // stream must not advance.
+        let before = a.corrupt_rng_state();
+        assert_eq!(a.draw_corruption(99.0), None);
+        assert_eq!(a.corrupt_rng_state(), before);
+        let mut off = FaultPlan::new(FaultConfig::default(), 7);
+        let before = off.corrupt_rng_state();
+        for i in 0..32 {
+            assert_eq!(off.draw_corruption(i as f64), None);
+        }
+        assert_eq!(off.corrupt_rng_state(), before);
+    }
+
+    #[test]
+    fn corruption_rng_state_round_trips() {
+        use crate::config::Corruption;
+        let cfg = FaultConfig {
+            corruptions: vec![Corruption { window: window(0.0, 1e9), prob: 0.4 }],
+            ..Default::default()
+        };
+        let mut a = FaultPlan::new(cfg.clone(), 9);
+        for i in 0..17 {
+            a.draw_corruption(i as f64);
+        }
+        let mut b = FaultPlan::new(cfg, 1234);
+        b.restore_corrupt_rng(a.corrupt_rng_state());
+        for i in 0..50 {
+            assert_eq!(a.draw_corruption(i as f64), b.draw_corruption(i as f64));
         }
     }
 

@@ -55,6 +55,12 @@ pub struct SyncSchedule {
     /// Virtual time the final outcome was known: delivery time on success,
     /// last loss-detection time on exhaustion.
     pub resolved_at: f64,
+    /// `Some(draw)` when the delivered payload was corrupted in flight
+    /// (seeded bit-flip draw from the fault plan's corruption stream). The
+    /// receiving strategy uses the draw to apply the flip against the
+    /// payload checksum, then quarantines + retransmits. Always `None` on
+    /// exhaustion (nothing was delivered).
+    pub corruption: Option<u64>,
 }
 
 impl SyncSchedule {
@@ -96,6 +102,7 @@ pub struct NetState {
     pub drops: usize,
     pub jitter_rng: [u64; 4],
     pub fault_rng: [u64; 4],
+    pub corrupt_rng: [u64; 4],
 }
 
 impl WanSimulator {
@@ -197,11 +204,15 @@ impl WanSimulator {
             attempts += 1;
             match self.try_schedule_allreduce(request_at, bytes) {
                 TransferOutcome::Delivered(t) => {
+                    // Corruption is drawn at departure time on a dedicated
+                    // stream, so loss-only plans replay identically.
+                    let corruption = self.faults.draw_corruption(t.start);
                     return SyncSchedule {
                         transfer: Some(t),
                         attempts,
                         drops,
                         resolved_at: t.finish,
+                        corruption,
                     };
                 }
                 TransferOutcome::Dropped { detected_at, .. } => {
@@ -212,6 +223,7 @@ impl WanSimulator {
                             attempts,
                             drops,
                             resolved_at: detected_at,
+                            corruption: None,
                         };
                     }
                     let backoff =
@@ -223,6 +235,7 @@ impl WanSimulator {
                             attempts,
                             drops,
                             resolved_at: detected_at,
+                            corruption: None,
                         };
                     }
                 }
@@ -259,10 +272,10 @@ impl WanSimulator {
         &self.cfg
     }
 
-    /// Checkpointable simulator state: link timeline, counters and both RNG
-    /// streams (jitter + transfer loss). With this restored, a resumed run
-    /// schedules — and loses — transfers identically to the uninterrupted
-    /// one, even mid fault window.
+    /// Checkpointable simulator state: link timeline, counters and all three
+    /// RNG streams (jitter + transfer loss + payload corruption). With this
+    /// restored, a resumed run schedules — and loses, and corrupts —
+    /// transfers identically to the uninterrupted one, even mid fault window.
     pub fn state(&self) -> NetState {
         NetState {
             busy_until: self.busy_until,
@@ -271,6 +284,7 @@ impl WanSimulator {
             drops: self.drops,
             jitter_rng: self.rng.state(),
             fault_rng: self.faults.rng_state(),
+            corrupt_rng: self.faults.corrupt_rng_state(),
         }
     }
 
@@ -281,6 +295,7 @@ impl WanSimulator {
         self.drops = st.drops;
         self.rng = Rng::from_state(st.jitter_rng);
         self.faults.restore_rng(st.fault_rng);
+        self.faults.restore_corrupt_rng(st.corrupt_rng);
     }
 }
 
@@ -512,6 +527,43 @@ mod tests {
             assert_eq!(a.try_schedule_allreduce(now, 1e5), b.try_schedule_allreduce(now, 1e5));
         }
         assert_eq!(a.drops, b.drops);
+    }
+
+    #[test]
+    fn corruption_draws_flow_through_retries_and_replay_from_state() {
+        use crate::config::{Corruption, FaultWindow};
+        let mut f = fault_cfg();
+        f.corruptions.push(Corruption {
+            window: FaultWindow { start_s: 0.0, duration_s: 1e9 },
+            prob: 0.5,
+        });
+        let mut a = WanSimulator::with_faults(net(), 4, 31, f.clone());
+        let mut b = WanSimulator::with_faults(net(), 4, 31, f.clone());
+        let mut corrupted = 0;
+        for i in 0..60 {
+            let now = i as f64 * 10.0;
+            let sa = a.schedule_with_retries(now, 1e6);
+            assert_eq!(sa, b.schedule_with_retries(now, 1e6));
+            assert!(sa.delivered());
+            corrupted += sa.corruption.is_some() as usize;
+        }
+        assert!(corrupted > 10 && corrupted < 50, "corrupted={corrupted}");
+        // State round trip replays the same corruption draws.
+        let snap = a.state();
+        let mut c = WanSimulator::with_faults(net(), 4, 777, f);
+        c.restore(snap);
+        for i in 60..120 {
+            let now = i as f64 * 10.0;
+            assert_eq!(a.schedule_with_retries(now, 1e6), c.schedule_with_retries(now, 1e6));
+        }
+        // Corruption-free plans never touch the stream or flag deliveries.
+        let mut clean = WanSimulator::new(net(), 4, 31);
+        let before = clean.state().corrupt_rng;
+        for i in 0..30 {
+            let s = clean.schedule_with_retries(i as f64 * 10.0, 1e6);
+            assert_eq!(s.corruption, None);
+        }
+        assert_eq!(clean.state().corrupt_rng, before);
     }
 
     #[test]

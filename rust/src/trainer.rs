@@ -21,6 +21,7 @@
 use std::path::Path;
 use std::time::Instant;
 
+use crate::checkpoint::ring::CheckpointRing;
 use crate::checkpoint::{
     pack_f64, pack_f64s, pack_u64, pack_u64s, unpack_f64, unpack_u64, unpack_u64s, Checkpoint,
 };
@@ -68,6 +69,17 @@ pub struct TrainOutcome {
     pub tau_dist: Dist,
     /// Distribution of transfer queue delays (s) over delivered syncs.
     pub queue_delay_dist: Dist,
+    /// Divergence-sentinel rollbacks to the last good snapshot.
+    pub rollbacks: u32,
+    /// Newer ring snapshots skipped as torn/corrupt while loading.
+    pub fallback_loads: usize,
+    /// Fragment payloads that arrived with a checksum mismatch.
+    pub corrupt_fragments: usize,
+    /// Corrupt fragments quarantined and requeued instead of applied
+    /// (always equals `corrupt_fragments`).
+    pub quarantined: usize,
+    /// Non-finite per-worker/per-batch losses observed (train + eval).
+    pub nonfinite_losses: usize,
 }
 
 /// One full cross-region training run.
@@ -99,8 +111,34 @@ pub struct Trainer<'b> {
     step_batches: Vec<Batch>,
     step_losses: Vec<Option<anyhow::Result<f32>>>,
     eval_losses: Vec<Option<anyhow::Result<f32>>>,
+    /// Durable snapshot ring (Some when `cfg.recovery` is active): last-K
+    /// atomically written checkpoints the divergence sentinel can roll back
+    /// to and `resume_from_ring` can restart from.
+    ring: Option<CheckpointRing>,
+    /// Divergence-sentinel EWMA of the mean train loss (checkpointed, so a
+    /// rollback replays the same detector trajectory).
+    loss_ewma: f64,
+    /// EWMA estimate of the loss variance (same cadence as `loss_ewma`).
+    loss_var: f64,
+    /// Healthy loss observations folded into the sentinel so far.
+    loss_obs: u64,
+    /// Rollbacks performed this process (not checkpointed: the budget
+    /// guards the *current* run, not the trajectory's history).
+    rollbacks: u32,
+    /// Torn/corrupt ring snapshots skipped while loading (not checkpointed).
+    fallback_loads: usize,
+    /// Non-finite losses observed (not checkpointed; surfaced in the
+    /// outcome so silent NaN/Inf batches are visible even without a ring).
+    nonfinite_losses: usize,
+    /// Test hook: override the mean train loss seen by the sentinel at the
+    /// given step (consumed once; never touches worker state, so a
+    /// post-rollback replay produces the genuine loss).
+    pub inject_loss_spike: Option<(u32, f32)>,
     pub verbose: bool,
 }
+
+/// EWMA smoothing for the divergence sentinel's loss mean/variance.
+const SENTINEL_BETA: f64 = 0.1;
 
 impl<'b> Trainer<'b> {
     pub fn new(backend: &'b dyn Backend, cfg: RunConfig) -> anyhow::Result<Self> {
@@ -162,6 +200,14 @@ impl<'b> Trainer<'b> {
             (0..cfg.workers).map(|_| Batch::empty(model.batch_size, model.seq_len)).collect();
         let step_losses = (0..cfg.workers).map(|_| None).collect();
         let eval_losses = (0..cfg.eval_batches).map(|_| None).collect();
+        let ring = if cfg.recovery.is_active() {
+            Some(CheckpointRing::new(
+                Path::new(&cfg.recovery.snapshot_dir),
+                cfg.recovery.snapshot_ring,
+            )?)
+        } else {
+            None
+        };
         Ok(Trainer {
             backend,
             cfg,
@@ -181,6 +227,14 @@ impl<'b> Trainer<'b> {
             step_batches,
             step_losses,
             eval_losses,
+            ring,
+            loss_ewma: 0.0,
+            loss_var: 0.0,
+            loss_obs: 0,
+            rollbacks: 0,
+            fallback_loads: 0,
+            nonfinite_losses: 0,
+            inject_loss_spike: None,
             verbose: false,
         })
     }
@@ -219,9 +273,18 @@ impl<'b> Trainer<'b> {
         }
         self.bufs.put(mean);
         let mut total = 0.0f64;
+        let mut bad = 0usize;
         for l in self.eval_losses.iter_mut() {
-            total += l.take().expect("eval ran for every batch")? as f64;
+            let x = l.take().expect("eval ran for every batch")? as f64;
+            if !x.is_finite() {
+                bad += 1;
+            }
+            total += x;
         }
+        // A NaN/Inf batch loss used to vanish silently into the mean; count
+        // it so the outcome (and the divergence sentinel, via the poisoned
+        // mean) surfaces it.
+        self.nonfinite_losses += bad;
         Ok(total / self.val_batches.len() as f64)
     }
 
@@ -280,13 +343,19 @@ impl<'b> Trainer<'b> {
             }
         }
         let mut mean = 0.0f32;
+        let mut bad = 0usize;
         for l in self.step_losses.iter_mut() {
             if let Some(r) = l.take() {
+                let x = r?;
+                if !x.is_finite() {
+                    bad += 1;
+                }
                 // Dividing each term (not the sum) keeps the all-live path
                 // bit-identical to the pre-fault builds.
-                mean += r? / n_live as f32;
+                mean += x / n_live as f32;
             }
         }
+        self.nonfinite_losses += bad;
         Ok(mean)
     }
 
@@ -347,6 +416,93 @@ impl<'b> Trainer<'b> {
         Ok((step, loss))
     }
 
+    /// Fold one mean train loss into the divergence sentinel and report
+    /// whether it signals divergence. Non-finite losses are always a
+    /// divergence; finite losses diverge when their z-score against the
+    /// EWMA mean/variance exceeds `recovery.sentinel_zscore` after
+    /// `recovery.sentinel_warmup` healthy observations. A divergent loss is
+    /// *not* folded in, so the detector's baseline stays healthy for the
+    /// post-rollback replay.
+    fn observe_loss(&mut self, loss: f32) -> bool {
+        let x = loss as f64;
+        if !x.is_finite() {
+            return true;
+        }
+        if self.loss_obs == 0 {
+            self.loss_obs = 1;
+            self.loss_ewma = x;
+            self.loss_var = 0.0;
+            return false;
+        }
+        let rc = &self.cfg.recovery;
+        let d = x - self.loss_ewma;
+        let z = d / (self.loss_var.sqrt() + 1e-6);
+        let spike = self.loss_obs >= rc.sentinel_warmup as u64 && z > rc.sentinel_zscore;
+        if !spike {
+            self.loss_ewma += SENTINEL_BETA * d;
+            self.loss_var = (1.0 - SENTINEL_BETA) * (self.loss_var + SENTINEL_BETA * d * d);
+            self.loss_obs += 1;
+        }
+        spike
+    }
+
+    /// Snapshot the full run state into the ring (atomic write + manifest).
+    /// No-op when no ring is configured.
+    fn snapshot(&mut self, step: u32) -> anyhow::Result<()> {
+        if self.ring.is_none() {
+            return Ok(());
+        }
+        let ck = self.checkpoint(step)?;
+        if let Some(ring) = self.ring.as_mut() {
+            ring.save(&ck)?;
+        }
+        Ok(())
+    }
+
+    /// Roll back to the newest loadable ring snapshot after the sentinel
+    /// flagged `step` as divergent. Returns the step rolled back to; errors
+    /// once the `recovery.max_rollbacks` budget is exhausted (repeated
+    /// divergence means the trajectory itself is sick, not the state).
+    fn rollback(&mut self, step: u32, loss: f32) -> anyhow::Result<u32> {
+        anyhow::ensure!(
+            self.rollbacks < self.cfg.recovery.max_rollbacks,
+            "divergence at step {step} (train_loss={loss}): rollback budget {} exhausted",
+            self.cfg.recovery.max_rollbacks
+        );
+        let (ck, skipped) = match self.ring.as_mut() {
+            Some(ring) => ring.load_newest_valid()?,
+            None => anyhow::bail!(
+                "divergence at step {step} (train_loss={loss}) but no snapshot ring is configured"
+            ),
+        };
+        self.fallback_loads += skipped;
+        self.restore(&ck)?;
+        self.rollbacks += 1;
+        if self.verbose {
+            eprintln!(
+                "[{}] divergence at step {step} (train_loss={loss:.4}); rolled back to step {}",
+                self.strategy.name(),
+                ck.step
+            );
+        }
+        Ok(ck.step)
+    }
+
+    /// Restore from the newest loadable snapshot in the configured ring, if
+    /// any. Returns the restored step (run continues at step + 1), or None
+    /// when no ring is configured or it is empty. Torn/corrupt newer
+    /// snapshots are skipped (counted as fallback loads), so a run killed
+    /// mid-save resumes from the previous good snapshot.
+    pub fn resume_from_ring(&mut self) -> anyhow::Result<Option<u32>> {
+        let (ck, skipped) = match self.ring.as_mut() {
+            Some(ring) if !ring.is_empty() => ring.load_newest_valid()?,
+            _ => return Ok(None),
+        };
+        self.fallback_loads += skipped;
+        self.restore(&ck)?;
+        Ok(Some(ck.step))
+    }
+
     /// Run local steps up to `cfg.total_steps` (continuing from a restored
     /// checkpoint if any); returns the outcome with the validation curve
     /// (evaluated every `cfg.eval_every` steps).
@@ -363,9 +519,27 @@ impl<'b> Trainer<'b> {
                 v0.exp()
             );
         }
+        // Seed the ring so a rollback target exists before the first
+        // cadence snapshot (and so a freshly resumed run re-anchors its
+        // "last known good" at the restored step).
+        self.snapshot(start)?;
         let mut last_train_loss = f32::NAN;
         while self.next_step <= self.cfg.total_steps {
-            let (step, loss) = self.step_once()?;
+            let (step, mut loss) = self.step_once()?;
+            if let Some((at, v)) = self.inject_loss_spike {
+                if at == step {
+                    self.inject_loss_spike = None;
+                    loss = v;
+                }
+            }
+            if self.ring.is_some() && self.observe_loss(loss) {
+                let to = self.rollback(step, loss)?;
+                // Drop eval points past the rollback target; the replay
+                // regenerates them from the restored state, so the curve
+                // stays the single deterministic trajectory.
+                curve.points.retain(|p| p.step <= to);
+                continue;
+            }
             last_train_loss = loss;
             if step % self.cfg.eval_every == 0 || step == self.cfg.total_steps {
                 let v = self.validation_loss()?;
@@ -378,6 +552,12 @@ impl<'b> Trainer<'b> {
                         v.exp()
                     );
                 }
+            }
+            let every = self.cfg.recovery.snapshot_every;
+            if every > 0 && step % every == 0 {
+                // Snapshot only after the sentinel called the step healthy,
+                // so a divergent state never becomes "last known good".
+                self.snapshot(step)?;
             }
         }
         Ok(TrainOutcome {
@@ -400,12 +580,18 @@ impl<'b> Trainer<'b> {
             requeues: self.stats.requeues,
             tau_dist: self.stats.tau_dist,
             queue_delay_dist: self.stats.queue_delay_dist,
+            rollbacks: self.rollbacks,
+            fallback_loads: self.fallback_loads,
+            corrupt_fragments: self.stats.corrupt_fragments,
+            quarantined: self.stats.quarantined,
+            nonfinite_losses: self.nonfinite_losses,
         })
     }
 
     /// Snapshot the full training state *and* run context: worker states,
-    /// global consensus, virtual clock, sync statistics, WAN simulator
-    /// (both RNG streams), liveness mask, strategy-internal schedule state
+    /// global consensus, virtual clock, sync statistics, divergence
+    /// sentinel, WAN simulator (all three RNG streams), liveness mask,
+    /// strategy-internal schedule state
     /// (including in-flight fragment syncs) and data-stream cursors —
     /// everything a resumed run needs to continue the same trajectory, even
     /// from the middle of an active fault window with transfers in flight.
@@ -440,6 +626,7 @@ impl<'b> Trainer<'b> {
             &mut stats,
             &[s.retries as u64, s.drops as u64, s.timeouts as u64, s.requeues as u64],
         );
+        pack_u64s(&mut stats, &[s.corrupt_fragments as u64, s.quarantined as u64]);
         for d in [&s.tau_dist, &s.queue_delay_dist] {
             pack_u64s(&mut stats, &[d.count]);
             pack_f64s(&mut stats, &[d.sum, d.min, d.max]);
@@ -449,12 +636,17 @@ impl<'b> Trainer<'b> {
         }
         ck.insert("run/stats", stats);
         let nst = self.net.state();
-        let mut net = Vec::with_capacity(24);
+        let mut net = Vec::with_capacity(32);
         pack_f64s(&mut net, &[nst.busy_until, nst.bytes_sent]);
         pack_u64s(&mut net, &[nst.transfers as u64, nst.drops as u64]);
         pack_u64s(&mut net, &nst.jitter_rng);
         pack_u64s(&mut net, &nst.fault_rng);
+        pack_u64s(&mut net, &nst.corrupt_rng);
         ck.insert("run/net", net);
+        let mut sen = Vec::with_capacity(6);
+        pack_u64s(&mut sen, &[self.loss_obs]);
+        pack_f64s(&mut sen, &[self.loss_ewma, self.loss_var]);
+        ck.insert("run/sentinel", sen);
         ck.insert("run/live", self.live.iter().map(|&x| x as u32 as f32).collect());
         self.strategy.save_state(&mut ck);
         for (i, stream) in self.streams.iter().enumerate() {
@@ -516,10 +708,12 @@ impl<'b> Trainer<'b> {
         if let Some(s) = ck.get("run/stats") {
             let k = self.frags.k();
             // Legacy layout (10 + 2k): counters + bytes + per-fragment.
-            // Current layout (34 + 2k) adds fault counters and the τ /
-            // queue-delay distributions between bytes and per-fragment.
+            // The 34 + 2k layout adds fault counters and the τ /
+            // queue-delay distributions between bytes and per-fragment;
+            // current (38 + 2k) inserts the corruption counters before the
+            // distributions.
             anyhow::ensure!(
-                s.len() == 10 + 2 * k || s.len() == 34 + 2 * k,
+                s.len() == 10 + 2 * k || s.len() == 34 + 2 * k || s.len() == 38 + 2 * k,
                 "run/stats section malformed"
             );
             self.stats.syncs_initiated = unpack_u64(s[0], s[1]) as usize;
@@ -528,14 +722,20 @@ impl<'b> Trainer<'b> {
             self.stats.apply_stalls = unpack_u64(s[6], s[7]) as usize;
             self.stats.bytes = unpack_f64(s[8], s[9]);
             let mut off = 10;
-            if s.len() == 34 + 2 * k {
+            if s.len() >= 34 + 2 * k {
                 self.stats.retries = unpack_u64(s[10], s[11]) as usize;
                 self.stats.drops = unpack_u64(s[12], s[13]) as usize;
                 self.stats.timeouts = unpack_u64(s[14], s[15]) as usize;
                 self.stats.requeues = unpack_u64(s[16], s[17]) as usize;
+                let mut base = 18;
+                if s.len() == 38 + 2 * k {
+                    self.stats.corrupt_fragments = unpack_u64(s[18], s[19]) as usize;
+                    self.stats.quarantined = unpack_u64(s[20], s[21]) as usize;
+                    base = 22;
+                }
                 let mut dists = [Dist::default(); 2];
                 for (i, d) in dists.iter_mut().enumerate() {
-                    let b = 18 + 8 * i;
+                    let b = base + 8 * i;
                     *d = Dist {
                         count: unpack_u64(s[b], s[b + 1]),
                         sum: unpack_f64(s[b + 2], s[b + 3]),
@@ -545,7 +745,7 @@ impl<'b> Trainer<'b> {
                 }
                 self.stats.tau_dist = dists[0];
                 self.stats.queue_delay_dist = dists[1];
-                off = 34;
+                off = base + 16;
             }
             for p in 0..k {
                 self.stats.per_fragment[p] =
@@ -553,11 +753,15 @@ impl<'b> Trainer<'b> {
             }
         }
         if let Some(nst) = ck.get("run/net") {
-            // Legacy layout (14): busy, bytes, transfers, jitter RNG.
-            // Current layout (24) adds the drop counter and the fault-loss
-            // RNG stream; legacy checkpoints predate faults, so leaving the
-            // freshly seeded loss stream in place is exact.
-            anyhow::ensure!(nst.len() == 14 || nst.len() == 24, "run/net section malformed");
+            // Legacy layout (14): busy, bytes, transfers, jitter RNG. The
+            // 24-value layout adds the drop counter and the fault-loss RNG
+            // stream; current (32) appends the corruption RNG stream.
+            // Checkpoints predating a stream leave its freshly seeded state
+            // in place, which is exact (the stream was never drawn from).
+            anyhow::ensure!(
+                nst.len() == 14 || nst.len() == 24 || nst.len() == 32,
+                "run/net section malformed"
+            );
             let mut st = self.net.state();
             st.busy_until = unpack_f64(nst[0], nst[1]);
             st.bytes_sent = unpack_f64(nst[2], nst[3]);
@@ -571,8 +775,18 @@ impl<'b> Trainer<'b> {
                 let u = unpack_u64s(&nst[8..24]);
                 st.jitter_rng = [u[0], u[1], u[2], u[3]];
                 st.fault_rng = [u[4], u[5], u[6], u[7]];
+                if nst.len() == 32 {
+                    let c = unpack_u64s(&nst[24..32]);
+                    st.corrupt_rng = [c[0], c[1], c[2], c[3]];
+                }
             }
             self.net.restore(st);
+        }
+        if let Some(sen) = ck.get("run/sentinel") {
+            anyhow::ensure!(sen.len() == 6, "run/sentinel section malformed");
+            self.loss_obs = unpack_u64(sen[0], sen[1]);
+            self.loss_ewma = unpack_f64(sen[2], sen[3]);
+            self.loss_var = unpack_f64(sen[4], sen[5]);
         }
         if let Some(lv) = ck.get("run/live") {
             anyhow::ensure!(lv.len() == self.workers.len(), "run/live section malformed");
