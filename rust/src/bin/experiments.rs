@@ -12,6 +12,8 @@
 //!                             # curve: outage+loss+crash vs all 3 methods)
 //! experiments recovery        # in-flight corruption sweep with the
 //!                             # snapshot ring + divergence sentinel armed
+//! experiments topology        # flat vs hierarchical two-level sync at
+//!                             # matched WAN budgets (per-link timelines)
 //! experiments all             # everything above
 //! ```
 //!
@@ -19,6 +21,11 @@
 //!        --ppl X --eval-every N --backend {auto|pjrt|native}
 //!        --severity S[,S...]  (faults only; default 0.0,0.3,0.6)
 //!        --corruption P[,P...]  (recovery only; default 0.0,0.3,0.7)
+//!        --net-preset P  (flat|us-eu|global-4: matched network + topology
+//!                        for every experiment; conflicts with --latency /
+//!                        --bandwidth raw overrides)
+//!        --latency S --bandwidth BPS  (raw flat-link overrides)
+//!        --topo-presets P[,P...]  (topology only; default us-eu,global-4)
 //!
 //! With `--backend native` (or auto and no artifacts present) every
 //! experiment runs the pure-rust transformer backend — the full evaluation
@@ -29,7 +36,10 @@
 
 use std::path::PathBuf;
 
-use cocodc::config::{Corruption, FaultConfig, FaultWindow, MethodKind, RunConfig, TauMode};
+use cocodc::config::{
+    net_preset, Corruption, FaultConfig, FaultWindow, MethodKind, NetworkConfig, RunConfig,
+    TauMode, TopologyConfig,
+};
 use cocodc::metrics::{max_loss_gap, table1, write_curves_csv, Curve};
 use cocodc::runtime::{load_backend, Backend, BackendKind};
 use cocodc::util::cli::Args;
@@ -45,6 +55,13 @@ struct Cli {
     eval_every: u32,
     severities: Vec<f64>,
     corruptions: Vec<f64>,
+    /// `--net-preset` expansion applied to every experiment's base config.
+    net: Option<(NetworkConfig, TopologyConfig)>,
+    /// Raw flat-link overrides (mutually exclusive with `net`).
+    latency: Option<f64>,
+    bandwidth: Option<f64>,
+    /// Multi-region presets the `topology` sweep compares.
+    topo_presets: Vec<String>,
 }
 
 fn base_cfg(cli: &Cli, method: MethodKind) -> RunConfig {
@@ -52,6 +69,18 @@ fn base_cfg(cli: &Cli, method: MethodKind) -> RunConfig {
     cfg.total_steps = cli.steps;
     cfg.seed = cli.seed;
     cfg.eval_every = cli.eval_every;
+    if let Some((net, topo)) = &cli.net {
+        let step = cfg.network.step_compute_s;
+        cfg.network = *net;
+        cfg.network.step_compute_s = step;
+        cfg.topology = topo.clone();
+    }
+    if let Some(v) = cli.latency {
+        cfg.network.latency_s = v;
+    }
+    if let Some(v) = cli.bandwidth {
+        cfg.network.bandwidth_bps = v;
+    }
     cfg
 }
 
@@ -378,6 +407,126 @@ fn recovery(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// TOPOLOGY: flat vs hierarchical two-level sync at matched WAN budgets.
+/// Every multi-region preset runs twice per method: once with the region
+/// graph attached (intra-region all-reduce at LAN cost, leader ring over
+/// per-link timelines, intra broadcast — CoCoDC additionally routes each
+/// fragment by its per-link EWMA estimates) and once on the matched flat
+/// single link whose latency/bandwidth equal the preset's mesh means, so
+/// both modes spend the same nominal WAN budget. The hierarchical runs
+/// must reach the target PPL in no more simulated wall-clock than flat.
+fn topology(cli: &Cli, backend: &dyn Backend) -> anyhow::Result<()> {
+    println!("== TOPOLOGY: flat vs hierarchical two-level sync ==");
+    let mut rows = String::from(
+        "preset,mode,method,final_loss,final_ppl,steps_to_ppl,wall_to_ppl_s,\
+         wall_s,compute_s,comm_stall_s,syncs,bytes_mb,link_utils\n",
+    );
+    let mut curves = Vec::new();
+    for preset in &cli.topo_presets {
+        let (net, topo) = net_preset(preset)?;
+        anyhow::ensure!(
+            !topo.is_flat(),
+            "topology sweep needs a multi-region preset, got '{preset}'"
+        );
+        let workers = 2 * topo.n_regions();
+        for method in MethodKind::all() {
+            // (wall_s, wall_to_ppl) for flat then hier, for the self-check.
+            let mut walls: Vec<(f64, Option<f64>)> = Vec::new();
+            for hier in [false, true] {
+                let mode = if hier { "hier" } else { "flat" };
+                let mut cfg = base_cfg(cli, method);
+                cfg.workers = workers;
+                cfg.tau = TauMode::Network;
+                let step = cfg.network.step_compute_s;
+                cfg.network = net;
+                cfg.network.step_compute_s = step;
+                cfg.topology = if hier { topo.clone() } else { TopologyConfig::flat() };
+                let out =
+                    run(backend, cfg, &format!("{}_{preset}_{mode}", method.name()))?;
+                if hier {
+                    anyhow::ensure!(
+                        !out.link_util.is_empty(),
+                        "hierarchical run {preset}/{} reported no per-link utilization",
+                        method.name()
+                    );
+                } else {
+                    anyhow::ensure!(
+                        out.link_util.is_empty(),
+                        "flat run {preset}/{} reported per-link utilization",
+                        method.name()
+                    );
+                }
+                let links = out
+                    .link_util
+                    .iter()
+                    .map(|l| {
+                        format!(
+                            "{}:{:.1}MB/{:.1}s/{}x",
+                            l.name,
+                            l.bytes / 1e6,
+                            l.busy_s,
+                            l.transfers
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                println!(
+                    "  {preset} {mode:<4} {:<18} wall {:>7.0}s (stall {:>6.0}s) \
+                     syncs={} {links}",
+                    method.name(),
+                    out.wall_s,
+                    out.comm_stall_s,
+                    out.syncs_completed
+                );
+                rows.push_str(&format!(
+                    "{preset},{mode},{},{:.4},{:.4},{},{},{:.1},{:.1},{:.1},{},{:.1},{links}\n",
+                    out.method,
+                    out.curve.final_loss().unwrap_or(f64::NAN),
+                    out.curve.final_ppl().unwrap_or(f64::NAN),
+                    out.curve.steps_to_ppl(cli.ppl).map(|s| format!("{s:.0}")).unwrap_or_default(),
+                    out.curve.wall_to_ppl(cli.ppl).map(|s| format!("{s:.0}")).unwrap_or_default(),
+                    out.wall_s,
+                    out.compute_s,
+                    out.comm_stall_s,
+                    out.syncs_completed,
+                    out.bytes_sent / 1e6,
+                ));
+                walls.push((out.wall_s, out.curve.wall_to_ppl(cli.ppl)));
+                curves.push(out.curve);
+            }
+            // Self-check: at the matched WAN budget the hierarchical run may
+            // never be slower than flat. Compare wall-to-target-PPL when both
+            // runs reach it; otherwise fall back to total simulated wall.
+            let (flat_wall, flat_ppl) = walls[0];
+            let (hier_wall, hier_ppl) = walls[1];
+            match (flat_ppl, hier_ppl) {
+                (Some(f), Some(h)) => anyhow::ensure!(
+                    h <= f + 1e-6,
+                    "{preset}/{}: hierarchical reached PPL<={} at {h:.1}s but flat at {f:.1}s",
+                    method.name(),
+                    cli.ppl
+                ),
+                (Some(f), None) => anyhow::bail!(
+                    "{preset}/{}: flat reached PPL<={} ({f:.1}s) but hierarchical never did",
+                    method.name(),
+                    cli.ppl
+                ),
+                _ => anyhow::ensure!(
+                    hier_wall <= flat_wall + 1e-6,
+                    "{preset}/{}: hierarchical wall {hier_wall:.1}s exceeds flat {flat_wall:.1}s",
+                    method.name()
+                ),
+            }
+        }
+    }
+    std::fs::create_dir_all(&cli.outdir)?;
+    std::fs::write(cli.outdir.join("topology.csv"), rows)?;
+    write_curves_csv(cli.outdir.join("topology_curves.csv"), &curves)?;
+    println!("topology table -> {}", cli.outdir.join("topology.csv").display());
+    println!("\n{}", table1(&curves, cli.ppl));
+    Ok(())
+}
+
 /// Rebuild the Table-I comparison from previously written curve CSVs
 /// (`experiments report --curves a.csv,b.csv --ppl 20`).
 fn report(files: &str, ppl: f64) -> anyhow::Result<()> {
@@ -409,6 +558,25 @@ fn main() -> anyhow::Result<()> {
         args.finish()?;
         return report(&files, ppl);
     }
+    // A named preset expands to a matched network + topology pair; raw flag
+    // overrides would skew that matched budget, so mixing them is an error.
+    let net = match args.get("net-preset") {
+        Some(name) => {
+            let raw: Vec<&str> = ["latency", "bandwidth"]
+                .iter()
+                .copied()
+                .filter(|f| args.get(f).is_some())
+                .collect();
+            anyhow::ensure!(
+                raw.is_empty(),
+                "--net-preset {name} conflicts with raw link overrides (--{}); \
+                 use one or the other",
+                raw.join(", --")
+            );
+            Some(net_preset(name)?)
+        }
+        None => None,
+    };
     let cli = Cli {
         exp: args.positional.first().cloned().unwrap_or_else(|| "all".into()),
         outdir: PathBuf::from(args.get("outdir").unwrap_or("results")),
@@ -439,6 +607,13 @@ fn main() -> anyhow::Result<()> {
                 .collect::<anyhow::Result<Vec<f64>>>()?,
             None => vec![0.0, 0.3, 0.7],
         },
+        net,
+        latency: args.get_parse("latency")?,
+        bandwidth: args.get_parse("bandwidth")?,
+        topo_presets: match args.get("topo-presets") {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            None => vec!["us-eu".into(), "global-4".into()],
+        },
     };
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let kind = BackendKind::parse(args.get("backend").unwrap_or("auto"))?;
@@ -463,6 +638,7 @@ fn main() -> anyhow::Result<()> {
         "ablate-codec" => ablate_codec(&cli, backend.as_ref())?,
         "faults" => faults(&cli, backend.as_ref())?,
         "recovery" => recovery(&cli, backend.as_ref())?,
+        "topology" => topology(&cli, backend.as_ref())?,
         "all" => {
             fig1(&cli, backend.as_ref())?;
             wallclock(&cli, backend.as_ref())?;
@@ -471,6 +647,7 @@ fn main() -> anyhow::Result<()> {
             ablate_tau(&cli, backend.as_ref())?;
             faults(&cli, backend.as_ref())?;
             recovery(&cli, backend.as_ref())?;
+            topology(&cli, backend.as_ref())?;
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }

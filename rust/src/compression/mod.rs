@@ -138,6 +138,51 @@ mod tests {
     }
 
     #[test]
+    fn int4_odd_length_round_trip() {
+        // Odd-length fragments exercise the half-byte tail of the packed
+        // wire format: the size must ceil to a whole byte and every value
+        // must still obey the half-step bound.
+        for n in [1usize, 3, 7, 129] {
+            let mut x: Vec<f32> = (0..n).map(|i| (i as f32 - n as f32 / 2.0) * 0.13).collect();
+            let orig = x.clone();
+            let err = Codec::Int4.round_trip(&mut x);
+            let amax = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let step = amax / 7.0;
+            assert!(err <= step * 0.5 + 1e-7, "n={n}: err {err} > {}", step * 0.5);
+            for (a, b) in orig.iter().zip(&x) {
+                assert!((a - b).abs() <= step * 0.5 + 1e-7, "n={n}: {a} vs {b}");
+            }
+            assert_eq!(Codec::Int4.wire_bytes(n), (n as f64 / 2.0).ceil() + 4.0);
+        }
+    }
+
+    #[test]
+    fn int4_all_zero_fragment_is_exact() {
+        // amax == 0 short-circuits before the 1/scale division — no NaNs,
+        // and the odd length must not disturb the zero payload.
+        let mut x = vec![0.0f32; 33];
+        assert_eq!(Codec::Int4.round_trip(&mut x), 0.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn int4_single_value_fragment_is_exact() {
+        // A lone value is its own amax, so it lands exactly on the top
+        // quantization level and round-trips to within float rounding.
+        for v in [1.0f32, -0.25, 3.5e-3] {
+            let mut x = vec![v];
+            let err = Codec::Int4.round_trip(&mut x);
+            assert!(err <= v.abs() * 1e-6, "v={v}: err {err}");
+            assert!((x[0] - v).abs() <= v.abs() * 1e-6, "v={v} -> {}", x[0]);
+        }
+        // Constant fragments behave identically: every element is amax.
+        let mut x = vec![-0.75f32; 9];
+        let err = Codec::Int4.round_trip(&mut x);
+        assert!(err <= 0.75 * 1e-6);
+        assert!(x.iter().all(|&v| (v + 0.75).abs() <= 0.75 * 1e-6));
+    }
+
+    #[test]
     fn parse_names() {
         for c in [Codec::None, Codec::Int8, Codec::Int4] {
             assert_eq!(Codec::parse(c.name()).unwrap(), c);

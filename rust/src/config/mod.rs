@@ -81,6 +81,261 @@ impl Default for NetworkConfig {
     }
 }
 
+/// Physical parameters of one directed network link (intra-region LAN or
+/// one direction of an inter-region WAN path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// One-way latency, seconds.
+    pub latency_s: f64,
+    /// Bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Multiplicative jitter amplitude on each transfer (0 = deterministic).
+    pub jitter: f64,
+}
+
+/// Multi-region network topology (DESIGN.md §Topology): named regions with
+/// a worker→region placement, a per-region LAN link and an R×R directed
+/// inter-region link matrix. Each present inter-region link owns its own
+/// serialized transfer timeline in the simulator. An empty `regions` list
+/// means the legacy flat single-link WAN — the simulator then takes exactly
+/// the pre-topology code path, bit for bit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TopologyConfig {
+    /// Region names; empty = flat single shared WAN link.
+    pub regions: Vec<String>,
+    /// worker index → region index; empty = contiguous blocks
+    /// (`worker * R / workers`).
+    pub placement: Vec<usize>,
+    /// Per-region LAN link used for the intra-region all-reduce tier.
+    pub intra: Vec<LinkSpec>,
+    /// Directed R×R inter-region matrix; `None` on the diagonal and for
+    /// absent links. Asymmetric entries model asymmetric WAN paths.
+    pub links: Vec<Vec<Option<LinkSpec>>>,
+}
+
+impl TopologyConfig {
+    /// The legacy flat single-link WAN (no regions).
+    pub fn flat() -> Self {
+        TopologyConfig::default()
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Region hosting `worker` under this placement (flat topologies place
+    /// everyone in a notional region 0).
+    pub fn region_of(&self, worker: usize, workers: usize) -> usize {
+        if self.is_flat() {
+            0
+        } else if self.placement.is_empty() {
+            worker * self.regions.len() / workers.max(1)
+        } else {
+            self.placement[worker]
+        }
+    }
+
+    /// A canonical named topology. `us-eu`: two regions over one symmetric
+    /// transatlantic link. `global-4`: four regions (us/eu/ap/sa) on a full
+    /// mesh with asymmetric return bandwidth. LAN tiers are 1 ms / 12.5 GB/s.
+    pub fn preset(name: &str) -> anyhow::Result<TopologyConfig> {
+        let lan = LinkSpec { latency_s: 0.001, bandwidth_bps: 12.5e9, jitter: 0.0 };
+        let wan = |latency_s: f64, bandwidth_bps: f64| LinkSpec {
+            latency_s,
+            bandwidth_bps,
+            jitter: 0.0,
+        };
+        match name {
+            "flat" => Ok(TopologyConfig::flat()),
+            "us-eu" => {
+                let l = wan(0.045, 125e6);
+                Ok(TopologyConfig {
+                    regions: vec!["us".into(), "eu".into()],
+                    placement: Vec::new(),
+                    intra: vec![lan; 2],
+                    links: vec![vec![None, Some(l)], vec![Some(l), None]],
+                })
+            }
+            "global-4" => {
+                // (one-way latency s, forward bandwidth B/s) per unordered
+                // pair; the reverse direction runs at 0.9× bandwidth.
+                let pairs = [
+                    (0usize, 1usize, 0.045, 125e6),  // us ↔ eu
+                    (0, 2, 0.090, 75e6),             // us ↔ ap
+                    (0, 3, 0.075, 80e6),             // us ↔ sa
+                    (1, 2, 0.120, 60e6),             // eu ↔ ap
+                    (1, 3, 0.100, 70e6),             // eu ↔ sa
+                    (2, 3, 0.150, 50e6),             // ap ↔ sa
+                ];
+                let mut links = vec![vec![None; 4]; 4];
+                for &(a, b, lat, bw) in &pairs {
+                    links[a][b] = Some(wan(lat, bw));
+                    links[b][a] = Some(wan(lat, 0.9 * bw));
+                }
+                Ok(TopologyConfig {
+                    regions: vec!["us".into(), "eu".into(), "ap".into(), "sa".into()],
+                    placement: Vec::new(),
+                    intra: vec![lan; 4],
+                    links,
+                })
+            }
+            _ => anyhow::bail!("unknown topology preset '{name}' (flat|us-eu|global-4)"),
+        }
+    }
+
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        if self.is_flat() {
+            anyhow::ensure!(
+                self.placement.is_empty() && self.intra.is_empty() && self.links.is_empty(),
+                "flat topology (no regions) must have empty placement/intra/links"
+            );
+            return Ok(());
+        }
+        let r = self.regions.len();
+        anyhow::ensure!(self.intra.len() == r, "need one intra-region link per region");
+        anyhow::ensure!(
+            self.links.len() == r && self.links.iter().all(|row| row.len() == r),
+            "inter-region link matrix must be {r}x{r}"
+        );
+        anyhow::ensure!(
+            self.placement.is_empty() || self.placement.len() == workers,
+            "placement must be empty or name a region per worker"
+        );
+        for &p in &self.placement {
+            anyhow::ensure!(p < r, "placement region {p} out of range (R={r})");
+        }
+        anyhow::ensure!(
+            workers >= r || !self.placement.is_empty(),
+            "contiguous placement needs at least one worker per region"
+        );
+        let mut members = vec![0usize; r];
+        for w in 0..workers {
+            members[self.region_of(w, workers)] += 1;
+        }
+        anyhow::ensure!(
+            members.iter().all(|&m| m > 0),
+            "every region must host at least one worker"
+        );
+        for (i, row) in self.links.iter().enumerate() {
+            anyhow::ensure!(row[i].is_none(), "region {i} must not link to itself");
+            for l in row.iter().flatten() {
+                anyhow::ensure!(
+                    l.latency_s >= 0.0 && l.bandwidth_bps > 0.0 && l.jitter >= 0.0,
+                    "inter-region links need latency >= 0, bandwidth > 0, jitter >= 0"
+                );
+            }
+        }
+        for l in &self.intra {
+            anyhow::ensure!(
+                l.latency_s >= 0.0 && l.bandwidth_bps > 0.0 && l.jitter >= 0.0,
+                "intra-region links need latency >= 0, bandwidth > 0, jitter >= 0"
+            );
+        }
+        if r >= 2 {
+            for i in 0..r {
+                anyhow::ensure!(
+                    self.links[i][(i + 1) % r].is_some(),
+                    "the canonical region ring {i}->{} must exist (relay fallback \
+                     routes over it when a direct link is missing)",
+                    (i + 1) % r
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn link_json(l: &LinkSpec) -> Json {
+        obj(vec![
+            ("latency_s", num(l.latency_s)),
+            ("bandwidth_bps", num(l.bandwidth_bps)),
+            ("jitter", num(l.jitter)),
+        ])
+    }
+
+    fn link_from_json(j: &Json) -> anyhow::Result<LinkSpec> {
+        Ok(LinkSpec {
+            latency_s: j.field("latency_s")?.as_f64()?,
+            bandwidth_bps: j.field("bandwidth_bps")?.as_f64()?,
+            jitter: j.field("jitter")?.as_f64()?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        // The link matrix serializes sparsely as {from,to,link} entries so
+        // absent links need no null encoding.
+        let mut sparse = Vec::new();
+        for (i, row) in self.links.iter().enumerate() {
+            for (k, l) in row.iter().enumerate() {
+                if let Some(l) = l {
+                    sparse.push(obj(vec![
+                        ("from", num(i as f64)),
+                        ("to", num(k as f64)),
+                        ("link", Self::link_json(l)),
+                    ]));
+                }
+            }
+        }
+        obj(vec![
+            ("regions", Json::Arr(self.regions.iter().map(|r| s(r)).collect())),
+            (
+                "placement",
+                Json::Arr(self.placement.iter().map(|&p| num(p as f64)).collect()),
+            ),
+            ("intra", Json::Arr(self.intra.iter().map(Self::link_json).collect())),
+            ("links", Json::Arr(sparse)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TopologyConfig> {
+        let mut t = TopologyConfig::default();
+        for r in j.field("regions")?.as_arr()? {
+            t.regions.push(r.as_str()?.to_string());
+        }
+        for p in j.field("placement")?.as_arr()? {
+            t.placement.push(p.as_usize()?);
+        }
+        for l in j.field("intra")?.as_arr()? {
+            t.intra.push(Self::link_from_json(l)?);
+        }
+        let r = t.regions.len();
+        t.links = vec![vec![None; r]; r];
+        for e in j.field("links")?.as_arr()? {
+            let from = e.field("from")?.as_usize()?;
+            let to = e.field("to")?.as_usize()?;
+            anyhow::ensure!(from < r && to < r, "link endpoint out of range (R={r})");
+            t.links[from][to] = Some(Self::link_from_json(e.field("link")?)?);
+        }
+        Ok(t)
+    }
+}
+
+/// Expand a `--net-preset` name into the matching flat-equivalent
+/// `NetworkConfig` (used verbatim by flat runs, and as the matched-WAN-budget
+/// baseline in `experiments topology`) plus the region graph. The flat link
+/// carries the mean latency/bandwidth of the preset's WAN mesh.
+pub fn net_preset(name: &str) -> anyhow::Result<(NetworkConfig, TopologyConfig)> {
+    let topo = TopologyConfig::preset(name)?;
+    let mut net = NetworkConfig::default();
+    match name {
+        "flat" => {}
+        "us-eu" => {
+            net.latency_s = 0.045;
+            net.bandwidth_bps = 125e6;
+        }
+        "global-4" => {
+            // Mean over the 12 directed mesh links.
+            net.latency_s = 0.097;
+            net.bandwidth_bps = 73e6;
+        }
+        _ => anyhow::bail!("unknown network preset '{name}' (flat|us-eu|global-4)"),
+    }
+    Ok((net, topo))
+}
+
 /// A closed-open window [start_s, start_s + duration_s) on the virtual
 /// clock during which a fault condition holds.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -125,6 +380,16 @@ pub struct Corruption {
     pub window: FaultWindow,
     /// Per-delivery corruption probability in (0, 1].
     pub prob: f64,
+}
+
+/// Topology-aware outage: every WAN link touching `region` is severed for
+/// `window` (transfers routed over them queue behind the window end), while
+/// the region's LAN and all other inter-region links keep working. Requires
+/// a non-flat `TopologyConfig`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegionalOutage {
+    pub region: usize,
+    pub window: FaultWindow,
 }
 
 /// Retry/backoff policy for dropped transfers (tentpole: lost transfers
@@ -173,6 +438,8 @@ pub struct FaultConfig {
     pub crashes: Vec<CrashWindow>,
     /// Payload bit-flip windows (in-flight fragment corruption).
     pub corruptions: Vec<Corruption>,
+    /// Per-region WAN severances (topology-aware; need a region graph).
+    pub regional_outages: Vec<RegionalOutage>,
     pub retry: RetryPolicy,
 }
 
@@ -186,6 +453,7 @@ impl FaultConfig {
             || self.stragglers.iter().any(|&s| s > 1.0)
             || !self.crashes.is_empty()
             || !self.corruptions.is_empty()
+            || !self.regional_outages.is_empty()
     }
 
     /// Canonical severity-parameterized scenario used by `experiments
@@ -220,6 +488,7 @@ impl FaultConfig {
                 },
                 prob: 0.5 * sev,
             }],
+            regional_outages: Vec::new(),
             retry: RetryPolicy::default(),
         };
         if workers > 1 {
@@ -271,6 +540,12 @@ impl FaultConfig {
             anyhow::ensure!(
                 c.window.start_s >= 0.0 && c.window.duration_s >= 0.0,
                 "corruption windows need start/duration >= 0"
+            );
+        }
+        for o in &self.regional_outages {
+            anyhow::ensure!(
+                o.window.start_s >= 0.0 && o.window.duration_s >= 0.0,
+                "regional outage windows need start/duration >= 0"
             );
         }
         anyhow::ensure!(self.retry.max_attempts >= 1, "retry.max_attempts >= 1");
@@ -345,6 +620,20 @@ impl FaultConfig {
                 ),
             ),
             (
+                "regional_outages",
+                Json::Arr(
+                    self.regional_outages
+                        .iter()
+                        .map(|o| {
+                            obj(vec![
+                                ("region", num(o.region as f64)),
+                                ("window", Self::window_json(&o.window)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "retry",
                 obj(vec![
                     ("max_attempts", num(self.retry.max_attempts as f64)),
@@ -384,6 +673,16 @@ impl FaultConfig {
                 f.corruptions.push(Corruption {
                     window: Self::window_from_json(c.field("window")?)?,
                     prob: c.field("prob")?.as_f64()?,
+                });
+            }
+        }
+        // Optional key: plans written before topology-aware faults existed
+        // still parse.
+        if let Some(os) = j.get("regional_outages") {
+            for o in os.as_arr()? {
+                f.regional_outages.push(RegionalOutage {
+                    region: o.field("region")?.as_usize()?,
+                    window: Self::window_from_json(o.field("window")?)?,
                 });
             }
         }
@@ -532,6 +831,9 @@ pub struct RunConfig {
     /// Base seed for data/jitter (init seed is baked into artifacts).
     pub seed: u64,
     pub network: NetworkConfig,
+    /// Region graph for hierarchical two-level sync; flat (default) keeps
+    /// the legacy single shared WAN link, bit for bit.
+    pub topology: TopologyConfig,
     pub data: DataConfig,
     /// Run worker train steps on parallel threads.
     pub parallel_workers: bool,
@@ -567,6 +869,7 @@ impl Default for RunConfig {
             eval_batches: 8,
             seed: 17,
             network: NetworkConfig::default(),
+            topology: TopologyConfig::default(),
             data: DataConfig::default(),
             parallel_workers: true,
             use_hlo_fragment_ops: false,
@@ -601,7 +904,20 @@ impl RunConfig {
         anyhow::ensure!(self.network.step_compute_s > 0.0, "step compute > 0");
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
         anyhow::ensure!(self.eval_batches >= 1, "eval_batches >= 1");
+        self.topology.validate(self.workers)?;
         self.faults.validate(self.workers)?;
+        for o in &self.faults.regional_outages {
+            anyhow::ensure!(
+                !self.topology.is_flat(),
+                "regional outages need a multi-region topology (flat has no regions)"
+            );
+            anyhow::ensure!(
+                o.region < self.topology.n_regions(),
+                "regional outage region {} out of range (R={})",
+                o.region,
+                self.topology.n_regions()
+            );
+        }
         self.recovery.validate()?;
         Ok(())
     }
@@ -645,6 +961,7 @@ impl RunConfig {
                     ("heterogeneity", num(self.data.heterogeneity)),
                 ]),
             ),
+            ("topology", self.topology.to_json()),
             ("compression", s(self.compression.name())),
             ("faults", self.faults.to_json()),
             ("recovery", self.recovery.to_json()),
@@ -691,6 +1008,10 @@ impl RunConfig {
             zipf_exponent: d.field("zipf_exponent")?.as_f64()?,
             heterogeneity: d.field("heterogeneity")?.as_f64()?,
         };
+        // Optional key: pre-topology config files still parse as flat.
+        if let Some(t) = j.get("topology") {
+            cfg.topology = TopologyConfig::from_json(t)?;
+        }
         if let Some(c) = j.get("compression") {
             cfg.compression = Codec::parse(c.as_str()?)?;
         }
@@ -862,5 +1183,90 @@ mod tests {
         assert_eq!(MethodKind::parse("streaming").unwrap(),
                    MethodKind::StreamingDiloco);
         assert!(MethodKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn topology_presets_validate_and_round_trip() {
+        for name in ["flat", "us-eu", "global-4"] {
+            let t = TopologyConfig::preset(name).unwrap();
+            t.validate(8).unwrap();
+            let mut c = RunConfig::paper("exp", MethodKind::Cocodc);
+            c.workers = 8;
+            c.topology = t;
+            c.validate().unwrap();
+            let back = RunConfig::from_json(&Json::parse(&c.to_json_string()).unwrap()).unwrap();
+            assert_eq!(back, c);
+        }
+        assert!(TopologyConfig::preset("mars").is_err());
+        // Pre-topology config files (no "topology" key) parse as flat.
+        let j = RunConfig::default()
+            .to_json_string()
+            .replace("\"topology\"", "\"topology_ignored\"");
+        let parsed = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(parsed.topology.is_flat());
+    }
+
+    #[test]
+    fn net_preset_flat_matches_default_network() {
+        let (net, topo) = net_preset("flat").unwrap();
+        assert_eq!(net, NetworkConfig::default());
+        assert!(topo.is_flat());
+        let (net, topo) = net_preset("global-4").unwrap();
+        assert_eq!(topo.n_regions(), 4);
+        assert!(net.latency_s > NetworkConfig::default().latency_s);
+        assert!(net_preset("bogus").is_err());
+    }
+
+    #[test]
+    fn topology_validation_rejects_bad_graphs() {
+        // More regions than workers under contiguous placement.
+        let t = TopologyConfig::preset("global-4").unwrap();
+        assert!(t.validate(2).is_err());
+        // Placement pointing at a missing region.
+        let mut t = TopologyConfig::preset("us-eu").unwrap();
+        t.placement = vec![0, 0, 5, 1];
+        assert!(t.validate(4).is_err());
+        // A region with no workers.
+        let mut t = TopologyConfig::preset("us-eu").unwrap();
+        t.placement = vec![0, 0, 0, 0];
+        assert!(t.validate(4).is_err());
+        // Severed canonical ring.
+        let mut t = TopologyConfig::preset("global-4").unwrap();
+        t.links[1][2] = None;
+        assert!(t.validate(8).is_err());
+        // Flat topology with leftover per-region fields.
+        let mut t = TopologyConfig::flat();
+        t.intra = vec![LinkSpec { latency_s: 0.0, bandwidth_bps: 1.0, jitter: 0.0 }];
+        assert!(t.validate(4).is_err());
+    }
+
+    #[test]
+    fn contiguous_placement_assigns_blocks() {
+        let t = TopologyConfig::preset("global-4").unwrap();
+        let regions: Vec<usize> = (0..8).map(|w| t.region_of(w, 8)).collect();
+        assert_eq!(regions, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        let t = TopologyConfig::preset("us-eu").unwrap();
+        let regions: Vec<usize> = (0..3).map(|w| t.region_of(w, 3)).collect();
+        assert_eq!(regions, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn regional_outages_require_topology_and_round_trip() {
+        let mut c = RunConfig::paper("exp", MethodKind::Cocodc);
+        c.faults.regional_outages.push(RegionalOutage {
+            region: 1,
+            window: FaultWindow { start_s: 10.0, duration_s: 30.0 },
+        });
+        assert!(c.faults.is_active());
+        // Flat topology → rejected.
+        assert!(c.validate().is_err());
+        c.workers = 8;
+        c.topology = TopologyConfig::preset("us-eu").unwrap();
+        c.validate().unwrap();
+        let back = RunConfig::from_json(&Json::parse(&c.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // Region index out of range.
+        c.faults.regional_outages[0].region = 7;
+        assert!(c.validate().is_err());
     }
 }

@@ -28,6 +28,15 @@
 //! staleness `step − t_init`, so a later apply is corrected, not stale.
 //! On a healthy link arrival ≤ τ and the schedule is unchanged; under an
 //! outage this converts Streaming's stall seconds into compensated lag.
+//!
+//! With a multi-region topology attached (DESIGN.md §Topology), adaptive
+//! transmission extends per link: CoCoDC keeps an EWMA seconds-per-byte
+//! estimate for every WAN link (folded from the simulator's per-link
+//! observations) and, before each initiation or retransmission, builds the
+//! inter-region cycle greedily — each hop extends to the unvisited region
+//! whose link has the lowest queue-wait + latency + estimated transfer
+//! cost, skipping links severed by a regional outage. When no full cycle
+//! of direct live links exists it falls back to the canonical region ring.
 
 use crate::checkpoint::{checksum_f32, pack_f64s, pack_u64s, unpack_f64s, unpack_u64s, Checkpoint};
 use crate::config::{RunConfig, TauMode};
@@ -77,6 +86,16 @@ pub struct Cocodc {
     /// normalized to the mean fragment's wire bytes. None until the first
     /// observation (falls back to the static ring-time model).
     ts_ewma: Option<f64>,
+    /// Per-WAN-link EWMA of observed seconds-per-byte beyond the nominal
+    /// latency (topology mode; empty on flat runs). Seeded from the nominal
+    /// bandwidth at first use, then folded from per-link observations.
+    link_est: Vec<f64>,
+    /// Observations folded into each link's estimate (0 = still nominal).
+    link_obs_count: Vec<u64>,
+    /// Scratch: the adaptive route (cycle of link ids) under construction.
+    route_buf: Vec<usize>,
+    /// Scratch: participating regions for the current route.
+    parts_buf: Vec<usize>,
 }
 
 impl Cocodc {
@@ -89,6 +108,10 @@ impl Cocodc {
             last_initiated: vec![0; k],
             next_init: 1,
             ts_ewma: None,
+            link_est: Vec::new(),
+            link_obs_count: Vec::new(),
+            route_buf: Vec::new(),
+            parts_buf: Vec::new(),
         }
     }
 
@@ -114,6 +137,115 @@ impl Cocodc {
             Some(prev) => TS_BETA * obs + (1.0 - TS_BETA) * prev,
             None => obs,
         });
+    }
+
+    /// Lazily size the per-link estimator to the attached topology, seeding
+    /// every link at its nominal 1/bandwidth (so the scheduler is sensible
+    /// before the first observation). No-op on flat runs.
+    fn ensure_link_state(&mut self, ctx: &SyncCtx) {
+        let Some(topo) = ctx.net.topology() else {
+            return;
+        };
+        if self.link_est.len() == topo.n_links() {
+            return;
+        }
+        self.link_est = (0..topo.n_links())
+            .map(|l| 1.0 / topo.link_spec(l).bandwidth_bps)
+            .collect();
+        self.link_obs_count = vec![0; topo.n_links()];
+    }
+
+    /// Fold the simulator's per-link observations from the most recent
+    /// hierarchical schedule into the EWMA seconds-per-byte estimates. The
+    /// first observation on a link replaces the nominal seed outright;
+    /// later ones blend with [`TS_BETA`].
+    fn fold_link_obs(&mut self, ctx: &SyncCtx) {
+        if ctx.net.link_observations().is_empty() {
+            return;
+        }
+        self.ensure_link_state(ctx);
+        let Some(topo) = ctx.net.topology() else {
+            return;
+        };
+        for obs in ctx.net.link_observations() {
+            let lat = topo.link_spec(obs.link).latency_s;
+            let per_byte = (obs.hop_s - lat).max(0.0) / obs.chunk_bytes.max(1.0);
+            if !per_byte.is_finite() {
+                continue;
+            }
+            self.link_est[obs.link] = if self.link_obs_count[obs.link] == 0 {
+                per_byte
+            } else {
+                TS_BETA * per_byte + (1.0 - TS_BETA) * self.link_est[obs.link]
+            };
+            self.link_obs_count[obs.link] += 1;
+        }
+    }
+
+    /// Adaptive per-link scheduling: build the inter-region cycle for a
+    /// transfer of `wire_bytes`, greedily extending from the current region
+    /// to the unvisited one whose connecting link is cheapest under
+    /// queue-wait + nominal latency + chunk × EWMA-seconds-per-byte —
+    /// i.e. each fragment is steered onto the least-loaded feasible links.
+    /// Links severed by a regional outage are infeasible. Returns true with
+    /// the cycle in `route_buf`; false (fall back to the canonical ring)
+    /// when no topology is attached, fewer than two regions participate, or
+    /// no full cycle of direct live links exists.
+    fn build_route(&mut self, wire_bytes: f64, ctx: &SyncCtx) -> bool {
+        if ctx.net.topology().is_none() {
+            return false;
+        }
+        self.ensure_link_state(ctx);
+        let topo = ctx.net.topology().expect("checked above");
+        topo.participating_into(ctx.live, &mut self.parts_buf);
+        let k = self.parts_buf.len();
+        if k < 2 {
+            return false;
+        }
+        let now = ctx.clock.now();
+        let chunk = wire_bytes / k as f64;
+        self.route_buf.clear();
+        // Small per-call allocation is fine here: this path only runs in
+        // topology mode, outside the flat hot-path allocation contract.
+        let mut visited = vec![false; k];
+        visited[0] = true;
+        let mut cur = 0usize;
+        for _ in 1..k {
+            let mut best: Option<(usize, usize, f64)> = None;
+            for (j, seen) in visited.iter().enumerate() {
+                if *seen {
+                    continue;
+                }
+                let Some(l) = topo.link_between(self.parts_buf[cur], self.parts_buf[j]) else {
+                    continue;
+                };
+                if topo.severed(l, ctx.net.faults(), now) {
+                    continue;
+                }
+                let spec = topo.link_spec(l);
+                let wait = (topo.link_busy(l) - now).max(0.0);
+                let cost = wait + spec.latency_s + chunk * self.link_est[l];
+                // Strict `<` keeps the lowest-index candidate on ties, so
+                // every worker derives the same route deterministically.
+                if best.map_or(true, |(_, _, c)| cost < c) {
+                    best = Some((j, l, cost));
+                }
+            }
+            let Some((j, l, _)) = best else {
+                return false;
+            };
+            self.route_buf.push(l);
+            visited[j] = true;
+            cur = j;
+        }
+        let Some(l) = topo.link_between(self.parts_buf[cur], self.parts_buf[0]) else {
+            return false;
+        };
+        if topo.severed(l, ctx.net.faults(), now) {
+            return false;
+        }
+        self.route_buf.push(l);
+        true
     }
 
     /// T_s observation for a pending whose transfer just resolved:
@@ -287,7 +419,17 @@ impl SyncStrategy for Cocodc {
         // the schedule should back off on).
         for i in 0..self.pending.len() {
             let requested_at = ctx.clock.now();
-            if let Some(delivered) = StreamingDiloco::retransmit(&mut self.pending[i], step, ctx) {
+            // Mirror retransmit's own guard so adaptive routes are only
+            // built for pendings that actually retransmit now.
+            if self.pending[i].delivered || self.pending[i].finish_time > requested_at {
+                continue;
+            }
+            let routed = self.build_route(self.pending[i].wire_bytes, ctx);
+            let route = if routed { Some(self.route_buf.as_slice()) } else { None };
+            if let Some(delivered) =
+                StreamingDiloco::retransmit(&mut self.pending[i], step, route, ctx)
+            {
+                self.fold_link_obs(ctx);
                 Self::defer_apply_to_arrival(&mut self.pending[i], step, requested_at, ctx);
                 let obs = Self::ts_observation(&self.pending[i], requested_at, delivered, ctx);
                 self.observe_ts(obs);
@@ -312,7 +454,11 @@ impl SyncStrategy for Cocodc {
                 ctx.stats.staleness_guard_hits += 1;
             }
             let requested_at = ctx.clock.now();
-            let mut pend = StreamingDiloco::initiate(p, step, true, ctx)?;
+            let wire = ctx.cfg.compression.wire_bytes(ctx.frags.get(p).size);
+            let routed = self.build_route(wire, ctx);
+            let route = if routed { Some(self.route_buf.as_slice()) } else { None };
+            let mut pend = StreamingDiloco::initiate(p, step, true, route, ctx)?;
+            self.fold_link_obs(ctx);
             Self::defer_apply_to_arrival(&mut pend, step, requested_at, ctx);
             let obs = Self::ts_observation(&pend, requested_at, pend.delivered, ctx);
             self.observe_ts(obs);
@@ -346,6 +492,16 @@ impl SyncStrategy for Cocodc {
         );
         pack_f64s(&mut sched, &[self.ts_ewma.unwrap_or(0.0)]);
         ck.insert("strategy/sched", sched);
+        // Per-link EWMA estimates exist only in topology mode; the section
+        // is omitted on flat runs so their checkpoint bytes are unchanged.
+        if !self.link_est.is_empty() {
+            let n = self.link_est.len();
+            let mut links = Vec::with_capacity(2 + 4 * n);
+            pack_u64s(&mut links, &[n as u64]);
+            pack_f64s(&mut links, &self.link_est);
+            pack_u64s(&mut links, &self.link_obs_count);
+            ck.insert("strategy/links", links);
+        }
     }
 
     fn load_state(&mut self, ck: &Checkpoint, pool: &mut BufferPool) -> anyhow::Result<()> {
@@ -369,6 +525,13 @@ impl SyncStrategy for Cocodc {
             self.next_init = tail[0] as u32;
             let ewma = unpack_f64s(&s[6 * k + 4..6 * k + 6])[0];
             self.ts_ewma = if tail[1] != 0 { Some(ewma) } else { None };
+        }
+        if let Some(s) = ck.get("strategy/links") {
+            anyhow::ensure!(s.len() >= 2, "strategy/links malformed");
+            let n = unpack_u64s(&s[0..2])[0] as usize;
+            anyhow::ensure!(s.len() == 2 + 4 * n, "strategy/links malformed");
+            self.link_est = unpack_f64s(&s[2..2 + 2 * n]);
+            self.link_obs_count = unpack_u64s(&s[2 + 2 * n..]);
         }
         Ok(())
     }
@@ -469,6 +632,27 @@ mod tests {
             c.select_fragment(2, 100),
             Some((2, SelectReason::MaxRate))
         ));
+    }
+
+    #[test]
+    fn link_estimates_round_trip_through_checkpoint() {
+        let cfg = RunConfig::default();
+        let mut c = Cocodc::new(&cfg, &frags());
+        c.link_est = vec![1e-8, 2e-8, 3e-8];
+        c.link_obs_count = vec![4, 0, 6];
+        let mut ck = Checkpoint::new(0);
+        c.save_state(&mut ck);
+        assert!(ck.get("strategy/links").is_some());
+        let mut d = Cocodc::new(&cfg, &frags());
+        let mut pool = BufferPool::new();
+        d.load_state(&ck, &mut pool).unwrap();
+        assert_eq!(d.link_est, c.link_est);
+        assert_eq!(d.link_obs_count, c.link_obs_count);
+        // Flat runs never grow link state and never write the section.
+        let flat = Cocodc::new(&cfg, &frags());
+        let mut ck2 = Checkpoint::new(0);
+        flat.save_state(&mut ck2);
+        assert!(ck2.get("strategy/links").is_none());
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! against). The strategy never gives up — a timed-out budget just starts a
 //! fresh one from the later virtual time, since there is no pending queue
 //! to park the round in.
+//!
+//! With a multi-region topology attached the blocking round is still one
+//! `schedule_with_retries` call — the WAN simulator's dispatch routes it
+//! through the hierarchical two-level model (intra all-reduce, leader ring
+//! over the canonical region cycle, intra broadcast), so DiLoCo benefits
+//! from regional aggregation without any strategy-side changes.
 
 use crate::checkpoint::{pack_u64s, unpack_u64s, Checkpoint};
 use crate::util::pool::BufferPool;

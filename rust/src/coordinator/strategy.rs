@@ -6,6 +6,7 @@ use crate::config::{MethodKind, RunConfig};
 use crate::coordinator::fragments::FragmentTable;
 use crate::coordinator::{cocodc::Cocodc, diloco::Diloco, streaming::StreamingDiloco};
 use crate::metrics::Dist;
+use crate::network::topology::LinkUtil;
 use crate::network::WanSimulator;
 use crate::runtime::{Backend, WorkerHandle};
 use crate::simclock::VirtualClock;
@@ -67,6 +68,9 @@ pub struct SyncStats {
     pub tau_dist: Dist,
     /// Distribution of transfer queue delays (seconds) over delivered syncs.
     pub queue_delay_dist: Dist,
+    /// Per-WAN-link utilization (bytes moved, busy seconds, transfers),
+    /// filled from the topology layer at end of run; empty on flat runs.
+    pub link_util: Vec<LinkUtil>,
 }
 
 impl SyncStats {

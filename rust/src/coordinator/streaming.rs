@@ -258,10 +258,15 @@ impl StreamingDiloco {
     /// The transfer runs through the WAN's retry/backoff path; on budget
     /// exhaustion the returned entry is undelivered (requeued) and will be
     /// retransmitted by [`StreamingDiloco::retransmit`].
+    ///
+    /// `route` pins the topology-mode inter-region phase to an explicit
+    /// cycle of link ids (CoCoDC's adaptive per-link scheduler builds one);
+    /// `None` uses the canonical region ring and is a no-op on flat runs.
     pub(crate) fn initiate(
         p: usize,
         t: u32,
         keep_snapshots: bool,
+        route: Option<&[usize]>,
         ctx: &mut SyncCtx,
     ) -> anyhow::Result<Pending> {
         let frag = ctx.frags.get(p);
@@ -306,7 +311,7 @@ impl StreamingDiloco {
         let checksum = checksum_f32(&delta_avg);
         let wire = ctx.cfg.compression.wire_bytes(frag.size);
         let now = ctx.clock.now();
-        let sched = ctx.net.schedule_with_retries(now, wire);
+        let sched = ctx.net.schedule_with_retries_routed(now, wire, route);
         ctx.stats.syncs_initiated += 1;
         ctx.stats.retries += sched.retries() as usize;
         ctx.stats.drops += sched.drops as usize;
@@ -371,13 +376,14 @@ impl StreamingDiloco {
     pub(crate) fn retransmit(
         pend: &mut Pending,
         step: u32,
+        route: Option<&[usize]>,
         ctx: &mut SyncCtx,
     ) -> Option<bool> {
         if pend.delivered || pend.finish_time > ctx.clock.now() {
             return None;
         }
         let now = ctx.clock.now();
-        let sched = ctx.net.schedule_with_retries(now, pend.wire_bytes);
+        let sched = ctx.net.schedule_with_retries_routed(now, pend.wire_bytes, route);
         // Every attempt here retransmits the original logical transfer.
         ctx.stats.retries += sched.attempts as usize;
         ctx.stats.drops += sched.drops as usize;
@@ -473,7 +479,7 @@ impl SyncStrategy for StreamingDiloco {
         // Requeued fragments first: retransmission precedes new initiations
         // so a stale fragment cannot starve behind fresh traffic.
         for pend in self.pending.iter_mut() {
-            let _ = Self::retransmit(pend, step, ctx);
+            let _ = Self::retransmit(pend, step, None, ctx);
         }
         self.complete_due(step, ctx)?;
         if step == 0 {
@@ -484,7 +490,7 @@ impl SyncStrategy for StreamingDiloco {
             if step % h == self.offsets[p]
                 && !self.pending.iter().any(|q| q.frag == p)
             {
-                let pend = Self::initiate(p, step, false, ctx)?;
+                let pend = Self::initiate(p, step, false, None, ctx)?;
                 self.pending.push(pend);
             }
         }

@@ -39,6 +39,13 @@ train/compare flags:
   --tau-network       derive tau from the WAN simulator
   --alpha X --lambda X --gamma X --seed N --eval-every N
   --codec C           pseudo-gradient wire codec: none|int8|int4
+  --net-preset P      WAN shape: flat|us-eu|global-4 — expands to a matched
+                      flat NetworkConfig + multi-region TopologyConfig
+                      (hierarchical two-level sync over per-link timelines);
+                      conflicts with the raw link overrides below
+  --latency S         flat WAN link one-way latency, seconds
+  --bandwidth BPS     flat WAN link bandwidth, bytes/second
+  --jitter X          multiplicative jitter fraction on the flat link
   --fault-severity X  scripted WAN fault scenario of severity X in (0,1]:
                       link outage + bandwidth degradation + transfer loss
                       + straggler + worker crash/recover, scaled by X
@@ -111,6 +118,36 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(c) = args.get("codec") {
         cfg.compression = cocodc::compression::Codec::parse(c)?;
+    }
+    // WAN shape: a named preset expands to its matched network + topology
+    // pair; raw flags tune the flat link directly. Mixing the two would
+    // silently skew the preset's matched WAN budget, so it is an error.
+    if let Some(name) = args.get("net-preset") {
+        let raw: Vec<&str> = ["latency", "bandwidth", "jitter"]
+            .iter()
+            .copied()
+            .filter(|f| args.get(f).is_some())
+            .collect();
+        anyhow::ensure!(
+            raw.is_empty(),
+            "--net-preset {name} conflicts with raw link overrides (--{}); use one or the other",
+            raw.join(", --")
+        );
+        let (net, topo) = cocodc::config::net_preset(name)?;
+        let step = cfg.network.step_compute_s;
+        cfg.network = net;
+        cfg.network.step_compute_s = step;
+        cfg.topology = topo;
+    } else {
+        if let Some(v) = args.get_parse::<f64>("latency")? {
+            cfg.network.latency_s = v;
+        }
+        if let Some(v) = args.get_parse::<f64>("bandwidth")? {
+            cfg.network.bandwidth_bps = v;
+        }
+        if let Some(v) = args.get_parse::<f64>("jitter")? {
+            cfg.network.jitter = v;
+        }
     }
     if let Some(sev) = args.get_parse::<f64>("fault-severity")? {
         // Scenario windows are placed relative to the compute-only horizon;
@@ -206,6 +243,18 @@ fn summarize(o: &cocodc::TrainOutcome) {
             o.quarantined,
             o.nonfinite_losses,
         );
+    }
+    if !o.link_util.is_empty() {
+        println!("[{}] WAN link utilization ({} links):", o.method, o.link_util.len());
+        for l in &o.link_util {
+            println!(
+                "  {:>16} {:>9.1}MB busy={:>8.1}s transfers={}",
+                l.name,
+                l.bytes / 1e6,
+                l.busy_s,
+                l.transfers
+            );
+        }
     }
 }
 

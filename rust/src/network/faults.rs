@@ -63,6 +63,28 @@ impl FaultPlan {
         }
     }
 
+    /// If region `r`'s WAN links are severed at `t`, the end of the latest
+    /// regional-outage window covering it (chained windows chase like
+    /// [`FaultPlan::outage_end`]). Only meaningful with a region topology;
+    /// flat plans have no regional outages (config validation enforces it).
+    pub fn regional_outage_end(&self, region: usize, t: f64) -> Option<f64> {
+        let mut cursor = t;
+        let mut end = None;
+        loop {
+            let mut advanced = false;
+            for o in &self.cfg.regional_outages {
+                if o.region == region && o.window.contains(cursor) && o.window.end_s() > cursor {
+                    cursor = o.window.end_s();
+                    end = Some(cursor);
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                return end;
+            }
+        }
+    }
+
     /// Effective-bandwidth multiplier at time `t` (stacked degradation
     /// windows multiply).
     pub fn bandwidth_factor(&self, t: f64) -> f64 {
@@ -176,6 +198,26 @@ mod tests {
         assert_eq!(p.outage_end(11.0), Some(24.0)); // 10→15 chains into 14→24
         assert_eq!(p.outage_end(20.0), Some(24.0));
         assert_eq!(p.outage_end(24.0), None);
+    }
+
+    #[test]
+    fn regional_outage_end_is_per_region_and_chases_chains() {
+        use crate::config::RegionalOutage;
+        let cfg = FaultConfig {
+            regional_outages: vec![
+                RegionalOutage { region: 1, window: window(10.0, 5.0) },
+                RegionalOutage { region: 1, window: window(14.0, 10.0) },
+                RegionalOutage { region: 2, window: window(0.0, 3.0) },
+            ],
+            ..Default::default()
+        };
+        let p = FaultPlan::new(cfg, 1);
+        assert_eq!(p.regional_outage_end(1, 5.0), None);
+        assert_eq!(p.regional_outage_end(1, 11.0), Some(24.0));
+        assert_eq!(p.regional_outage_end(2, 11.0), None);
+        assert_eq!(p.regional_outage_end(2, 1.0), Some(3.0));
+        assert_eq!(p.regional_outage_end(0, 11.0), None);
+        assert!(p.is_active());
     }
 
     #[test]

@@ -1,13 +1,20 @@
 //! WAN simulator: ring all-reduce cost model + a serialized inter-DC link
 //! timeline (transfers queue behind each other, matching the paper's
 //! streaming schedule where one fragment is in flight at a time).
+//!
+//! With a multi-region [`TopologyConfig`] attached the simulator dispatches
+//! to the hierarchical two-level model in [`topology`] — per-link serialized
+//! WAN timelines behind an intra-region LAN tier — while flat runs take
+//! exactly the legacy single-link path, bit for bit.
 
 pub mod faults;
 pub mod ring;
+pub mod topology;
 
-use crate::config::{FaultConfig, NetworkConfig};
+use crate::config::{FaultConfig, NetworkConfig, TopologyConfig};
 use crate::util::{saturating_f64_to_u32, Rng};
 use faults::FaultPlan;
+use topology::{LinkObs, LinkUtil, TopoNet, TopoState};
 
 /// A scheduled collective transfer on the simulated WAN.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -86,6 +93,11 @@ pub struct WanSimulator {
     busy_until: f64,
     rng: Rng,
     faults: FaultPlan,
+    /// Region graph + per-link timelines; `None` = legacy flat single link.
+    topo: Option<TopoNet>,
+    /// Worker liveness mirrored from the trainer (leaders fail over, dead
+    /// regions drop out of the WAN ring). All-true when faults are off.
+    live: Vec<bool>,
     /// Total bytes moved per link (for utilization reporting).
     pub bytes_sent: f64,
     pub transfers: usize,
@@ -93,8 +105,9 @@ pub struct WanSimulator {
     pub drops: usize,
 }
 
-/// Checkpointable simulator state (see [`WanSimulator::state`]).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Checkpointable simulator state (see [`WanSimulator::state`]). The `topo`
+/// vectors are empty on flat runs, keeping the legacy layout intact.
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetState {
     pub busy_until: f64,
     pub bytes_sent: f64,
@@ -103,6 +116,7 @@ pub struct NetState {
     pub jitter_rng: [u64; 4],
     pub fault_rng: [u64; 4],
     pub corrupt_rng: [u64; 4],
+    pub topo: TopoState,
 }
 
 impl WanSimulator {
@@ -120,14 +134,46 @@ impl WanSimulator {
             busy_until: 0.0,
             rng: Rng::new(seed, 0xC0C0),
             faults: FaultPlan::new(faults, seed),
+            topo: None,
+            live: vec![true; workers],
             bytes_sent: 0.0,
             transfers: 0,
             drops: 0,
         }
     }
 
+    /// Simulator with a region graph attached: a flat topology is a no-op
+    /// (the legacy single-link path runs bit-identically); a multi-region
+    /// one routes every collective through the hierarchical two-level model.
+    pub fn with_topology(
+        cfg: NetworkConfig,
+        topo: &TopologyConfig,
+        workers: usize,
+        seed: u64,
+        faults: FaultConfig,
+    ) -> anyhow::Result<Self> {
+        let mut w = Self::with_faults(cfg, workers, seed, faults);
+        if !topo.is_flat() {
+            w.topo = Some(TopoNet::new(topo.clone(), workers)?);
+        }
+        Ok(w)
+    }
+
     pub fn faults(&self) -> &FaultPlan {
         &self.faults
+    }
+
+    /// The attached region graph, if any.
+    pub fn topology(&self) -> Option<&TopoNet> {
+        self.topo.as_ref()
+    }
+
+    /// Mirror the trainer's per-worker liveness into the topology layer
+    /// (leader failover + dead-region dropout). No-op on flat runs.
+    pub fn set_liveness(&mut self, live: &[bool]) {
+        if self.live.len() == live.len() {
+            self.live.copy_from_slice(live);
+        }
     }
 
     /// Pure cost of one ring all-reduce of `bytes` (no queueing/jitter).
@@ -146,6 +192,30 @@ impl WanSimulator {
     /// [`WanSimulator::try_schedule_allreduce`] or
     /// [`WanSimulator::schedule_with_retries`] for the failure-aware path.
     pub fn schedule_allreduce(&mut self, now: f64, bytes: f64) -> Transfer {
+        self.schedule_allreduce_routed(now, bytes, None)
+    }
+
+    /// Like [`WanSimulator::schedule_allreduce`], optionally pinning the
+    /// inter-region phase to an explicit cycle of link ids (CoCoDC's
+    /// adaptive per-link scheduler builds one; `None` = canonical ring).
+    /// The route is ignored on flat runs.
+    pub fn schedule_allreduce_routed(
+        &mut self,
+        now: f64,
+        bytes: f64,
+        route: Option<&[usize]>,
+    ) -> Transfer {
+        if let Some(topo) = self.topo.as_mut() {
+            let (start, finish) =
+                topo.schedule(now, bytes, route, &self.live, &self.faults, &mut self.rng);
+            let t = Transfer { requested: now, start, finish, bytes };
+            // The aggregate timeline stays monotone for diagnostics; the
+            // real queueing lives on the per-link timelines.
+            self.busy_until = self.busy_until.max(finish);
+            self.bytes_sent += bytes;
+            self.transfers += 1;
+            return t;
+        }
         let mut start = now.max(self.busy_until);
         // A transfer requested during a scripted outage queues behind its
         // end (chained windows are chased by `outage_end`).
@@ -180,7 +250,18 @@ impl WanSimulator {
     /// (consuming link time either way), surfacing as
     /// [`TransferOutcome::Dropped`] that the caller must handle.
     pub fn try_schedule_allreduce(&mut self, now: f64, bytes: f64) -> TransferOutcome {
-        let t = self.schedule_allreduce(now, bytes);
+        self.try_schedule_allreduce_routed(now, bytes, None)
+    }
+
+    /// Failure-aware routed scheduling (see
+    /// [`WanSimulator::schedule_allreduce_routed`]).
+    pub fn try_schedule_allreduce_routed(
+        &mut self,
+        now: f64,
+        bytes: f64,
+        route: Option<&[usize]>,
+    ) -> TransferOutcome {
+        let t = self.schedule_allreduce_routed(now, bytes, route);
         if self.faults.draw_loss() {
             self.drops += 1;
             TransferOutcome::Dropped { requested: now, detected_at: t.finish, bytes }
@@ -195,6 +276,18 @@ impl WanSimulator {
     /// of `base · factor^(drops-1)` seconds from loss detection, bounded by
     /// `max_attempts` and a total `timeout_budget_s` from `now`.
     pub fn schedule_with_retries(&mut self, now: f64, bytes: f64) -> SyncSchedule {
+        self.schedule_with_retries_routed(now, bytes, None)
+    }
+
+    /// Retry-driven routed scheduling (see
+    /// [`WanSimulator::schedule_allreduce_routed`]); every retry re-enters
+    /// the same route.
+    pub fn schedule_with_retries_routed(
+        &mut self,
+        now: f64,
+        bytes: f64,
+        route: Option<&[usize]>,
+    ) -> SyncSchedule {
         let policy = self.faults.retry();
         let deadline = now + policy.timeout_budget_s;
         let mut request_at = now;
@@ -202,7 +295,7 @@ impl WanSimulator {
         let mut drops = 0u32;
         loop {
             attempts += 1;
-            match self.try_schedule_allreduce(request_at, bytes) {
+            match self.try_schedule_allreduce_routed(request_at, bytes, route) {
                 TransferOutcome::Delivered(t) => {
                     // Corruption is drawn at departure time on a dedicated
                     // stream, so loss-only plans replay identically.
@@ -251,9 +344,24 @@ impl WanSimulator {
     }
 
     /// Average single-fragment sync time T_s for the adaptive scheduler
-    /// (Eq. 9): the pure ring time of a fragment of `bytes`.
+    /// (Eq. 9): the pure ring time of a fragment of `bytes` on flat runs,
+    /// or the queue-free hierarchical estimate with a topology attached.
     pub fn t_sync(&self, bytes: f64) -> f64 {
-        self.ring_time(bytes)
+        match &self.topo {
+            Some(t) => t.t_sync_estimate(bytes),
+            None => self.ring_time(bytes),
+        }
+    }
+
+    /// Per-link observations from the most recent hierarchical schedule
+    /// (empty on flat runs); feeds CoCoDC's per-link EWMA estimates.
+    pub fn link_observations(&self) -> &[LinkObs] {
+        self.topo.as_ref().map(|t| t.last_obs()).unwrap_or(&[])
+    }
+
+    /// Per-link utilization counters (empty on flat runs).
+    pub fn link_utils(&self) -> Vec<LinkUtil> {
+        self.topo.as_ref().map(|t| t.link_utils()).unwrap_or_default()
     }
 
     /// Failure injection: take the inter-DC links down until `until`
@@ -285,10 +393,11 @@ impl WanSimulator {
             jitter_rng: self.rng.state(),
             fault_rng: self.faults.rng_state(),
             corrupt_rng: self.faults.corrupt_rng_state(),
+            topo: self.topo.as_ref().map(|t| t.snapshot()).unwrap_or_default(),
         }
     }
 
-    pub fn restore(&mut self, st: NetState) {
+    pub fn restore(&mut self, st: &NetState) {
         self.busy_until = st.busy_until;
         self.bytes_sent = st.bytes_sent;
         self.transfers = st.transfers;
@@ -296,6 +405,17 @@ impl WanSimulator {
         self.rng = Rng::from_state(st.jitter_rng);
         self.faults.restore_rng(st.fault_rng);
         self.faults.restore_corrupt_rng(st.corrupt_rng);
+        if let Some(t) = self.topo.as_mut() {
+            if st.topo.link_busy.len() == t.n_links()
+                && st.topo.intra_busy.len() == t.n_regions()
+            {
+                t.restore(&st.topo);
+            } else {
+                // Legacy flat checkpoint restored into a topology run:
+                // timelines start fresh.
+                t.reset();
+            }
+        }
     }
 }
 
@@ -520,7 +640,7 @@ mod tests {
         }
         let snap = a.state();
         let mut b = WanSimulator::with_faults(net(), 4, 999, f); // wrong seed on purpose
-        b.restore(snap);
+        b.restore(&snap);
         assert_eq!(b.state(), snap);
         for i in 37..80 {
             let now = i as f64 * 3.0;
@@ -551,7 +671,7 @@ mod tests {
         // State round trip replays the same corruption draws.
         let snap = a.state();
         let mut c = WanSimulator::with_faults(net(), 4, 777, f);
-        c.restore(snap);
+        c.restore(&snap);
         for i in 60..120 {
             let now = i as f64 * 10.0;
             assert_eq!(a.schedule_with_retries(now, 1e6), c.schedule_with_retries(now, 1e6));
@@ -580,5 +700,68 @@ mod tests {
             assert!(ta.duration() >= base * 0.8 - 1e-9);
             assert!(ta.duration() <= base * 1.2 + 1e-9);
         }
+    }
+
+    #[test]
+    fn flat_topology_attaches_nothing() {
+        use crate::config::TopologyConfig;
+        let mut flat =
+            WanSimulator::with_topology(net(), &TopologyConfig::flat(), 4, 0, fault_cfg()).unwrap();
+        let mut legacy = WanSimulator::new(net(), 4, 0);
+        assert!(flat.topology().is_none());
+        assert!(flat.link_utils().is_empty());
+        assert!(flat.link_observations().is_empty());
+        for i in 0..20 {
+            let now = i as f64 * 0.3;
+            assert_eq!(flat.schedule_allreduce(now, 1e6), legacy.schedule_allreduce(now, 1e6));
+        }
+        assert_eq!(flat.state(), legacy.state());
+    }
+
+    #[test]
+    fn hierarchical_sync_is_faster_than_flat_at_matched_budget() {
+        use crate::config::net_preset;
+        let (cfg, topo) = net_preset("global-4").unwrap();
+        let mut hier =
+            WanSimulator::with_topology(cfg, &topo, 8, 0, fault_cfg()).unwrap();
+        let mut flat = WanSimulator::with_faults(cfg, 8, 0, fault_cfg());
+        let th = hier.schedule_allreduce(0.0, 4e6);
+        let tf = flat.schedule_allreduce(0.0, 4e6);
+        assert!(
+            th.finish < tf.finish,
+            "hierarchical {} should beat flat {} on global-4",
+            th.finish,
+            tf.finish
+        );
+        assert!(hier.t_sync(4e6) < flat.t_sync(4e6));
+        assert_eq!(hier.link_utils().len(), 12);
+        assert!(!hier.link_observations().is_empty());
+    }
+
+    #[test]
+    fn topology_state_round_trips_through_netstate() {
+        use crate::config::net_preset;
+        let (cfg, topo) = net_preset("us-eu").unwrap();
+        let mut a = WanSimulator::with_topology(cfg, &topo, 8, 3, fault_cfg()).unwrap();
+        for i in 0..7 {
+            a.schedule_allreduce(i as f64 * 0.1, 1e6);
+        }
+        let snap = a.state();
+        assert!(!snap.topo.link_busy.is_empty());
+        let mut b = WanSimulator::with_topology(cfg, &topo, 8, 99, fault_cfg()).unwrap();
+        b.restore(&snap);
+        assert_eq!(b.state(), snap);
+        for i in 7..20 {
+            let now = i as f64 * 0.1;
+            assert_eq!(a.schedule_allreduce(now, 1e6), b.schedule_allreduce(now, 1e6));
+        }
+        // A flat (legacy) NetState restored into a topology run resets the
+        // per-link timelines instead of erroring.
+        let mut flat_state = a.state();
+        flat_state.topo = Default::default();
+        let mut c = WanSimulator::with_topology(cfg, &topo, 8, 3, fault_cfg()).unwrap();
+        c.schedule_allreduce(0.0, 1e6);
+        c.restore(&flat_state);
+        assert!(c.state().topo.link_busy.iter().all(|&b| b == 0.0));
     }
 }

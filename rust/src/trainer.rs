@@ -23,7 +23,8 @@ use std::time::Instant;
 
 use crate::checkpoint::ring::CheckpointRing;
 use crate::checkpoint::{
-    pack_f64, pack_f64s, pack_u64, pack_u64s, unpack_f64, unpack_u64, unpack_u64s, Checkpoint,
+    pack_f64, pack_f64s, pack_u64, pack_u64s, unpack_f64, unpack_f64s, unpack_u64, unpack_u64s,
+    Checkpoint,
 };
 use crate::config::RunConfig;
 use crate::coordinator::{
@@ -33,6 +34,7 @@ use crate::coordinator::strategy::SyncCtx;
 use crate::data::batches::{Batch, BatchStream};
 use crate::data::Split;
 use crate::metrics::{Curve, Dist};
+use crate::network::topology::LinkUtil;
 use crate::network::WanSimulator;
 use crate::runtime::{Backend, TrainState, WorkerHandle};
 use crate::simclock::VirtualClock;
@@ -80,6 +82,8 @@ pub struct TrainOutcome {
     pub quarantined: usize,
     /// Non-finite per-worker/per-batch losses observed (train + eval).
     pub nonfinite_losses: usize,
+    /// Per-WAN-link utilization (topology runs; empty on flat runs).
+    pub link_util: Vec<LinkUtil>,
 }
 
 /// One full cross-region training run.
@@ -160,7 +164,13 @@ impl<'b> Trainer<'b> {
             .map(|_| backend.create_worker())
             .collect::<anyhow::Result<_>>()?;
         let global = GlobalState::new(&init);
-        let net = WanSimulator::with_faults(cfg.network, cfg.workers, cfg.seed, cfg.faults.clone());
+        let net = WanSimulator::with_topology(
+            cfg.network,
+            &cfg.topology,
+            cfg.workers,
+            cfg.seed,
+            cfg.faults.clone(),
+        )?;
         let strategy = make_strategy(&cfg, &frags);
         let streams: Vec<BatchStream> = (0..cfg.workers)
             .map(|m| {
@@ -385,6 +395,9 @@ impl<'b> Trainer<'b> {
             self.live.iter().any(|&x| x),
             "fault plan crashed every worker at t={now:.3}s"
         );
+        // Mirror liveness into the WAN so the topology layer re-elects
+        // leaders and drops fully-dead regions out of the inter-region ring.
+        self.net.set_liveness(&self.live);
         Ok(())
     }
 
@@ -560,6 +573,7 @@ impl<'b> Trainer<'b> {
                 self.snapshot(step)?;
             }
         }
+        self.stats.link_util = self.net.link_utils();
         Ok(TrainOutcome {
             method: self.strategy.name().to_string(),
             curve,
@@ -585,6 +599,7 @@ impl<'b> Trainer<'b> {
             corrupt_fragments: self.stats.corrupt_fragments,
             quarantined: self.stats.quarantined,
             nonfinite_losses: self.nonfinite_losses,
+            link_util: self.stats.link_util.clone(),
         })
     }
 
@@ -642,6 +657,18 @@ impl<'b> Trainer<'b> {
         pack_u64s(&mut net, &nst.jitter_rng);
         pack_u64s(&mut net, &nst.fault_rng);
         pack_u64s(&mut net, &nst.corrupt_rng);
+        // Topology runs append a [links, regions] header plus the per-link
+        // and per-region timelines; flat runs keep the exact legacy layout.
+        if !nst.topo.link_busy.is_empty() {
+            let l = nst.topo.link_busy.len() as u64;
+            let r = nst.topo.intra_busy.len() as u64;
+            pack_u64s(&mut net, &[l, r]);
+            pack_f64s(&mut net, &nst.topo.link_busy);
+            pack_f64s(&mut net, &nst.topo.link_bytes);
+            pack_f64s(&mut net, &nst.topo.link_busy_s);
+            pack_u64s(&mut net, &nst.topo.link_transfers);
+            pack_f64s(&mut net, &nst.topo.intra_busy);
+        }
         ck.insert("run/net", net);
         let mut sen = Vec::with_capacity(6);
         pack_u64s(&mut sen, &[self.loss_obs]);
@@ -755,14 +782,19 @@ impl<'b> Trainer<'b> {
         if let Some(nst) = ck.get("run/net") {
             // Legacy layout (14): busy, bytes, transfers, jitter RNG. The
             // 24-value layout adds the drop counter and the fault-loss RNG
-            // stream; current (32) appends the corruption RNG stream.
-            // Checkpoints predating a stream leave its freshly seeded state
-            // in place, which is exact (the stream was never drawn from).
+            // stream; 32 appends the corruption RNG stream; topology runs
+            // (36 + 8·links + 2·regions) append a [links, regions] header
+            // plus the per-link/per-region timelines. Checkpoints predating
+            // a stream leave its freshly seeded state in place, which is
+            // exact (the stream was never drawn from).
             anyhow::ensure!(
-                nst.len() == 14 || nst.len() == 24 || nst.len() == 32,
+                nst.len() == 14 || nst.len() == 24 || nst.len() == 32 || nst.len() >= 36,
                 "run/net section malformed"
             );
             let mut st = self.net.state();
+            // Cleared so a checkpoint without a topology block restores
+            // fresh per-link timelines instead of keeping the current ones.
+            st.topo = Default::default();
             st.busy_until = unpack_f64(nst[0], nst[1]);
             st.bytes_sent = unpack_f64(nst[2], nst[3]);
             st.transfers = unpack_u64(nst[4], nst[5]) as usize;
@@ -775,12 +807,39 @@ impl<'b> Trainer<'b> {
                 let u = unpack_u64s(&nst[8..24]);
                 st.jitter_rng = [u[0], u[1], u[2], u[3]];
                 st.fault_rng = [u[4], u[5], u[6], u[7]];
-                if nst.len() == 32 {
+                if nst.len() >= 32 {
                     let c = unpack_u64s(&nst[24..32]);
                     st.corrupt_rng = [c[0], c[1], c[2], c[3]];
                 }
             }
-            self.net.restore(st);
+            if nst.len() >= 36 {
+                let hdr = unpack_u64s(&nst[32..36]);
+                let (l, r) = (hdr[0] as usize, hdr[1] as usize);
+                anyhow::ensure!(
+                    nst.len() == 36 + 8 * l + 2 * r,
+                    "run/net topology block malformed"
+                );
+                if let Some(t) = self.net.topology() {
+                    anyhow::ensure!(
+                        l == t.n_links() && r == t.n_regions(),
+                        "run/net topology block ({l} links, {r} regions) does not match \
+                         the configured topology ({} links, {} regions)",
+                        t.n_links(),
+                        t.n_regions()
+                    );
+                }
+                let mut off = 36;
+                st.topo.link_busy = unpack_f64s(&nst[off..off + 2 * l]);
+                off += 2 * l;
+                st.topo.link_bytes = unpack_f64s(&nst[off..off + 2 * l]);
+                off += 2 * l;
+                st.topo.link_busy_s = unpack_f64s(&nst[off..off + 2 * l]);
+                off += 2 * l;
+                st.topo.link_transfers = unpack_u64s(&nst[off..off + 2 * l]);
+                off += 2 * l;
+                st.topo.intra_busy = unpack_f64s(&nst[off..off + 2 * r]);
+            }
+            self.net.restore(&st);
         }
         if let Some(sen) = ck.get("run/sentinel") {
             anyhow::ensure!(sen.len() == 6, "run/sentinel section malformed");

@@ -1,0 +1,220 @@
+//! Multi-region topology integration tests:
+//!
+//! * the `flat` net-preset expansion is bit-identical to the pre-topology
+//!   simulator — loss curve, wall-clock, sync stats, final worker params —
+//!   and keeps the exact legacy 32-value `run/net` checkpoint layout,
+//!   including a mid-run save → restore → continue;
+//! * on `global-4` the hierarchical two-level sync finishes in strictly
+//!   less simulated wall-clock than the matched flat single link and
+//!   reports per-link utilization;
+//! * per-link/per-region timelines survive a checkpoint round trip
+//!   (the 36 + 8·links + 2·regions `run/net` layout) bit-exactly;
+//! * a regional outage delays — but never changes — the training math.
+
+use cocodc::config::{
+    net_preset, FaultWindow, MethodKind, RegionalOutage, RunConfig, TauMode, TopologyConfig,
+};
+use cocodc::runtime::NativeBackend;
+use cocodc::{TrainOutcome, Trainer};
+
+fn tiny_cfg(method: MethodKind) -> RunConfig {
+    let mut cfg = RunConfig::paper("tiny", method);
+    cfg.workers = 8;
+    cfg.h_steps = 10;
+    cfg.tau = TauMode::Fixed { tau: 2 };
+    cfg.total_steps = 50;
+    cfg.eval_every = 10;
+    cfg.eval_batches = 2;
+    cfg
+}
+
+/// Apply a `--net-preset` the way the CLIs do: matched flat-equivalent
+/// network (compute pacing preserved) plus the region graph.
+fn apply_preset(cfg: &mut RunConfig, name: &str) {
+    let (net, topo) = net_preset(name).unwrap();
+    let step = cfg.network.step_compute_s;
+    cfg.network = net;
+    cfg.network.step_compute_s = step;
+    cfg.topology = topo;
+}
+
+fn run_one(cfg: RunConfig) -> (TrainOutcome, Vec<Vec<f32>>) {
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let mut tr = Trainer::new(&backend, cfg).unwrap();
+    let out = tr.run().unwrap();
+    let params = (0..tr.workers().len()).map(|i| tr.worker_params(i).unwrap()).collect();
+    (out, params)
+}
+
+#[test]
+fn flat_net_preset_bit_identical_to_pre_topology_runs() {
+    for method in MethodKind::all() {
+        let (base, base_params) = run_one(tiny_cfg(method));
+        let mut cfg = tiny_cfg(method);
+        apply_preset(&mut cfg, "flat");
+        let (flat, flat_params) = run_one(cfg);
+        assert_eq!(base.curve.points.len(), flat.curve.points.len());
+        for (a, b) in base.curve.points.iter().zip(&flat.curve.points) {
+            assert_eq!(a.loss, b.loss, "{method:?}: flat preset changed the loss curve");
+            assert_eq!(a.wall_s, b.wall_s, "{method:?}: flat preset changed the clock");
+        }
+        assert_eq!(base.wall_s, flat.wall_s);
+        assert_eq!(base.syncs_completed, flat.syncs_completed);
+        assert_eq!(base.bytes_sent, flat.bytes_sent);
+        assert_eq!(base_params, flat_params, "{method:?}: final worker params diverged");
+        assert!(flat.link_util.is_empty(), "flat run must not report per-link stats");
+    }
+}
+
+#[test]
+fn flat_preset_checkpoint_roundtrip_matches_uninterrupted_run() {
+    let mk_cfg = |total: u32| {
+        let mut cfg = tiny_cfg(MethodKind::Diloco);
+        apply_preset(&mut cfg, "flat");
+        cfg.total_steps = total;
+        cfg.eval_every = 5;
+        cfg
+    };
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let mut full = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    let out_full = full.run().unwrap();
+
+    let mut first = Trainer::new(&backend, mk_cfg(20)).unwrap();
+    let _ = first.run().unwrap();
+    let ck = first.checkpoint(20).unwrap();
+    // Flat runs must keep the exact legacy `run/net` layout (32 values) so
+    // pre-topology checkpoints and flat-preset checkpoints stay mutually
+    // compatible.
+    assert_eq!(ck.get("run/net").unwrap().len(), 32);
+    drop(first);
+    let mut resumed = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    resumed.restore(&ck).unwrap();
+    let out_resumed = resumed.run().unwrap();
+    for rp in &out_resumed.curve.points {
+        let fp = out_full
+            .curve
+            .points
+            .iter()
+            .find(|p| p.step == rp.step)
+            .unwrap_or_else(|| panic!("full run has no eval at step {}", rp.step));
+        assert_eq!(rp.loss, fp.loss, "loss diverged at step {}", rp.step);
+        assert_eq!(rp.wall_s, fp.wall_s, "wall-clock diverged at step {}", rp.step);
+    }
+    assert_eq!(out_resumed.wall_s, out_full.wall_s);
+}
+
+#[test]
+fn hierarchical_global4_beats_matched_flat_single_link() {
+    // DiLoCo pays every sync as a blocking stall, so the wall-clock gap is
+    // exactly the WAN schedule difference: the two-level sync (LAN
+    // all-reduce, leader ring over the mesh, LAN broadcast) must beat the
+    // matched flat link whose latency/bandwidth are the mesh means.
+    let mut flat_cfg = tiny_cfg(MethodKind::Diloco);
+    apply_preset(&mut flat_cfg, "global-4");
+    let hier_cfg = flat_cfg.clone();
+    flat_cfg.topology = TopologyConfig::flat();
+    let (flat, _) = run_one(flat_cfg);
+    let (hier, _) = run_one(hier_cfg);
+    assert!(flat.link_util.is_empty());
+    assert_eq!(hier.link_util.len(), 12, "global-4 is a 4-region full mesh");
+    assert!(hier.link_util.iter().map(|l| l.bytes).sum::<f64>() > 0.0);
+    assert!(
+        hier.wall_s < flat.wall_s,
+        "hierarchical ({:.2}s) must beat matched flat ({:.2}s)",
+        hier.wall_s,
+        flat.wall_s
+    );
+    // The blocking schedule is step-driven either way: topology changes
+    // when syncs land on the clock, never what they compute.
+    for (a, b) in flat.curve.points.iter().zip(&hier.curve.points) {
+        assert_eq!(a.loss, b.loss, "topology changed the sync math");
+    }
+
+    // CoCoDC on the same mesh exercises the adaptive per-link scheduler
+    // end-to-end: the run must spread fragments over several links and not
+    // be slower than its own matched-flat twin.
+    let mut c_flat = tiny_cfg(MethodKind::Cocodc);
+    c_flat.tau = TauMode::Network;
+    apply_preset(&mut c_flat, "global-4");
+    let c_hier = c_flat.clone();
+    c_flat.topology = TopologyConfig::flat();
+    let (cf, _) = run_one(c_flat);
+    let (ch, _) = run_one(c_hier);
+    assert!(ch.curve.points.iter().all(|p| p.loss.is_finite()));
+    assert!(ch.syncs_completed > 0, "cocodc never synced on the mesh");
+    assert!(
+        ch.link_util.iter().filter(|l| l.transfers > 0).count() >= 2,
+        "adaptive routing never left a single link"
+    );
+    assert!(
+        ch.wall_s <= cf.wall_s + 1e-9,
+        "cocodc hierarchical ({:.2}s) slower than matched flat ({:.2}s)",
+        ch.wall_s,
+        cf.wall_s
+    );
+}
+
+#[test]
+fn per_link_timelines_survive_checkpoint_roundtrip() {
+    let mk_cfg = |total: u32| {
+        let mut cfg = tiny_cfg(MethodKind::Diloco);
+        apply_preset(&mut cfg, "global-4");
+        cfg.total_steps = total;
+        cfg.eval_every = 5;
+        cfg
+    };
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let mut full = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    let out_full = full.run().unwrap();
+
+    let mut first = Trainer::new(&backend, mk_cfg(20)).unwrap();
+    let _ = first.run().unwrap();
+    let ck = first.checkpoint(20).unwrap();
+    // 32 flat values, a [links, regions] header, then 8 values per link
+    // (busy/bytes/busy_s/transfers as f64/u64 pairs) and 2 per region:
+    // 36 + 8·12 + 2·4 on the 4-region mesh.
+    assert_eq!(ck.get("run/net").unwrap().len(), 36 + 8 * 12 + 2 * 4);
+    drop(first);
+    let mut resumed = Trainer::new(&backend, mk_cfg(40)).unwrap();
+    resumed.restore(&ck).unwrap();
+    let out_resumed = resumed.run().unwrap();
+    for rp in &out_resumed.curve.points {
+        let fp = out_full
+            .curve
+            .points
+            .iter()
+            .find(|p| p.step == rp.step)
+            .unwrap_or_else(|| panic!("full run has no eval at step {}", rp.step));
+        assert_eq!(rp.loss, fp.loss, "loss diverged at step {}", rp.step);
+        assert_eq!(rp.wall_s, fp.wall_s, "per-link timelines lost at step {}", rp.step);
+    }
+    assert_eq!(out_resumed.wall_s, out_full.wall_s);
+    // Cumulative per-link counters restored from the checkpoint must land
+    // on the uninterrupted run's totals.
+    assert_eq!(out_resumed.link_util, out_full.link_util);
+}
+
+#[test]
+fn regional_outage_stalls_syncs_crossing_its_window() {
+    let mut clean_cfg = tiny_cfg(MethodKind::Diloco);
+    apply_preset(&mut clean_cfg, "global-4");
+    let mut outage_cfg = clean_cfg.clone();
+    outage_cfg.faults.regional_outages.push(RegionalOutage {
+        region: 1,
+        window: FaultWindow { start_s: 1.0, duration_s: 3.0 },
+    });
+    let (clean, _) = run_one(clean_cfg);
+    let (hit, _) = run_one(outage_cfg);
+    // The first blocking sync lands at ~1.5s, inside the [1, 4) severance
+    // of every WAN link touching region 1: that round queues behind the
+    // window end while later rounds run at full speed.
+    assert!(
+        hit.wall_s > clean.wall_s + 1.0,
+        "regional outage never stalled the run ({:.2}s vs {:.2}s)",
+        hit.wall_s,
+        clean.wall_s
+    );
+    for (a, b) in clean.curve.points.iter().zip(&hit.curve.points) {
+        assert_eq!(a.loss, b.loss, "an outage must delay syncs, not change them");
+    }
+}
