@@ -10,6 +10,7 @@
 //! ```text
 //! cargo bench --bench bench_train_loop            # default 200 steps
 //! cargo bench --bench bench_train_loop -- --steps 60 --preset tiny  # smoke
+//! cargo bench --bench bench_train_loop -- --threads 8   # pin the pool size
 //! ```
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
@@ -18,7 +19,14 @@ use cocodc::util::bench::HotpathReport;
 use cocodc::util::cli::Args;
 use cocodc::Trainer;
 
-fn cfg(preset: &str, method: MethodKind, steps: u32, h: u32, parallel: bool) -> RunConfig {
+fn cfg(
+    preset: &str,
+    method: MethodKind,
+    steps: u32,
+    h: u32,
+    parallel: bool,
+    threads: usize,
+) -> RunConfig {
     let mut cfg = RunConfig::paper(preset, method);
     cfg.workers = 4;
     cfg.h_steps = h;
@@ -27,6 +35,7 @@ fn cfg(preset: &str, method: MethodKind, steps: u32, h: u32, parallel: bool) -> 
     cfg.eval_every = steps; // time the loop, not the evaluation cadence
     cfg.eval_batches = 2;
     cfg.parallel_workers = parallel;
+    cfg.threads = threads; // 0 = auto budget (workers x row shards, host-capped)
     cfg
 }
 
@@ -43,6 +52,7 @@ fn main() {
     let _ = args.switch("bench");
     let preset = args.get("preset").unwrap_or("tiny").to_string();
     let steps: u32 = args.get_or("steps", 200).expect("--steps");
+    let threads: usize = args.get_or("threads", 0).expect("--threads");
     args.finish().expect("flags");
 
     println!("== bench_train_loop: native backend, preset '{preset}', {steps} steps ==");
@@ -54,13 +64,15 @@ fn main() {
     let mut report = HotpathReport::new();
 
     for (mode, parallel) in [("serial", false), ("pool", true)] {
+        let t = if parallel { threads } else { 1 };
         // Warm-up run so first-touch costs don't pollute the measurement.
-        let _ = timed_run(&backend, cfg(&preset, MethodKind::Cocodc, steps.min(20), 10, parallel));
+        let _ =
+            timed_run(&backend, cfg(&preset, MethodKind::Cocodc, steps.min(20), 10, parallel, t));
 
         let (t_sync_free, _) =
-            timed_run(&backend, cfg(&preset, MethodKind::Diloco, steps, steps + 1, parallel));
+            timed_run(&backend, cfg(&preset, MethodKind::Diloco, steps, steps + 1, parallel, t));
         let (t_cocodc, loss) =
-            timed_run(&backend, cfg(&preset, MethodKind::Cocodc, steps, 10, parallel));
+            timed_run(&backend, cfg(&preset, MethodKind::Cocodc, steps, 10, parallel, t));
 
         let steps_per_s = steps as f64 / t_cocodc;
         let sync_overhead_pct = ((t_cocodc - t_sync_free) / t_cocodc * 100.0).max(0.0);

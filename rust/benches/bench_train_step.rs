@@ -1,39 +1,173 @@
-//! Bench: PJRT train/eval step latency per preset, serial vs 4 parallel
-//! workers — the L3-visible cost of the L2+L1 artifact (Pallas flash
-//! attention + fused AdamW inside the lowered HLO).
+//! Bench: train/eval step latency.
+//!
+//! Native section (always runs, zero artifacts needed): serial vs
+//! row-sharded `train_step` on 1/2/4/8 pool threads, plus the tiled matmul
+//! kernels against their seed triple-loop references — the
+//! `train_step_sharded*` and `matmul_*` perf-trajectory rows of
+//! BENCH_hotpath.json.
+//!
+//! PJRT section (skipped without `make artifacts`): step latency per
+//! preset, serial vs 4 parallel workers — the L3-visible cost of the L2+L1
+//! artifact (Pallas flash attention + fused AdamW inside the lowered HLO).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
-use cocodc::runtime::{Engine, TrainState};
-use cocodc::util::bench::{bench, black_box};
-use cocodc::util::Rng;
+use cocodc::runtime::{
+    Backend, Engine, ModelMeta, NativeBackend, NativeSpec, TrainMeta, TrainState,
+};
+use cocodc::util::bench::{bench, black_box, BenchResult, HotpathReport};
+use cocodc::util::vecops::{self, reference};
+use cocodc::util::{Rng, WorkerPool};
 
-fn batch(engine: &Engine, seed: u64) -> (Vec<i32>, Vec<i32>) {
-    let meta = engine.meta();
+fn batch(model: &ModelMeta, seed: u64) -> (Vec<i32>, Vec<i32>) {
     let mut rng = Rng::new(seed, 0);
-    let n = meta.batch_elems();
+    let n = model.batch_size * model.seq_len;
     let tokens: Vec<i32> =
-        (0..n).map(|_| rng.below(meta.model.vocab_size as u64) as i32).collect();
+        (0..n).map(|_| rng.below(model.vocab_size as u64) as i32).collect();
     let mut targets = tokens.clone();
     targets.rotate_left(1);
     (tokens, targets)
 }
 
-fn main() {
-    println!("== bench_train_step ==");
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let budget = Duration::from_secs(2);
+/// Exp-family dims with batch 8, so `row_shards` saturates every bench pool
+/// size (1/2/4/8) independently of the named presets' batch choices.
+fn bench_spec() -> NativeSpec {
+    NativeSpec {
+        name: "bench8".into(),
+        model: ModelMeta {
+            vocab_size: 256,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 128,
+            seq_len: 32,
+            batch_size: 8,
+            use_pallas_attention: false,
+        },
+        train: TrainMeta {
+            lr: 1e-3,
+            warmup_steps: 10,
+            total_steps: 1_000_000, // never exhausted inside a bench run
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            min_lr_ratio: 0.1,
+        },
+        n_fragments: 4,
+        seed: 0,
+    }
+}
 
+fn step_row(report: &mut HotpathReport, op: &str, n: usize, r: &BenchResult, serial: &BenchResult) {
+    let steps_per_s = 1.0 / r.mean.as_secs_f64();
+    let speedup = serial.mean.as_secs_f64() / r.mean.as_secs_f64();
+    println!("    -> {steps_per_s:.1} steps/s ({speedup:.2}x vs serial)");
+    report.push_custom(
+        op,
+        n,
+        &[
+            ("steps_per_s", steps_per_s),
+            ("speedup_vs_serial", speedup),
+            ("mean_ns", r.mean.as_secs_f64() * 1e9),
+        ],
+    );
+}
+
+fn bench_native(report: &mut HotpathReport, budget: Duration) {
+    let be = NativeBackend::new(bench_spec()).expect("native backend");
+    let n = be.param_count();
+    let (tokens, targets) = batch(be.model(), 1);
+    println!("-- native train_step (P={n}, batch 8 -> 8 row shards) --");
+
+    let mut w = be.create_worker().expect("worker");
+    let serial = bench("[native] train_step serial", 3, budget, || {
+        black_box(be.train_step(&mut w, &tokens, &targets).unwrap());
+    });
+    step_row(report, "train_step_serial", n, &serial, &serial);
+
+    for threads in [1usize, 2, 4, 8] {
+        be.set_compute_pool(Some(Arc::new(WorkerPool::new(threads))));
+        let mut w = be.create_worker().expect("worker");
+        let r = bench(&format!("[native] train_step sharded x{threads}"), 3, budget, || {
+            black_box(be.train_step(&mut w, &tokens, &targets).unwrap());
+        });
+        step_row(report, &format!("train_step_sharded{threads}"), n, &r, &serial);
+    }
+    be.set_compute_pool(None);
+}
+
+fn bench_matmuls(report: &mut HotpathReport, budget: Duration) {
+    // The LM-head shape of the bench model — the largest matmul in the
+    // native step. Rows are keyed by MAC count, so ns_per_elem is ns/MAC.
+    let (n, m, p) = (256usize, 64, 256);
+    let key = n * m * p;
+    let bytes = ((n * m + m * p + n * p) * 4) as f64;
+    let mut rng = Rng::new(7, 0);
+    let mut fill = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| (rng.next_f64() - 0.5) as f32).collect()
+    };
+    let a = fill(n * m);
+    let b = fill(m * p);
+    let d = fill(n * p);
+    println!("-- tiled matmul kernels vs seed references ({n}x{m}x{p}) --");
+
+    let mut out = vec![0.0f32; n * p];
+    let rt = bench("[matmul] tiled", 3, budget, || {
+        vecops::matmul(black_box(&mut out), &a, &b, n, m, p);
+    });
+    let rr = bench("[matmul] reference", 3, budget, || {
+        reference::matmul(black_box(&mut out), &a, &b, n, m, p);
+    });
+    report.push("matmul_tiled", key, bytes, &rt);
+    report.push("matmul_reference", key, bytes, &rr);
+    report.push_speedup("matmul_tiled_speedup", key, rr.mean.as_secs_f64() / rt.mean.as_secs_f64());
+
+    let mut dx = vec![0.0f32; n * m];
+    let rt = bench("[matmul_bt] tiled", 3, budget, || {
+        vecops::matmul_bt(black_box(&mut dx), &d, &b, n, m, p);
+    });
+    let rr = bench("[matmul_bt] reference", 3, budget, || {
+        reference::matmul_bt(black_box(&mut dx), &d, &b, n, m, p);
+    });
+    report.push("matmul_bt_tiled", key, bytes, &rt);
+    report.push("matmul_bt_reference", key, bytes, &rr);
+    report.push_speedup(
+        "matmul_bt_tiled_speedup",
+        key,
+        rr.mean.as_secs_f64() / rt.mean.as_secs_f64(),
+    );
+
+    let mut gb = vec![0.0f32; m * p];
+    let rt = bench("[matmul_at_acc] tiled", 3, budget, || {
+        vecops::matmul_at_acc(black_box(&mut gb), &a, &d, n, m, p);
+    });
+    gb.fill(0.0);
+    let rr = bench("[matmul_at_acc] reference", 3, budget, || {
+        reference::matmul_at_acc(black_box(&mut gb), &a, &d, n, m, p);
+    });
+    report.push("matmul_at_acc_tiled", key, bytes, &rt);
+    report.push("matmul_at_acc_reference", key, bytes, &rr);
+    report.push_speedup(
+        "matmul_at_acc_tiled_speedup",
+        key,
+        rr.mean.as_secs_f64() / rt.mean.as_secs_f64(),
+    );
+}
+
+fn bench_pjrt(budget: Duration) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     for preset in ["tiny", "exp"] {
         if !dir.join(preset).join("meta.json").exists() {
-            println!("SKIP {preset}: run `make artifacts`");
+            println!("SKIP pjrt {preset}: run `make artifacts`");
             continue;
         }
         let engine = Engine::load(&dir, preset).expect("engine");
         let meta = engine.meta();
         let tokens_per_step = meta.batch_elems() as f64;
-        let (tokens, targets) = batch(&engine, 1);
+        let (tokens, targets) = batch(&meta.model, 1);
 
         let mut st = TrainState::new(engine.init_params().unwrap());
         let r = bench(&format!("[{preset}] train_step x1"), 2, budget, || {
@@ -76,4 +210,16 @@ fn main() {
             black_box(engine.eval_loss(&params, &tokens, &targets).unwrap());
         });
     }
+}
+
+fn main() {
+    println!("== bench_train_step ==");
+    let budget = Duration::from_secs(1);
+    let mut report = HotpathReport::new();
+    bench_native(&mut report, budget);
+    bench_matmuls(&mut report, budget);
+    bench_pjrt(Duration::from_secs(2));
+    let path = HotpathReport::default_path();
+    report.write(&path).expect("write BENCH_hotpath.json");
+    println!("rows merged into {}", path.display());
 }

@@ -53,6 +53,9 @@ struct Cli {
     seed: u64,
     ppl: f64,
     eval_every: u32,
+    /// Thread budget for the shared worker/compute pool (0 = auto,
+    /// 1 = fully serial; bit-identical results for every value).
+    threads: usize,
     severities: Vec<f64>,
     corruptions: Vec<f64>,
     /// `--net-preset` expansion applied to every experiment's base config.
@@ -69,6 +72,10 @@ fn base_cfg(cli: &Cli, method: MethodKind) -> RunConfig {
     cfg.total_steps = cli.steps;
     cfg.seed = cli.seed;
     cfg.eval_every = cli.eval_every;
+    cfg.threads = cli.threads;
+    if cli.threads == 1 {
+        cfg.parallel_workers = false;
+    }
     if let Some((net, topo)) = &cli.net {
         let step = cfg.network.step_compute_s;
         cfg.network = *net;
@@ -585,6 +592,7 @@ fn main() -> anyhow::Result<()> {
         seed: args.get_or("seed", 17)?,
         ppl: args.get_or("ppl", 20.0)?,
         eval_every: args.get_or("eval-every", 25)?,
+        threads: args.get_or("threads", 0)?,
         severities: match args.get("severity") {
             Some(s) => s
                 .split(',')

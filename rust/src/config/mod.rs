@@ -837,6 +837,13 @@ pub struct RunConfig {
     pub data: DataConfig,
     /// Run worker train steps on parallel threads.
     pub parallel_workers: bool,
+    /// Thread budget for the shared worker/compute pool: 0 = auto (host
+    /// parallelism), N > 0 pins the pool to N threads. Worker fan-out and
+    /// the native backend's intra-step row sharding split this one budget
+    /// (DESIGN.md §Parallelism); any value produces bit-identical results,
+    /// only wall-clock changes. `--threads 1` implies `parallel_workers
+    /// = false` at the CLI layer.
+    pub threads: usize,
     /// Use the HLO/Pallas artifacts for outer step + delay compensation
     /// instead of the native rust implementations.
     pub use_hlo_fragment_ops: bool,
@@ -872,6 +879,7 @@ impl Default for RunConfig {
             topology: TopologyConfig::default(),
             data: DataConfig::default(),
             parallel_workers: true,
+            threads: 0,
             use_hlo_fragment_ops: false,
             compression: Codec::None,
             faults: FaultConfig::default(),
@@ -966,6 +974,7 @@ impl RunConfig {
             ("faults", self.faults.to_json()),
             ("recovery", self.recovery.to_json()),
             ("parallel_workers", Json::Bool(self.parallel_workers)),
+            ("threads", num(self.threads as f64)),
             ("use_hlo_fragment_ops", Json::Bool(self.use_hlo_fragment_ops)),
         ])
     }
@@ -1023,6 +1032,10 @@ impl RunConfig {
             cfg.recovery = RecoveryConfig::from_json(r)?;
         }
         cfg.parallel_workers = j.field("parallel_workers")?.as_bool()?;
+        // Optional for backward compatibility with pre-threads config files.
+        if let Some(t) = j.get("threads") {
+            cfg.threads = t.as_usize()?;
+        }
         cfg.use_hlo_fragment_ops = j.field("use_hlo_fragment_ops")?.as_bool()?;
         Ok(cfg)
     }

@@ -38,6 +38,11 @@ train/compare flags:
   --tau N             fixed overlap depth (default 5)
   --tau-network       derive tau from the WAN simulator
   --alpha X --lambda X --gamma X --seed N --eval-every N
+  --threads N         thread budget for the shared worker/compute pool:
+                      0 = auto (host parallelism), 1 = fully serial, N > 1
+                      pins the pool size; results are bit-identical for
+                      every N (row shards are a function of the model shape,
+                      not the thread count)
   --codec C           pseudo-gradient wire codec: none|int8|int4
   --net-preset P      WAN shape: flat|us-eu|global-4 — expands to a matched
                       flat NetworkConfig + multi-region TopologyConfig
@@ -112,6 +117,12 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(v) = args.get_parse::<u32>("eval-every")? {
         cfg.eval_every = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("threads")? {
+        // 1 means fully serial: no pool at all, the strongest baseline for
+        // the bit-identity guarantee. 0 and N>1 size the shared pool.
+        cfg.threads = v;
+        cfg.parallel_workers = v != 1;
     }
     if args.switch("hlo-fragment-ops") {
         cfg.use_hlo_fragment_ops = true;

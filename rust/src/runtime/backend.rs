@@ -27,10 +27,12 @@
 
 use std::any::Any;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::coordinator::fragments::{Fragment, FragmentTable};
 use crate::runtime::engine::TrainState;
 use crate::runtime::meta::ModelMeta;
+use crate::util::threadpool::WorkerPool;
 use crate::util::vecops;
 
 /// Opaque, backend-owned resident worker state. Constructed by
@@ -210,6 +212,18 @@ pub trait Backend: Send + Sync {
     /// and the constructed backend consistent).
     fn hlo_fragment_ops(&self) -> bool {
         false
+    }
+
+    /// Install (or clear, with `None`) a shared compute pool for intra-step
+    /// data parallelism. Backends that can shard a single step across
+    /// threads (the native backend's row shards) pick the pool up on the
+    /// next step; the contract is that pooled execution stays bit-identical
+    /// to serial, so this only ever changes wall-clock. The trainer calls
+    /// this with its own worker pool — nested scopes make worker fan-out
+    /// and intra-step sharding share one set of threads (DESIGN.md
+    /// §Parallelism). Default: ignore the pool (backend steps stay serial).
+    fn set_compute_pool(&self, pool: Option<Arc<WorkerPool>>) {
+        let _ = pool;
     }
 
     /// Snapshot the worker's full state into `dst` (checkpoint path; not

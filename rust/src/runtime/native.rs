@@ -11,28 +11,57 @@
 //! correction and the warmup+cosine LR schedule computed from the same
 //! `TrainMeta` fields the artifacts bake in.
 //!
+//! Intra-step data parallelism (DESIGN.md §Parallelism): each worker's
+//! batch is split into [`row_shards`] whole-sequence shards — a function
+//! of the model shape only, never the thread count. Every shard owns a
+//! private [`ShardScratch`] (activations for its rows plus a full-size
+//! gradient buffer), so forward/backward over shards is embarrassingly
+//! parallel; when a compute pool is installed via
+//! `Backend::set_compute_pool` the shards run on pool threads (a *nested*
+//! scope when the trainer already fanned out per worker). All reductions
+//! are fixed-order: the loss is the ascending-shard sum of per-shard f64
+//! sums, and AdamW folds the per-element shard-gradient sum into its
+//! update loop — the identical code runs serial and pooled, so results
+//! are bit-identical for any `--threads` value.
+//!
 //! Resident-state discipline (DESIGN.md §Backend): each worker owns its
-//! flat (θ, m, v, step) *and* all forward/backward scratch, allocated once
-//! at `create_worker` — a steady-state `train_step` performs **zero** heap
-//! allocations (tests/alloc_steady_state.rs proves it with a counting
-//! allocator). Evaluation borrows scratch from a recycling pool so
-//! concurrent validation batches stay allocation-free after warm-up.
+//! flat (θ, m, v, step) *and* all shard scratch, allocated once at
+//! `create_worker` — a steady-state serial `train_step` performs **zero**
+//! heap allocations (tests/alloc_steady_state.rs proves it with a counting
+//! allocator); the pooled path queues one boxed task per shard per step.
+//! Evaluation borrows shard sets from a recycling pool so concurrent
+//! validation batches stay allocation-free after warm-up.
 //!
 //! The flat layout is fragment-major over the same strided depth partition
 //! as python/compile/config.flat_layout: layer l joins fragment l mod K,
 //! the embedding joins fragment 0, final norm + LM head join fragment K−1.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::coordinator::fragments::{Fragment, FragmentTable};
 use crate::runtime::backend::{validated_rows, Backend, WorkerHandle};
 use crate::runtime::engine::TrainState;
 use crate::runtime::meta::{LeafMeta, ModelMeta, TrainMeta};
-use crate::util::vecops::{self, axpy, dot};
+use crate::util::threadpool::{ScopedTask, WorkerPool};
+use crate::util::vecops::{self, axpy, dot, matmul, matmul_at_acc, matmul_bt};
 use crate::util::Rng;
 
 const RMS_EPS: f32 = 1e-6;
 const ROPE_THETA: f32 = 10000.0;
+
+/// Upper bound on row shards per worker (8 matches the vecops lane width;
+/// beyond it the per-shard full-size gradient buffers dominate memory).
+pub const MAX_ROW_SHARDS: usize = 8;
+
+/// Number of row shards one worker's batch is split into. A function of
+/// the model shape only — never the thread count — so the computation and
+/// reduction structure (and therefore every result bit) is identical for
+/// any `--threads` value; fewer threads just run the same shards with
+/// less overlap. Shards hold whole sequences, so causal attention never
+/// crosses a shard boundary.
+pub fn row_shards(batch_size: usize) -> usize {
+    batch_size.clamp(1, MAX_ROW_SHARDS)
+}
 
 /// Full specification of a native model + optimizer.
 #[derive(Debug, Clone)]
@@ -235,44 +264,8 @@ fn build_layout(spec: &NativeSpec) -> Layout {
 }
 
 // ---------------------------------------------------------------------
-// Dense kernels (row-major, vecops 8-lane style)
+// Dense per-row kernels (matmuls live in util::vecops since the tiling)
 // ---------------------------------------------------------------------
-
-/// out[n,p] = a[n,m] @ b[m,p] — axpy inner loop, every access contiguous.
-fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
-    debug_assert_eq!(out.len(), n * p);
-    debug_assert_eq!(a.len(), n * m);
-    debug_assert_eq!(b.len(), m * p);
-    for i in 0..n {
-        let row = &mut out[i * p..(i + 1) * p];
-        row.fill(0.0);
-        for j in 0..m {
-            axpy(row, a[i * m + j], &b[j * p..(j + 1) * p]);
-        }
-    }
-}
-
-/// out[n,m] = dout[n,p] @ bᵀ where b is [m,p] — dot-product inner loop.
-fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
-    debug_assert_eq!(out.len(), n * m);
-    for i in 0..n {
-        let drow = &dout[i * p..(i + 1) * p];
-        for j in 0..m {
-            out[i * m + j] = dot(drow, &b[j * p..(j + 1) * p]);
-        }
-    }
-}
-
-/// gb[m,p] += aᵀ[m,n] @ dout[n,p] — weight-gradient accumulation.
-fn matmul_at_acc(gb: &mut [f32], a: &[f32], dout: &[f32], n: usize, m: usize, p: usize) {
-    debug_assert_eq!(gb.len(), m * p);
-    for i in 0..n {
-        let drow = &dout[i * p..(i + 1) * p];
-        for j in 0..m {
-            axpy(&mut gb[j * p..(j + 1) * p], a[i * m + j], drow);
-        }
-    }
-}
 
 /// y[i] = x[i] · rinv(row) · gain — saves 1/rms per row for backward.
 fn rmsnorm(y: &mut [f32], rinv: &mut [f32], x: &[f32], gain: &[f32], n: usize, d: usize) {
@@ -318,7 +311,7 @@ fn rmsnorm_backward(
 }
 
 // ---------------------------------------------------------------------
-// Scratch: every buffer a forward+backward pass needs, allocated once
+// ShardScratch: every buffer one row shard's forward+backward needs
 // ---------------------------------------------------------------------
 
 #[derive(Debug)]
@@ -328,7 +321,7 @@ struct LayerScratch {
     q: Vec<f32>,        // post-RoPE queries           [n·D]
     k: Vec<f32>,        // post-RoPE keys              [n·D]
     v: Vec<f32>,        // values                      [n·D]
-    probs: Vec<f32>,    // softmax attention           [B·nh·T·T]
+    probs: Vec<f32>,    // softmax attention           [b·nh·T·T]
     ctx: Vec<f32>,      // attention context (pre-wo)  [n·D]
     x_mid: Vec<f32>,    // residual after attention    [n·D]
     hn_mlp: Vec<f32>,   // RMSNormed MLP input         [n·D]
@@ -339,8 +332,15 @@ struct LayerScratch {
     x_out: Vec<f32>,    // residual after MLP          [n·D]
 }
 
+/// Activations and gradients for one contiguous run of whole sequences
+/// (`b` = `seqs` batch rows, n = b·T tokens). The gradient buffer is
+/// full-size [P] — shards accumulate disjoint row contributions into
+/// private buffers and AdamW reduces them in ascending shard order.
 #[derive(Debug)]
-struct Scratch {
+struct ShardScratch {
+    seq0: usize,       // first batch row of this shard
+    seqs: usize,       // number of batch rows
+    loss_sum: f64,     // un-normalized f64 token-loss sum of the shard
     x0: Vec<f32>,      // embeddings [n·D]
     layers: Vec<LayerScratch>,
     xf: Vec<f32>,      // final normed [n·D]
@@ -360,13 +360,19 @@ struct Scratch {
     d_s: Vec<f32>,     // [n·F]
 }
 
-impl Scratch {
+impl ShardScratch {
     /// `with_backward = false` leaves the backward-only buffers (grad and
     /// the d_* family) empty — forward-only evaluation never touches them,
-    /// so pooled eval scratch stays roughly half the size of train scratch.
-    fn new(m: &ModelMeta, total: usize, with_backward: bool) -> Scratch {
-        let (b, t, d, f, v) = (m.batch_size, m.seq_len, m.d_model, m.d_ff, m.vocab_size);
-        let n = b * t;
+    /// so pooled eval shard sets stay a fraction of the train footprint.
+    fn new(
+        m: &ModelMeta,
+        total: usize,
+        seq0: usize,
+        seqs: usize,
+        with_backward: bool,
+    ) -> ShardScratch {
+        let (t, d, f, v) = (m.seq_len, m.d_model, m.d_ff, m.vocab_size);
+        let n = seqs * t;
         let bw = |len: usize| if with_backward { vec![0.0; len] } else { Vec::new() };
         let layer = || LayerScratch {
             hn_attn: vec![0.0; n * d],
@@ -374,7 +380,7 @@ impl Scratch {
             q: vec![0.0; n * d],
             k: vec![0.0; n * d],
             v: vec![0.0; n * d],
-            probs: vec![0.0; b * m.n_heads * t * t],
+            probs: vec![0.0; seqs * m.n_heads * t * t],
             ctx: vec![0.0; n * d],
             x_mid: vec![0.0; n * d],
             hn_mlp: vec![0.0; n * d],
@@ -384,7 +390,10 @@ impl Scratch {
             s: vec![0.0; n * f],
             x_out: vec![0.0; n * d],
         };
-        Scratch {
+        ShardScratch {
+            seq0,
+            seqs,
+            loss_sum: 0.0,
             x0: vec![0.0; n * d],
             layers: (0..m.n_layers).map(|_| layer()).collect(),
             xf: vec![0.0; n * d],
@@ -405,12 +414,95 @@ impl Scratch {
     }
 }
 
+/// The fixed shard partition for one batch: [`row_shards`] contiguous runs
+/// of whole sequences, sized as evenly as integer division allows.
+fn make_shards(m: &ModelMeta, total: usize, with_backward: bool) -> Vec<ShardScratch> {
+    let s_count = row_shards(m.batch_size);
+    (0..s_count)
+        .map(|s| {
+            let seq0 = s * m.batch_size / s_count;
+            let seq1 = (s + 1) * m.batch_size / s_count;
+            ShardScratch::new(m, total, seq0, seq1 - seq0, with_backward)
+        })
+        .collect()
+}
+
 /// One worker's resident state: flat (θ, m, v, step) plus its private
-/// forward/backward scratch.
+/// per-shard forward/backward scratch.
 #[derive(Debug)]
 pub struct NativeWorker {
     state: TrainState,
-    scratch: Scratch,
+    shards: Vec<ShardScratch>,
+}
+
+/// Precomputed AdamW scalars shared by every parameter span of one step.
+#[derive(Debug, Clone, Copy)]
+struct AdamCoef {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    wd: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+}
+
+/// Fused decoupled AdamW with bias correction (8-lane unrolled) over one
+/// span of the flat vectors, with the per-element gradient reduced over
+/// the row shards *inside* the update loop, in ascending shard order. The
+/// same code runs serial (one span) and pooled (disjoint spans), so the
+/// reduction order — and therefore every bit of θ/m/v — is independent of
+/// the thread count. `off` is the span's offset into the flat vector.
+fn adamw_span(
+    coef: AdamCoef,
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    shards: &[ShardScratch],
+    off: usize,
+) {
+    const LANES: usize = vecops::LANES;
+    let AdamCoef { b1, b2, eps, wd, bc1, bc2, lr } = coef;
+    let mut pc = params.chunks_exact_mut(LANES);
+    let mut mc = m.chunks_exact_mut(LANES);
+    let mut vc = v.chunks_exact_mut(LANES);
+    let mut base = off;
+    for ((p, mm), vv) in (&mut pc).zip(&mut mc).zip(&mut vc) {
+        let mut g = [0.0f32; LANES];
+        for sc in shards {
+            let gs = &sc.grad[base..base + LANES];
+            for i in 0..LANES {
+                g[i] += gs[i];
+            }
+        }
+        for i in 0..LANES {
+            let m2 = b1 * mm[i] + (1.0 - b1) * g[i];
+            let v2 = b2 * vv[i] + (1.0 - b2) * g[i] * g[i];
+            mm[i] = m2;
+            vv[i] = v2;
+            let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + eps) + wd * p[i];
+            p[i] -= lr * upd;
+        }
+        base += LANES;
+    }
+    for (k, ((p, mm), vv)) in pc
+        .into_remainder()
+        .iter_mut()
+        .zip(mc.into_remainder().iter_mut())
+        .zip(vc.into_remainder().iter_mut())
+        .enumerate()
+    {
+        let mut g = 0.0f32;
+        for sc in shards {
+            g += sc.grad[base + k];
+        }
+        let m2 = b1 * *mm + (1.0 - b1) * g;
+        let v2 = b2 * *vv + (1.0 - b2) * g * g;
+        *mm = m2;
+        *vv = v2;
+        let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + eps) + wd * *p;
+        *p -= lr * upd;
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -424,8 +516,10 @@ pub struct NativeBackend {
     /// RoPE tables: cos/sin of t·freq_j, [T · dh/2] each.
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
-    /// Recycled eval scratch (validation batches run concurrently).
-    eval_scratch: Mutex<Vec<Box<Scratch>>>,
+    /// Recycled eval shard sets (validation batches run concurrently).
+    eval_scratch: Mutex<Vec<Vec<ShardScratch>>>,
+    /// Intra-step compute pool installed by the trainer (None = serial).
+    pool: RwLock<Option<Arc<WorkerPool>>>,
 }
 
 impl NativeBackend {
@@ -457,6 +551,7 @@ impl NativeBackend {
             rope_cos,
             rope_sin,
             eval_scratch: Mutex::new(Vec::new()),
+            pool: RwLock::new(None),
         })
     }
 
@@ -480,12 +575,18 @@ impl NativeBackend {
         w.get_mut::<NativeWorker>()
     }
 
+    fn compute_pool(&self) -> Option<Arc<WorkerPool>> {
+        self.pool.read().expect("compute pool poisoned").clone()
+    }
+
     // ------------------------------------------------------------------
-    // forward / backward
+    // forward / backward (per row shard)
     // ------------------------------------------------------------------
 
     /// RoPE rotation applied in place to every head slice of `x` [n·D].
-    /// `dir` = 1.0 forward, −1.0 backward (the transpose rotation).
+    /// `dir` = 1.0 forward, −1.0 backward (the transpose rotation). Works
+    /// on shard slices unchanged because shards hold whole sequences, so
+    /// the position of row i is still i mod T.
     fn rope(&self, x: &mut [f32], dir: f32) {
         let m = &self.spec.model;
         let (t_len, d, nh) = (m.seq_len, m.d_model, m.n_heads);
@@ -511,32 +612,44 @@ impl NativeBackend {
         }
     }
 
-    /// Forward pass storing every activation needed by backward; returns
-    /// the mean token cross-entropy.
-    fn forward(&self, params: &[f32], tokens: &[i32], targets: &[i32], s: &mut Scratch) -> f32 {
+    /// Forward pass over one shard's rows (whole sequences
+    /// [seq0, seq0+seqs)), storing every activation backward needs.
+    /// `tokens`/`targets` are the *full* batch; the shard's slice is cut
+    /// here. The shard's un-normalized f64 token-loss sum lands in
+    /// `sc.loss_sum`; the caller reduces shard sums in ascending order and
+    /// divides once by the global token count.
+    fn forward_shard(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        sc: &mut ShardScratch,
+    ) {
         let m = &self.spec.model;
         let lay = &self.layout;
-        let (b, t_len, d, f, v, nh) =
-            (m.batch_size, m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
+        let (t_len, d, f, v, nh) = (m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
+        let b = sc.seqs;
         let n = b * t_len;
+        let r0 = sc.seq0 * t_len;
+        let tokens = &tokens[r0..r0 + n];
+        let targets = &targets[r0..r0 + n];
         let dh = d / nh;
         let scale = 1.0 / (dh as f32).sqrt();
-        debug_assert_eq!(tokens.len(), n);
 
         // Embedding lookup.
         let embed = &params[lay.embed..lay.embed + v * d];
         for i in 0..n {
             let tok = tokens[i] as usize;
-            s.x0[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+            sc.x0[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
         }
 
         for l in 0..m.n_layers {
             let off = lay.layers[l];
             // Work around the borrow checker: split the one &mut LayerScratch
             // out of the vec, everything else is shared reads.
-            let (before, rest) = s.layers.split_at_mut(l);
+            let (before, rest) = sc.layers.split_at_mut(l);
             let ls = &mut rest[0];
-            let x_in: &[f32] = if l == 0 { &s.x0 } else { &before[l - 1].x_out };
+            let x_in: &[f32] = if l == 0 { &sc.x0 } else { &before[l - 1].x_out };
 
             rmsnorm(
                 &mut ls.hn_attn,
@@ -552,7 +665,7 @@ impl NativeBackend {
             self.rope(&mut ls.q, 1.0);
             self.rope(&mut ls.k, 1.0);
 
-            // Causal softmax attention per (batch, head).
+            // Causal softmax attention per (shard row, head).
             for bi in 0..b {
                 for h in 0..nh {
                     let pb = &mut ls.probs
@@ -563,10 +676,10 @@ impl NativeBackend {
                         let mut mx = f32::NEG_INFINITY;
                         for (t2, p_val) in prow.iter_mut().enumerate().take(t1 + 1) {
                             let krow = &ls.k[((bi * t_len + t2) * d + h * dh)..][..dh];
-                            let sc = dot(qrow, krow) * scale;
-                            *p_val = sc;
-                            if sc > mx {
-                                mx = sc;
+                            let sc_val = dot(qrow, krow) * scale;
+                            *p_val = sc_val;
+                            if sc_val > mx {
+                                mx = sc_val;
                             }
                         }
                         let mut z = 0.0f32;
@@ -616,46 +729,58 @@ impl NativeBackend {
             vecops::add_assign(&mut ls.x_out, &ls.x_mid);
         }
 
-        // Final norm + untied LM head + mean token cross-entropy.
+        // Final norm + untied LM head + token cross-entropy sum.
         let x_last: &[f32] =
-            if m.n_layers == 0 { &s.x0 } else { &s.layers[m.n_layers - 1].x_out };
+            if m.n_layers == 0 { &sc.x0 } else { &sc.layers[m.n_layers - 1].x_out };
         rmsnorm(
-            &mut s.xf,
-            &mut s.rinv_f,
+            &mut sc.xf,
+            &mut sc.rinv_f,
             x_last,
             &params[lay.final_norm..lay.final_norm + d],
             n,
             d,
         );
-        matmul(&mut s.logits, &s.xf, &params[lay.lm_head..lay.lm_head + d * v], n, d, v);
+        matmul(&mut sc.logits, &sc.xf, &params[lay.lm_head..lay.lm_head + d * v], n, d, v);
         let mut loss = 0.0f64;
         for i in 0..n {
-            let row = &s.logits[i * v..(i + 1) * v];
+            let row = &sc.logits[i * v..(i + 1) * v];
             let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
             let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
             let logz = mx + z.ln();
             loss += (logz - row[targets[i] as usize]) as f64;
         }
-        (loss / n as f64) as f32
+        sc.loss_sum = loss;
     }
 
-    /// Backward pass into `s.grad` (overwritten). Must be called right
-    /// after [`NativeBackend::forward`] on the same scratch.
-    fn backward(&self, params: &[f32], tokens: &[i32], targets: &[i32], s: &mut Scratch) {
+    /// Backward pass for one shard into `sc.grad` (overwritten; full-size,
+    /// holding only this shard's row contributions). Must be called right
+    /// after [`NativeBackend::forward_shard`] on the same shard. dlogits
+    /// are scaled by the *global* 1/N so the per-shard gradients sum to
+    /// the whole-batch gradient.
+    fn backward_shard(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        sc: &mut ShardScratch,
+    ) {
         let m = &self.spec.model;
         let lay = &self.layout;
-        let (b, t_len, d, f, v, nh) =
-            (m.batch_size, m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
+        let (t_len, d, f, v, nh) = (m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
+        let b = sc.seqs;
         let n = b * t_len;
+        let r0 = sc.seq0 * t_len;
+        let tokens = &tokens[r0..r0 + n];
+        let targets = &targets[r0..r0 + n];
         let dh = d / nh;
         let scale = 1.0 / (dh as f32).sqrt();
 
-        s.grad.fill(0.0);
+        sc.grad.fill(0.0);
 
-        // dlogits in place: (softmax − onehot) / n.
-        let inv_n = 1.0 / n as f32;
+        // dlogits in place: (softmax − onehot) / N_global.
+        let inv_n = 1.0 / (m.batch_size * m.seq_len) as f32;
         for i in 0..n {
-            let row = &mut s.logits[i * v..(i + 1) * v];
+            let row = &mut sc.logits[i * v..(i + 1) * v];
             let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
             let mut z = 0.0f32;
             for x in row.iter_mut() {
@@ -671,19 +796,19 @@ impl NativeBackend {
 
         // LM head: d_xf = dlogits @ lm_headᵀ; g_lm += xfᵀ @ dlogits.
         let lm = &params[lay.lm_head..lay.lm_head + d * v];
-        matmul_bt(&mut s.d_h, &s.logits, lm, n, d, v);
-        matmul_at_acc(&mut s.grad[lay.lm_head..lay.lm_head + d * v], &s.xf, &s.logits, n, d, v);
+        matmul_bt(&mut sc.d_h, &sc.logits, lm, n, d, v);
+        matmul_at_acc(&mut sc.grad[lay.lm_head..lay.lm_head + d * v], &sc.xf, &sc.logits, n, d, v);
 
         // Final RMSNorm (d_x accumulates; start from zero).
         let x_last: &[f32] =
-            if m.n_layers == 0 { &s.x0 } else { &s.layers[m.n_layers - 1].x_out };
-        s.d_x.fill(0.0);
+            if m.n_layers == 0 { &sc.x0 } else { &sc.layers[m.n_layers - 1].x_out };
+        sc.d_x.fill(0.0);
         rmsnorm_backward(
-            &mut s.d_x,
-            &mut s.grad[lay.final_norm..lay.final_norm + d],
-            &s.d_h,
+            &mut sc.d_x,
+            &mut sc.grad[lay.final_norm..lay.final_norm + d],
+            &sc.d_h,
             x_last,
-            &s.rinv_f,
+            &sc.rinv_f,
             &params[lay.final_norm..lay.final_norm + d],
             n,
             d,
@@ -691,33 +816,33 @@ impl NativeBackend {
 
         for l in (0..m.n_layers).rev() {
             let off = lay.layers[l];
-            let (before, rest) = s.layers.split_at(l);
+            let (before, rest) = sc.layers.split_at(l);
             let ls = &rest[0];
-            let x_in: &[f32] = if l == 0 { &s.x0 } else { &before[l - 1].x_out };
+            let x_in: &[f32] = if l == 0 { &sc.x0 } else { &before[l - 1].x_out };
 
             // ---- MLP block backward: x_out = x_mid + s@w2.
             // d_s = d_x @ w2ᵀ; g_w2 += sᵀ @ d_x.
-            matmul_bt(&mut s.d_s, &s.d_x, &params[off.w2..off.w2 + f * d], n, f, d);
-            matmul_at_acc(&mut s.grad[off.w2..off.w2 + f * d], &ls.s, &s.d_x, n, f, d);
+            matmul_bt(&mut sc.d_s, &sc.d_x, &params[off.w2..off.w2 + f * d], n, f, d);
+            matmul_at_acc(&mut sc.grad[off.w2..off.w2 + f * d], &ls.s, &sc.d_x, n, f, d);
             // s = silu(u) ⊙ g3.
             for i in 0..n * f {
                 let u = ls.u[i];
                 let sig = 1.0 / (1.0 + (-u).exp());
                 let silu = u * sig;
-                s.d_g3[i] = s.d_s[i] * silu;
-                s.d_u[i] = s.d_s[i] * ls.g3[i] * (sig * (1.0 + u * (1.0 - sig)));
+                sc.d_g3[i] = sc.d_s[i] * silu;
+                sc.d_u[i] = sc.d_s[i] * ls.g3[i] * (sig * (1.0 + u * (1.0 - sig)));
             }
             // d_hn = d_u @ w1ᵀ + d_g3 @ w3ᵀ; weight grads.
-            matmul_bt(&mut s.d_h, &s.d_u, &params[off.w1..off.w1 + d * f], n, d, f);
-            matmul_bt(&mut s.d_res, &s.d_g3, &params[off.w3..off.w3 + d * f], n, d, f);
-            vecops::add_assign(&mut s.d_h, &s.d_res);
-            matmul_at_acc(&mut s.grad[off.w1..off.w1 + d * f], &ls.hn_mlp, &s.d_u, n, d, f);
-            matmul_at_acc(&mut s.grad[off.w3..off.w3 + d * f], &ls.hn_mlp, &s.d_g3, n, d, f);
+            matmul_bt(&mut sc.d_h, &sc.d_u, &params[off.w1..off.w1 + d * f], n, d, f);
+            matmul_bt(&mut sc.d_res, &sc.d_g3, &params[off.w3..off.w3 + d * f], n, d, f);
+            vecops::add_assign(&mut sc.d_h, &sc.d_res);
+            matmul_at_acc(&mut sc.grad[off.w1..off.w1 + d * f], &ls.hn_mlp, &sc.d_u, n, d, f);
+            matmul_at_acc(&mut sc.grad[off.w3..off.w3 + d * f], &ls.hn_mlp, &sc.d_g3, n, d, f);
             // RMSNorm backward at x_mid; residual adds d_x through.
             rmsnorm_backward(
-                &mut s.d_x,
-                &mut s.grad[off.mlp_norm..off.mlp_norm + d],
-                &s.d_h,
+                &mut sc.d_x,
+                &mut sc.grad[off.mlp_norm..off.mlp_norm + d],
+                &sc.d_h,
                 &ls.x_mid,
                 &ls.rinv_mlp,
                 &params[off.mlp_norm..off.mlp_norm + d],
@@ -727,25 +852,25 @@ impl NativeBackend {
 
             // ---- Attention block backward: x_mid = x_in + ctx@wo.
             // d_ctx = d_x @ woᵀ; g_wo += ctxᵀ @ d_x.
-            matmul_bt(&mut s.d_h, &s.d_x, &params[off.wo..off.wo + d * d], n, d, d);
-            matmul_at_acc(&mut s.grad[off.wo..off.wo + d * d], &ls.ctx, &s.d_x, n, d, d);
-            // Per (batch, head): softmax/score backward.
-            s.d_q.fill(0.0);
-            s.d_k.fill(0.0);
-            s.d_v.fill(0.0);
+            matmul_bt(&mut sc.d_h, &sc.d_x, &params[off.wo..off.wo + d * d], n, d, d);
+            matmul_at_acc(&mut sc.grad[off.wo..off.wo + d * d], &ls.ctx, &sc.d_x, n, d, d);
+            // Per (shard row, head): softmax/score backward.
+            sc.d_q.fill(0.0);
+            sc.d_k.fill(0.0);
+            sc.d_v.fill(0.0);
             for bi in 0..b {
                 for h in 0..nh {
                     let pb = &ls.probs
                         [(bi * nh + h) * t_len * t_len..(bi * nh + h + 1) * t_len * t_len];
                     // dP = d_ctx @ vᵀ ; d_v += Pᵀ @ d_ctx.
                     for t1 in 0..t_len {
-                        let dctx = &s.d_h[((bi * t_len + t1) * d + h * dh)..][..dh];
+                        let dctx = &sc.d_h[((bi * t_len + t1) * d + h * dh)..][..dh];
                         let prow = &pb[t1 * t_len..(t1 + 1) * t_len];
-                        let dprow = &mut s.d_p[t1 * t_len..(t1 + 1) * t_len];
+                        let dprow = &mut sc.d_p[t1 * t_len..(t1 + 1) * t_len];
                         for t2 in 0..=t1 {
                             let vrow = &ls.v[((bi * t_len + t2) * d + h * dh)..][..dh];
                             dprow[t2] = dot(dctx, vrow);
-                            let dvrow = &mut s.d_v[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            let dvrow = &mut sc.d_v[((bi * t_len + t2) * d + h * dh)..][..dh];
                             axpy(dvrow, prow[t2], dctx);
                         }
                         // dS = P ⊙ (dP − ⟨dP, P⟩) on the causal prefix.
@@ -762,31 +887,31 @@ impl NativeBackend {
                         for t2 in 0..=t1 {
                             let w = dprow[t2] * scale;
                             let krow = &ls.k[((bi * t_len + t2) * d + h * dh)..][..dh];
-                            let dqrow = &mut s.d_q[((bi * t_len + t1) * d + h * dh)..][..dh];
+                            let dqrow = &mut sc.d_q[((bi * t_len + t1) * d + h * dh)..][..dh];
                             axpy(dqrow, w, krow);
-                            let dkrow = &mut s.d_k[((bi * t_len + t2) * d + h * dh)..][..dh];
+                            let dkrow = &mut sc.d_k[((bi * t_len + t2) * d + h * dh)..][..dh];
                             axpy(dkrow, w, qrow);
                         }
                     }
                 }
             }
             // Undo RoPE (transpose rotation) on d_q/d_k.
-            self.rope(&mut s.d_q, -1.0);
-            self.rope(&mut s.d_k, -1.0);
+            self.rope(&mut sc.d_q, -1.0);
+            self.rope(&mut sc.d_k, -1.0);
             // d_hn = d_q@wqᵀ + d_k@wkᵀ + d_v@wvᵀ; weight grads.
-            matmul_bt(&mut s.d_h, &s.d_q, &params[off.wq..off.wq + d * d], n, d, d);
-            matmul_bt(&mut s.d_res, &s.d_k, &params[off.wk..off.wk + d * d], n, d, d);
-            vecops::add_assign(&mut s.d_h, &s.d_res);
-            matmul_bt(&mut s.d_res, &s.d_v, &params[off.wv..off.wv + d * d], n, d, d);
-            vecops::add_assign(&mut s.d_h, &s.d_res);
-            matmul_at_acc(&mut s.grad[off.wq..off.wq + d * d], &ls.hn_attn, &s.d_q, n, d, d);
-            matmul_at_acc(&mut s.grad[off.wk..off.wk + d * d], &ls.hn_attn, &s.d_k, n, d, d);
-            matmul_at_acc(&mut s.grad[off.wv..off.wv + d * d], &ls.hn_attn, &s.d_v, n, d, d);
+            matmul_bt(&mut sc.d_h, &sc.d_q, &params[off.wq..off.wq + d * d], n, d, d);
+            matmul_bt(&mut sc.d_res, &sc.d_k, &params[off.wk..off.wk + d * d], n, d, d);
+            vecops::add_assign(&mut sc.d_h, &sc.d_res);
+            matmul_bt(&mut sc.d_res, &sc.d_v, &params[off.wv..off.wv + d * d], n, d, d);
+            vecops::add_assign(&mut sc.d_h, &sc.d_res);
+            matmul_at_acc(&mut sc.grad[off.wq..off.wq + d * d], &ls.hn_attn, &sc.d_q, n, d, d);
+            matmul_at_acc(&mut sc.grad[off.wk..off.wk + d * d], &ls.hn_attn, &sc.d_k, n, d, d);
+            matmul_at_acc(&mut sc.grad[off.wv..off.wv + d * d], &ls.hn_attn, &sc.d_v, n, d, d);
             // RMSNorm backward at x_in; residual passthrough stays in d_x.
             rmsnorm_backward(
-                &mut s.d_x,
-                &mut s.grad[off.attn_norm..off.attn_norm + d],
-                &s.d_h,
+                &mut sc.d_x,
+                &mut sc.grad[off.attn_norm..off.attn_norm + d],
+                &sc.d_h,
                 x_in,
                 &ls.rinv_attn,
                 &params[off.attn_norm..off.attn_norm + d],
@@ -795,51 +920,103 @@ impl NativeBackend {
             );
         }
 
-        // Embedding scatter-add.
-        let gemb = &mut s.grad[lay.embed..lay.embed + v * d];
+        // Embedding scatter-add (private grad buffer — repeated token ids
+        // across shards never race).
+        let gemb = &mut sc.grad[lay.embed..lay.embed + v * d];
         for i in 0..n {
             let tok = tokens[i] as usize;
-            axpy(&mut gemb[tok * d..(tok + 1) * d], 1.0, &s.d_x[i * d..(i + 1) * d]);
+            axpy(&mut gemb[tok * d..(tok + 1) * d], 1.0, &sc.d_x[i * d..(i + 1) * d]);
         }
     }
 
-    /// Fused decoupled AdamW with bias correction (8-lane unrolled), same
-    /// formula as the Pallas kernel in python/compile/kernels/elementwise.
-    fn adamw(&self, st: &mut TrainState, grad: &[f32], lr: f32) {
-        let t = &self.spec.train;
-        let (b1, b2, eps, wd) =
-            (t.beta1 as f32, t.beta2 as f32, t.eps as f32, t.weight_decay as f32);
-        let step1 = (st.step + 1) as f64; // 1-indexed for bias correction
-        let bc1 = (1.0 - (t.beta1).powf(step1)) as f32;
-        let bc2 = (1.0 - (t.beta2).powf(step1)) as f32;
-        const LANES: usize = vecops::LANES;
-        let mut pc = st.params.chunks_exact_mut(LANES);
-        let mut mc = st.m.chunks_exact_mut(LANES);
-        let mut vc = st.v.chunks_exact_mut(LANES);
-        let mut gc = grad.chunks_exact(LANES);
-        for (((p, mm), vv), g) in (&mut pc).zip(&mut mc).zip(&mut vc).zip(&mut gc) {
-            for i in 0..LANES {
-                let m2 = b1 * mm[i] + (1.0 - b1) * g[i];
-                let v2 = b2 * vv[i] + (1.0 - b2) * g[i] * g[i];
-                mm[i] = m2;
-                vv[i] = v2;
-                let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + eps) + wd * p[i];
-                p[i] -= lr * upd;
+    /// Run forward (and optionally backward) over every shard — on the
+    /// compute pool when one is installed and there is more than one
+    /// shard, serially otherwise. The serial path boxes nothing, keeping
+    /// the steady-state train step allocation-free.
+    fn run_shards(
+        &self,
+        pool: Option<&WorkerPool>,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        shards: &mut [ShardScratch],
+        with_backward: bool,
+    ) {
+        match pool {
+            Some(tp) if shards.len() > 1 => {
+                let tasks: Vec<ScopedTask<'_>> = shards
+                    .iter_mut()
+                    .map(|sc| {
+                        Box::new(move || {
+                            self.forward_shard(params, tokens, targets, sc);
+                            if with_backward {
+                                self.backward_shard(params, tokens, targets, sc);
+                            }
+                        }) as ScopedTask<'_>
+                    })
+                    .collect();
+                tp.scoped(tasks);
+            }
+            _ => {
+                for sc in shards.iter_mut() {
+                    self.forward_shard(params, tokens, targets, sc);
+                    if with_backward {
+                        self.backward_shard(params, tokens, targets, sc);
+                    }
+                }
             }
         }
-        for (((p, mm), vv), g) in pc
-            .into_remainder()
-            .iter_mut()
-            .zip(mc.into_remainder().iter_mut())
-            .zip(vc.into_remainder().iter_mut())
-            .zip(gc.remainder())
-        {
-            let m2 = b1 * *mm + (1.0 - b1) * g;
-            let v2 = b2 * *vv + (1.0 - b2) * g * g;
-            *mm = m2;
-            *vv = v2;
-            let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + eps) + wd * *p;
-            *p -= lr * upd;
+    }
+
+    /// Fixed-order reduction of the per-shard loss sums: ascending shard
+    /// index, then one divide by the global token count.
+    fn reduce_loss(&self, shards: &[ShardScratch]) -> f32 {
+        let n = self.spec.model.batch_size * self.spec.model.seq_len;
+        let sum: f64 = shards.iter().map(|sc| sc.loss_sum).sum();
+        (sum / n as f64) as f32
+    }
+
+    /// AdamW over the whole flat state, parallelized over disjoint
+    /// LANES-aligned parameter spans when a pool is available. The
+    /// per-span work includes the shard-gradient reduction (see
+    /// [`adamw_span`]), so no merged gradient buffer ever materializes.
+    fn adamw(
+        &self,
+        st: &mut TrainState,
+        shards: &[ShardScratch],
+        lr: f32,
+        pool: Option<&WorkerPool>,
+    ) {
+        let t = &self.spec.train;
+        let step1 = (st.step + 1) as f64; // 1-indexed for bias correction
+        let coef = AdamCoef {
+            b1: t.beta1 as f32,
+            b2: t.beta2 as f32,
+            eps: t.eps as f32,
+            wd: t.weight_decay as f32,
+            bc1: (1.0 - (t.beta1).powf(step1)) as f32,
+            bc2: (1.0 - (t.beta2).powf(step1)) as f32,
+            lr,
+        };
+        match pool {
+            Some(tp) => {
+                let total = st.params.len();
+                let slots = tp.threads() + 1;
+                let chunk = total.div_ceil(slots).next_multiple_of(vecops::LANES);
+                let tasks: Vec<ScopedTask<'_>> = st
+                    .params
+                    .chunks_mut(chunk)
+                    .zip(st.m.chunks_mut(chunk))
+                    .zip(st.v.chunks_mut(chunk))
+                    .enumerate()
+                    .map(|(ci, ((p, mm), vv))| {
+                        Box::new(move || adamw_span(coef, p, mm, vv, shards, ci * chunk))
+                            as ScopedTask<'_>
+                    })
+                    .collect();
+                tp.scoped(tasks);
+            }
+            None => adamw_span(coef, &mut st.params, &mut st.m, &mut st.v, shards, 0),
         }
     }
 
@@ -907,8 +1084,12 @@ impl Backend for NativeBackend {
     fn create_worker(&self) -> anyhow::Result<WorkerHandle> {
         Ok(WorkerHandle::new(NativeWorker {
             state: TrainState::new(self.init.clone()),
-            scratch: Scratch::new(&self.spec.model, self.layout.total, true),
+            shards: make_shards(&self.spec.model, self.layout.total, true),
         }))
+    }
+
+    fn set_compute_pool(&self, pool: Option<Arc<WorkerPool>>) {
+        *self.pool.write().expect("compute pool poisoned") = pool;
     }
 
     fn train_step(
@@ -918,12 +1099,13 @@ impl Backend for NativeBackend {
         targets: &[i32],
     ) -> anyhow::Result<f32> {
         self.check_batch(tokens, targets)?;
+        let pool = self.compute_pool();
         let nw = self.worker_mut(w)?;
-        let (st, sc) = (&mut nw.state, &mut nw.scratch);
-        let loss = self.forward(&st.params, tokens, targets, sc);
-        self.backward(&st.params, tokens, targets, sc);
+        let NativeWorker { state: st, shards } = nw;
+        self.run_shards(pool.as_deref(), &st.params, tokens, targets, shards, true);
+        let loss = self.reduce_loss(shards);
         let lr = lr_schedule(st.step, &self.spec.train);
-        self.adamw(st, &sc.grad, lr);
+        self.adamw(st, shards, lr, pool.as_deref());
         st.step += 1;
         Ok(loss)
     }
@@ -931,19 +1113,19 @@ impl Backend for NativeBackend {
     fn eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> anyhow::Result<f32> {
         self.check_batch(tokens, targets)?;
         anyhow::ensure!(params.len() == self.layout.total, "param vector length mismatch");
-        let mut sc = self
+        let pool = self.compute_pool();
+        let mut shards = self
             .eval_scratch
             .lock()
             .expect("eval scratch pool poisoned")
             .pop()
-            .unwrap_or_else(|| {
-                Box::new(Scratch::new(&self.spec.model, self.layout.total, false))
-            });
-        let loss = self.forward(params, tokens, targets, &mut sc);
+            .unwrap_or_else(|| make_shards(&self.spec.model, self.layout.total, false));
+        self.run_shards(pool.as_deref(), params, tokens, targets, &mut shards, false);
+        let loss = self.reduce_loss(&shards);
         self.eval_scratch
             .lock()
             .expect("eval scratch pool poisoned")
-            .push(sc);
+            .push(shards);
         Ok(loss)
     }
 
@@ -1044,6 +1226,20 @@ mod tests {
         (tokens, targets)
     }
 
+    /// Serial forward over every shard; returns the reduced mean loss.
+    fn forward_all(
+        be: &NativeBackend,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        shards: &mut [ShardScratch],
+    ) -> f32 {
+        for sc in shards.iter_mut() {
+            be.forward_shard(params, tokens, targets, sc);
+        }
+        be.reduce_loss(shards)
+    }
+
     #[test]
     fn layout_tiles_and_matches_param_count() {
         let b = NativeBackend::preset("tiny").unwrap();
@@ -1070,14 +1266,37 @@ mod tests {
     }
 
     #[test]
+    fn shard_partition_covers_batch_exactly() {
+        for b in 1..=20usize {
+            let s_count = row_shards(b);
+            assert!(s_count >= 1 && s_count <= MAX_ROW_SHARDS && s_count <= b.max(1));
+            let mut covered = 0;
+            for s in 0..s_count {
+                let seq0 = s * b / s_count;
+                let seq1 = (s + 1) * b / s_count;
+                assert_eq!(seq0, covered, "batch {b}: shard {s} not contiguous");
+                assert!(seq1 > seq0, "batch {b}: empty shard {s}");
+                covered = seq1;
+            }
+            assert_eq!(covered, b, "batch {b}: shards do not cover the batch");
+        }
+    }
+
+    #[test]
     fn gradient_matches_finite_difference() {
         let be = NativeBackend::new(micro_spec()).unwrap();
         let (tokens, targets) = batch(&be, 5);
         let params = be.init_params().unwrap();
-        let mut sc = Scratch::new(&be.spec.model, be.layout.total, true);
-        let _ = be.forward(&params, &tokens, &targets, &mut sc);
-        be.backward(&params, &tokens, &targets, &mut sc);
-        let grad = sc.grad.clone();
+        let mut shards = make_shards(&be.spec.model, be.layout.total, true);
+        let _ = forward_all(&be, &params, &tokens, &targets, &mut shards);
+        for sc in shards.iter_mut() {
+            be.backward_shard(&params, &tokens, &targets, sc);
+        }
+        // Fixed-order reduction of the per-shard gradients.
+        let mut grad = vec![0.0f32; params.len()];
+        for sc in shards.iter() {
+            vecops::add_assign(&mut grad, &sc.grad);
+        }
         let mut rng = Rng::new(11, 0);
         let eps = 3e-3f32;
         let mut checked = 0;
@@ -1085,9 +1304,9 @@ mod tests {
             let i = rng.below(params.len() as u64) as usize;
             let mut pp = params.clone();
             pp[i] += eps;
-            let lp = be.forward(&pp, &tokens, &targets, &mut sc);
+            let lp = forward_all(&be, &pp, &tokens, &targets, &mut shards);
             pp[i] = params[i] - eps;
-            let lm = be.forward(&pp, &tokens, &targets, &mut sc);
+            let lm = forward_all(&be, &pp, &tokens, &targets, &mut shards);
             let fd = (lp - lm) / (2.0 * eps);
             let tol = 2e-2 * (1.0 + fd.abs().max(grad[i].abs()));
             assert!(
@@ -1144,6 +1363,33 @@ mod tests {
         let (l2, p2) = run();
         assert_eq!(l1, l2);
         assert_eq!(p1, p2);
+    }
+
+    /// The tentpole guarantee at the backend level: installing a compute
+    /// pool of any size changes nothing but wall-clock — losses, eval and
+    /// final parameters are bit-identical to the serial path.
+    #[test]
+    fn pooled_train_and_eval_match_serial_bitwise() {
+        let run = |threads: usize| {
+            let be = NativeBackend::preset("tiny").unwrap();
+            if threads > 1 {
+                be.set_compute_pool(Some(Arc::new(WorkerPool::new(threads))));
+            }
+            let (tokens, targets) = batch(&be, 21);
+            let mut w = be.create_worker().unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..6 {
+                losses.push(be.train_step(&mut w, &tokens, &targets).unwrap());
+            }
+            let mut st = TrainState::new(vec![0.0; be.param_count()]);
+            be.read_state(&w, &mut st).unwrap();
+            let eval = be.eval_loss(&st.params, &tokens, &targets).unwrap();
+            (losses, eval, st.params)
+        };
+        let serial = run(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(serial, run(threads), "threads={threads}");
+        }
     }
 
     #[test]

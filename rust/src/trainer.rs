@@ -19,6 +19,7 @@
 //! global allocator).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::checkpoint::ring::CheckpointRing;
@@ -36,7 +37,7 @@ use crate::data::Split;
 use crate::metrics::{Curve, Dist};
 use crate::network::topology::LinkUtil;
 use crate::network::WanSimulator;
-use crate::runtime::{Backend, TrainState, WorkerHandle};
+use crate::runtime::{row_shards, Backend, TrainState, WorkerHandle};
 use crate::simclock::VirtualClock;
 use crate::util::pool::BufferPool;
 use crate::util::threadpool::{ScopedTask, WorkerPool};
@@ -103,8 +104,10 @@ pub struct Trainer<'b> {
     /// full-size consensus-mean buffer for evaluation).
     bufs: BufferPool,
     /// Persistent worker threads (None when `cfg.parallel_workers` is off
-    /// or the host/run has nothing to parallelize).
-    threads: Option<WorkerPool>,
+    /// or the host/run has nothing to parallelize). Shared with the backend
+    /// (`set_compute_pool`) so worker fan-out and intra-step row sharding
+    /// split one pool via nested scopes instead of oversubscribing.
+    threads: Option<Arc<WorkerPool>>,
     /// Next local step to execute (1-based; advanced by [`Trainer::step_once`],
     /// restored from checkpoints).
     next_step: u32,
@@ -196,15 +199,25 @@ impl<'b> Trainer<'b> {
         let stats = SyncStats::new(frags.k());
         let threads = if cfg.parallel_workers {
             let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            let want = cfg.workers.max(cfg.eval_batches).min(hw).min(32);
-            if want > 1 {
-                Some(WorkerPool::new(want))
+            // Thread budget (DESIGN.md §Parallelism): an explicit
+            // `--threads N` wins, 0 means auto (host parallelism). Cap at
+            // what worker fan-out × intra-worker row shards can actually
+            // keep busy — nested scopes then split this one pool instead of
+            // oversubscribing the host with a second layer of threads.
+            let budget = if cfg.threads > 0 { cfg.threads } else { hw.min(32) };
+            let useful = cfg.workers.max(cfg.eval_batches) * row_shards(model.batch_size);
+            let size = budget.min(useful);
+            if size > 1 {
+                Some(Arc::new(WorkerPool::new(size)))
             } else {
                 None
             }
         } else {
             None
         };
+        // Hand the same pool to the backend for intra-step sharding; None
+        // resets whatever a previous trainer installed on a shared backend.
+        backend.set_compute_pool(threads.clone());
         let live = vec![true; cfg.workers];
         let step_batches =
             (0..cfg.workers).map(|_| Batch::empty(model.batch_size, model.seq_len)).collect();
@@ -421,7 +434,7 @@ impl<'b> Trainer<'b> {
             frags: &self.frags,
             stats: &mut self.stats,
             pool: &mut self.bufs,
-            threads: self.threads.as_ref(),
+            threads: self.threads.as_deref(),
             live: Some(&self.live),
         };
         self.strategy.post_step(step, &mut ctx)?;

@@ -5,8 +5,9 @@
 //! rust/benches/ (all `harness = false`).
 //!
 //! [`HotpathReport`] additionally persists kernel measurements to
-//! `BENCH_hotpath.json` next to Cargo.toml so the hot-path perf trajectory
-//! is machine-readable across PRs (see DESIGN.md §Hot path for the schema).
+//! `BENCH_hotpath.json` at the repository root so the hot-path perf
+//! trajectory is machine-readable (and committable as a baseline) across
+//! PRs (see DESIGN.md §Hot path for the schema).
 
 use std::hint::black_box as bb;
 use std::path::{Path, PathBuf};
@@ -134,9 +135,10 @@ impl HotpathReport {
         self.entries.push((op.to_string(), n, obj(kv)));
     }
 
-    /// `<crate root>/BENCH_hotpath.json`.
+    /// `<repo root>/BENCH_hotpath.json` — one directory above the crate, so
+    /// the committed perf-trajectory baseline sits at the repository root.
     pub fn default_path() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json")
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_hotpath.json")
     }
 
     /// Merge this report into `path`, replacing rows with matching (op, n).

@@ -4,24 +4,30 @@
 //! `std::thread::scope` on *every* lockstep round — thousands of
 //! spawn/join cycles per run. This pool spawns its threads once and reuses
 //! them for local train steps, CoCoDC's per-worker delay-compensation
-//! fan-out and parallel validation batches.
+//! fan-out, parallel validation batches and the native backend's
+//! intra-step row shards.
 //!
 //! [`WorkerPool::scoped`] gives `thread::scope` semantics on pooled
 //! threads: tasks may borrow from the caller's stack because the call
-//! blocks until every submitted task has finished (a guard decrements the
-//! completion count even on panic, and the first panic payload is re-thrown
-//! on the caller thread). While waiting, the caller helps drain the queue,
-//! so a pool of N threads actually applies N+1 workers and a task running
-//! on the caller can never deadlock the scope.
+//! blocks until every submitted task has finished (the completion count is
+//! decremented even on panic, and the first panic payload is re-thrown on
+//! the caller thread). A waiting caller never sleeps while work is
+//! queued: it steals and runs jobs from the shared queue until its own
+//! scope has quiesced, so a pool of N threads applies N+1 workers.
 //!
-//! Do not call [`WorkerPool::scoped`] from *inside* a pool task: nested
-//! scopes on the same pool can exhaust the threads and (with an empty
-//! queue) wait on tasks that can no longer be scheduled. The trainer only
-//! fans out from the coordinator thread.
+//! Nested scopes are supported: a scope opened from *inside* a pool task
+//! enqueues its sub-tasks on the same shared queue and the opening thread
+//! steals jobs while it waits — including jobs of other scopes. Every
+//! thread blocked in [`WorkerPool::scoped`] is therefore itself a worker,
+//! so the scope tree always has at least one runnable executor and cannot
+//! deadlock, even when every pool thread is already busy. The native
+//! backend relies on this to shard one worker's batch rows from within
+//! the trainer's worker-level fan-out.
 
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -41,8 +47,7 @@ struct Shared {
 }
 
 struct ScopeState {
-    remaining: Mutex<usize>,
-    done: Condvar,
+    remaining: AtomicUsize,
     panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
@@ -82,17 +87,18 @@ impl WorkerPool {
         self.handles.len()
     }
 
-    /// Run every task to completion, blocking the caller until all are done
-    /// (the caller participates in draining the queue). Panics inside tasks
-    /// are re-thrown here after the scope has fully quiesced.
+    /// Run every task to completion, blocking the caller until all are done.
+    /// While blocked the caller steals queued jobs (its own scope's or any
+    /// other's, so nested scopes make progress through blocked openers).
+    /// Panics inside tasks are re-thrown here after the scope has fully
+    /// quiesced.
     pub fn scoped<'scope>(&self, tasks: Vec<ScopedTask<'scope>>) {
         let n = tasks.len();
         if n == 0 {
             return;
         }
         let state = Arc::new(ScopeState {
-            remaining: Mutex::new(n),
-            done: Condvar::new(),
+            remaining: AtomicUsize::new(n),
             panic: Mutex::new(None),
         });
         {
@@ -109,33 +115,39 @@ impl WorkerPool {
                     std::mem::transmute::<ScopedTask<'scope>, ScopedTask<'static>>(task)
                 };
                 let st = Arc::clone(&state);
-                q.jobs.push_back(Box::new(move || run_one(task, &st)));
+                let sh = Arc::clone(&self.shared);
+                q.jobs.push_back(Box::new(move || run_one(task, &st, &sh)));
             }
             self.shared.available.notify_all();
         }
-        // Help drain the queue while waiting.
+        // Steal jobs while waiting. The `remaining` check happens under the
+        // queue lock, and the final decrement notifies `available` under the
+        // same lock, so a wakeup can never be lost between check and sleep.
         loop {
             let job = {
                 let mut q = self.shared.queue.lock().expect("pool queue poisoned");
-                q.jobs.pop_front()
+                loop {
+                    if state.remaining.load(Ordering::Acquire) == 0 {
+                        break None;
+                    }
+                    if let Some(job) = q.jobs.pop_front() {
+                        break Some(job);
+                    }
+                    q = self.shared.available.wait(q).expect("pool queue poisoned");
+                }
             };
             match job {
                 Some(job) => job(),
                 None => break,
             }
         }
-        let mut remaining = state.remaining.lock().expect("scope state poisoned");
-        while *remaining > 0 {
-            remaining = state.done.wait(remaining).expect("scope state poisoned");
-        }
-        drop(remaining);
         if let Some(payload) = state.panic.lock().expect("scope state poisoned").take() {
             resume_unwind(payload);
         }
     }
 }
 
-fn run_one(task: Job, st: &ScopeState) {
+fn run_one(task: Job, st: &ScopeState, shared: &Shared) {
     let result = catch_unwind(AssertUnwindSafe(task));
     if let Err(payload) = result {
         let mut slot = st.panic.lock().expect("scope state poisoned");
@@ -143,10 +155,13 @@ fn run_one(task: Job, st: &ScopeState) {
             *slot = Some(payload);
         }
     }
-    let mut remaining = st.remaining.lock().expect("scope state poisoned");
-    *remaining -= 1;
-    if *remaining == 0 {
-        st.done.notify_all();
+    if st.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Last task of the scope: wake every waiter so the opener (possibly
+        // asleep on `available` with an empty queue) can observe zero. The
+        // lock makes the notification ordered against the opener's
+        // check-then-sleep above.
+        let _q = shared.queue.lock().expect("pool queue poisoned");
+        shared.available.notify_all();
     }
 }
 
@@ -185,6 +200,8 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    use std::time::Duration;
 
     #[test]
     fn tasks_borrow_and_fill_disjoint_slots() {
@@ -247,6 +264,95 @@ mod tests {
         }));
         assert!(result.is_err());
         // The pool must still be usable after a panicked scope.
+        let done = AtomicUsize::new(0);
+        pool.scoped(vec![Box::new(|| {
+            done.fetch_add(1, Ordering::Relaxed);
+        }) as ScopedTask<'_>]);
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+
+    /// Regression: a scope opened from inside a pool task must complete even
+    /// when every pool thread is occupied by an outer task — the blocked
+    /// openers steal the nested jobs. Run under a watchdog so a deadlock
+    /// fails the test instead of hanging the suite.
+    #[test]
+    fn nested_scope_inside_pool_task_does_not_deadlock() {
+        let (tx, rx) = mpsc::channel();
+        let watched = std::thread::spawn(move || {
+            let pool = WorkerPool::new(2);
+            let mut out = vec![0usize; 4 * 8];
+            let outer: Vec<ScopedTask<'_>> = out
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    let pref = &pool;
+                    Box::new(move || {
+                        let inner: Vec<ScopedTask<'_>> = chunk
+                            .iter_mut()
+                            .enumerate()
+                            .map(|(i, slot)| {
+                                Box::new(move || *slot = ci * 100 + i) as ScopedTask<'_>
+                            })
+                            .collect();
+                        pref.scoped(inner);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.scoped(outer);
+            tx.send(out).expect("send watchdog result");
+        });
+        let out = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("nested scope deadlocked (watchdog timeout)");
+        watched.join().expect("watchdog thread panicked");
+        for (ci, chunk) in out.chunks(8).enumerate() {
+            for (i, v) in chunk.iter().enumerate() {
+                assert_eq!(*v, ci * 100 + i);
+            }
+        }
+    }
+
+    fn fanout(pool: &WorkerPool, depth: usize, counter: &AtomicUsize) {
+        if depth == 0 {
+            counter.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let tasks: Vec<ScopedTask<'_>> = (0..3)
+            .map(|_| Box::new(move || fanout(pool, depth - 1, counter)) as ScopedTask<'_>)
+            .collect();
+        pool.scoped(tasks);
+    }
+
+    /// Two levels of nesting on a single-thread pool: everything executes on
+    /// the caller + the one worker via job stealing.
+    #[test]
+    fn deeply_nested_scopes_on_tiny_pool() {
+        let (tx, rx) = mpsc::channel();
+        let watched = std::thread::spawn(move || {
+            let pool = WorkerPool::new(1);
+            let total = AtomicUsize::new(0);
+            fanout(&pool, 3, &total);
+            tx.send(total.load(Ordering::Relaxed)).expect("send watchdog result");
+        });
+        let total = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("nested scope deadlocked (watchdog timeout)");
+        watched.join().expect("watchdog thread panicked");
+        assert_eq!(total, 27);
+    }
+
+    /// A panic in a nested scope unwinds through the outer scope to the
+    /// original caller, and the pool stays usable.
+    #[test]
+    fn nested_panics_propagate_through_outer_scope() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let pref = &pool;
+            pool.scoped(vec![Box::new(move || {
+                pref.scoped(vec![Box::new(|| panic!("inner exploded")) as ScopedTask<'_>]);
+            }) as ScopedTask<'_>]);
+        }));
+        assert!(result.is_err());
         let done = AtomicUsize::new(0);
         pool.scoped(vec![Box::new(|| {
             done.fetch_add(1, Ordering::Relaxed);

@@ -10,7 +10,14 @@
 //!   (replaces the per-worker loops behind `allreduce::mean_pseudo_gradients*`),
 //! * [`fused_delay_comp`] / [`fused_delay_comp_into`] — Alg. 1 (Eqs. 4/7/8),
 //! * [`fused_outer_step`] — the Nesterov outer update (Eq. 2),
-//! * [`fused_alpha_blend`] — Streaming DiLoCo's mixing step (Eq. 3).
+//! * [`fused_alpha_blend`] — Streaming DiLoCo's mixing step (Eq. 3),
+//!
+//! plus the native backend's dense kernels: [`matmul`], [`matmul_bt`] and
+//! [`matmul_at_acc`] are register-blocked, cache-tiled rewrites of the
+//! seed triple loops (kept in [`reference`]), constrained to the exact
+//! per-element accumulation order of the originals so they are
+//! bit-identical — tests/native_parallel.rs asserts exact equality at
+//! odd (non-tile-multiple) shapes.
 //!
 //! Numerical contract: every fused/unrolled kernel performs the *same
 //! per-element operation sequence* as its scalar reference in
@@ -158,6 +165,172 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         total += x * y;
     }
     total
+}
+
+/// out[n,p] = a[n,m] @ b[m,p] — register-blocked, cache-tiled.
+///
+/// MR×NR output tiles accumulate in registers with a k-ascending inner
+/// loop, so each `b` row chunk is reused across MR output rows instead of
+/// re-streaming the whole `out` row once per k (the [`reference::matmul`]
+/// axpy form). Bit-identical to the reference: every output element is a
+/// single f32 accumulator summed over k in ascending order, exactly the
+/// per-element sequence `fill(0.0)` + repeated axpy produces.
+pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
+    debug_assert_eq!(out.len(), n * p);
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(b.len(), m * p);
+    const MR: usize = 4;
+    const NR: usize = 16;
+    let n_main = n - n % MR;
+    let p_main = p - p % NR;
+    for i0 in (0..n_main).step_by(MR) {
+        for c0 in (0..p_main).step_by(NR) {
+            let mut acc = [[0.0f32; NR]; MR];
+            for j in 0..m {
+                let brow = &b[j * p + c0..j * p + c0 + NR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = a[(i0 + r) * m + j];
+                    for c in 0..NR {
+                        accr[c] += av * brow[c];
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                out[(i0 + r) * p + c0..(i0 + r) * p + c0 + NR].copy_from_slice(accr);
+            }
+        }
+        // Column remainder: scalar k-ascending accumulators (same order).
+        for r in 0..MR {
+            let i = i0 + r;
+            for c in p_main..p {
+                let mut acc = 0.0f32;
+                for j in 0..m {
+                    acc += a[i * m + j] * b[j * p + c];
+                }
+                out[i * p + c] = acc;
+            }
+        }
+    }
+    // Row remainder: the reference axpy form (identical per-element order).
+    for i in n_main..n {
+        let row = &mut out[i * p..(i + 1) * p];
+        row.fill(0.0);
+        for j in 0..m {
+            axpy(row, a[i * m + j], &b[j * p..(j + 1) * p]);
+        }
+    }
+}
+
+/// out[n,m] = dout[n,p] @ bᵀ where b is [m,p] — blocked [`dot`] kernel.
+///
+/// MB×NB blocks of 8-lane accumulators walk the shared p dimension once,
+/// reusing every loaded `dout`/`b` chunk across the block. Bit-identical
+/// to [`reference::matmul_bt`]: each element keeps `LANES` independent
+/// lane accumulators over the `chunks_exact` prefix, sums them with
+/// `lanes.iter().sum()`, then adds the scalar remainder — exactly what
+/// [`dot`] computes.
+pub fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(dout.len(), n * p);
+    debug_assert_eq!(b.len(), m * p);
+    const MB: usize = 2;
+    const NB: usize = 4;
+    let n_main = n - n % MB;
+    let m_main = m - m % NB;
+    let p_chunks = p - p % LANES;
+    for i0 in (0..n_main).step_by(MB) {
+        for j0 in (0..m_main).step_by(NB) {
+            let mut lanes = [[[0.0f32; LANES]; NB]; MB];
+            for k0 in (0..p_chunks).step_by(LANES) {
+                for (r, lr) in lanes.iter_mut().enumerate() {
+                    let dch = &dout[(i0 + r) * p + k0..(i0 + r) * p + k0 + LANES];
+                    for (c, lc) in lr.iter_mut().enumerate() {
+                        let bch = &b[(j0 + c) * p + k0..(j0 + c) * p + k0 + LANES];
+                        for l in 0..LANES {
+                            lc[l] += dch[l] * bch[l];
+                        }
+                    }
+                }
+            }
+            for (r, lr) in lanes.iter().enumerate() {
+                for (c, lc) in lr.iter().enumerate() {
+                    let mut total: f32 = lc.iter().sum();
+                    for k in p_chunks..p {
+                        total += dout[(i0 + r) * p + k] * b[(j0 + c) * p + k];
+                    }
+                    out[(i0 + r) * m + j0 + c] = total;
+                }
+            }
+        }
+        // Column remainder rows of b: plain dot (same element sequence).
+        for r in 0..MB {
+            let i = i0 + r;
+            let drow = &dout[i * p..(i + 1) * p];
+            for j in m_main..m {
+                out[i * m + j] = dot(drow, &b[j * p..(j + 1) * p]);
+            }
+        }
+    }
+    for i in n_main..n {
+        let drow = &dout[i * p..(i + 1) * p];
+        for j in 0..m {
+            out[i * m + j] = dot(drow, &b[j * p..(j + 1) * p]);
+        }
+    }
+}
+
+/// gb[m,p] += aᵀ[m,n] @ dout[n,p] — register-blocked weight-gradient
+/// accumulation. The MR×NR gb tile is loaded once, accumulated over i in
+/// ascending order, and stored once. Bit-identical to
+/// [`reference::matmul_at_acc`]: per element the sequence is the initial
+/// gb value plus `a[i,j]·dout[i,c]` for i ascending — the same order the
+/// reference's repeated axpy performs against memory.
+pub fn matmul_at_acc(gb: &mut [f32], a: &[f32], dout: &[f32], n: usize, m: usize, p: usize) {
+    debug_assert_eq!(gb.len(), m * p);
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(dout.len(), n * p);
+    const MR: usize = 4;
+    const NR: usize = 16;
+    let m_main = m - m % MR;
+    let p_main = p - p % NR;
+    for j0 in (0..m_main).step_by(MR) {
+        for c0 in (0..p_main).step_by(NR) {
+            let mut acc = [[0.0f32; NR]; MR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                accr.copy_from_slice(&gb[(j0 + r) * p + c0..(j0 + r) * p + c0 + NR]);
+            }
+            for i in 0..n {
+                let drow = &dout[i * p + c0..i * p + c0 + NR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = a[i * m + j0 + r];
+                    for c in 0..NR {
+                        accr[c] += av * drow[c];
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                gb[(j0 + r) * p + c0..(j0 + r) * p + c0 + NR].copy_from_slice(accr);
+            }
+        }
+        // Column remainder: scalar i-ascending accumulators (same order).
+        for r in 0..MR {
+            let j = j0 + r;
+            for c in p_main..p {
+                let mut acc = gb[j * p + c];
+                for i in 0..n {
+                    acc += a[i * m + j] * dout[i * p + c];
+                }
+                gb[j * p + c] = acc;
+            }
+        }
+    }
+    // Row remainder of gb: the reference axpy form.
+    for i in 0..n {
+        let drow = &dout[i * p..(i + 1) * p];
+        for j in m_main..m {
+            axpy(&mut gb[j * p..(j + 1) * p], a[i * m + j], drow);
+        }
+    }
 }
 
 /// Euclidean norm (f64 accumulation for stability on large fragments).
@@ -517,6 +690,46 @@ pub mod reference {
     pub fn alpha_blend(x: &mut [f32], g: &[f32], alpha: f32) {
         for (xv, &gv) in x.iter_mut().zip(g) {
             *xv = (1.0 - alpha) * *xv + alpha * gv;
+        }
+    }
+
+    /// Seed `runtime/native.rs::matmul` (axpy inner loop, moved here
+    /// verbatim when the tiled kernel replaced it): out[n,p] = a[n,m] @
+    /// b[m,p]. Ground truth for the exact-equality tile property tests.
+    pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
+        debug_assert_eq!(out.len(), n * p);
+        debug_assert_eq!(a.len(), n * m);
+        debug_assert_eq!(b.len(), m * p);
+        for i in 0..n {
+            let row = &mut out[i * p..(i + 1) * p];
+            row.fill(0.0);
+            for j in 0..m {
+                super::axpy(row, a[i * m + j], &b[j * p..(j + 1) * p]);
+            }
+        }
+    }
+
+    /// Seed `runtime/native.rs::matmul_bt` (dot-product inner loop):
+    /// out[n,m] = dout[n,p] @ bᵀ where b is [m,p].
+    pub fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
+        debug_assert_eq!(out.len(), n * m);
+        for i in 0..n {
+            let drow = &dout[i * p..(i + 1) * p];
+            for j in 0..m {
+                out[i * m + j] = super::dot(drow, &b[j * p..(j + 1) * p]);
+            }
+        }
+    }
+
+    /// Seed `runtime/native.rs::matmul_at_acc` (weight-gradient
+    /// accumulation): gb[m,p] += aᵀ[m,n] @ dout[n,p].
+    pub fn matmul_at_acc(gb: &mut [f32], a: &[f32], dout: &[f32], n: usize, m: usize, p: usize) {
+        debug_assert_eq!(gb.len(), m * p);
+        for i in 0..n {
+            let drow = &dout[i * p..(i + 1) * p];
+            for j in 0..m {
+                super::axpy(&mut gb[j * p..(j + 1) * p], a[i * m + j], drow);
+            }
         }
     }
 }

@@ -6,15 +6,21 @@
 //!     the host backend, as in PR 1), and
 //!  2. *full native-backend train steps* — batch generation, the
 //!     transformer forward/backward/AdamW on resident state, and the sync
-//!     path, all through `Trainer::step_once`.
+//!     path, all through `Trainer::step_once`, and
+//!  3. serial `eval_loss` calls (the eval-scratch pool recycles the
+//!     backward-free shard sets), plus a constant-cost check for *pooled*
+//!     eval: row-shard fan-out boxes per-call queue traffic, so it cannot
+//!     be zero-alloc, but two identical measurement windows must allocate
+//!     the same amount — no steady-state growth.
 //!
 //! This file intentionally contains a single test (plus the allocator):
 //! libtest runs tests in one binary concurrently, and any neighbour test
-//! allocating during the measured window would poison the counter. The two
+//! allocating during the measured window would poison the counter. The
 //! measurements run sequentially inside it.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::coordinator::strategy::SyncCtx;
@@ -23,7 +29,7 @@ use cocodc::network::WanSimulator;
 use cocodc::runtime::{Backend, HostBackend, NativeBackend, WorkerHandle};
 use cocodc::simclock::VirtualClock;
 use cocodc::util::pool::BufferPool;
-use cocodc::util::Rng;
+use cocodc::util::{Rng, WorkerPool};
 use cocodc::Trainer;
 
 static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
@@ -180,8 +186,61 @@ fn native_train_steps_are_allocation_free() {
     );
 }
 
+fn native_eval_batch(backend: &NativeBackend, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let m = backend.model();
+    let mut rng = Rng::new(seed, 0);
+    let n = m.batch_size * m.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|_| rng.below(m.vocab_size as u64) as i32).collect();
+    let mut targets = tokens.clone();
+    targets.rotate_left(1);
+    (tokens, targets)
+}
+
+fn eval_allocations_reach_steady_state() {
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let params = backend.init_params().unwrap();
+    let (tokens, targets) = native_eval_batch(&backend, 11);
+
+    // Serial eval: once the first call has built its backward-free shard
+    // set, the eval-scratch pool recycles it — zero allocations after.
+    for _ in 0..2 {
+        backend.eval_loss(&params, &tokens, &targets).unwrap();
+    }
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..16 {
+        backend.eval_loss(&params, &tokens, &targets).unwrap();
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} heap allocations across 16 steady-state serial evals",
+        after - before
+    );
+
+    // Pooled eval boxes one task per row shard per call (scope queue
+    // traffic, not model state), so zero is unattainable — but the cost
+    // must be *constant*: identical windows, identical allocation counts.
+    backend.set_compute_pool(Some(Arc::new(WorkerPool::new(2))));
+    for _ in 0..6 {
+        backend.eval_loss(&params, &tokens, &targets).unwrap();
+    }
+    let window = || {
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        for _ in 0..16 {
+            backend.eval_loss(&params, &tokens, &targets).unwrap();
+        }
+        ALLOCATIONS.load(Ordering::SeqCst) - before
+    };
+    let w1 = window();
+    let w2 = window();
+    assert_eq!(w1, w2, "pooled eval allocations grew between identical windows");
+    backend.set_compute_pool(None);
+}
+
 #[test]
 fn hot_paths_are_allocation_free_in_steady_state() {
     sync_cycles_are_allocation_free();
     native_train_steps_are_allocation_free();
+    eval_allocations_reach_steady_state();
 }

@@ -1,0 +1,147 @@
+//! Intra-step data parallelism: the determinism and kernel-equivalence
+//! contracts of DESIGN.md §Parallelism.
+//!
+//!  1. Full trainer runs over all three sync methods produce bit-identical
+//!     eval curves and final train losses for `--threads` 1/2/4/8 — shard
+//!     count and reduction order are functions of the model shape alone,
+//!     never of the pool size.
+//!  2. A pooled run nests scopes (worker fan-out outside, row shards
+//!     inside) on a pool smaller than the total task count; a watchdog
+//!     turns a nested-scope deadlock into a test failure instead of a hung
+//!     suite.
+//!  3. The tiled matmul kernels are *exactly* equal (bit-identical, not
+//!     1-ulp) to the seed triple-loop references at awkward shapes that
+//!     exercise every register-tile remainder path.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use cocodc::config::{MethodKind, RunConfig, TauMode};
+use cocodc::runtime::NativeBackend;
+use cocodc::util::proptest::forall;
+use cocodc::util::vecops::{self, reference};
+use cocodc::Trainer;
+
+/// One short tiny-preset run; returns the eval curve and final train loss.
+/// Everything except `threads`/`parallel_workers` is held fixed, so any
+/// difference between return values is the pool changing the math.
+fn run_curve(method: MethodKind, threads: usize) -> (Vec<(u32, f64)>, f32) {
+    let backend = NativeBackend::preset("tiny").unwrap();
+    let mut cfg = RunConfig::paper("tiny", method);
+    cfg.workers = 2;
+    cfg.h_steps = 8;
+    cfg.tau = TauMode::Fixed { tau: 2 };
+    cfg.total_steps = 24;
+    cfg.eval_every = 6;
+    cfg.eval_batches = 2;
+    cfg.threads = threads;
+    cfg.parallel_workers = threads > 1;
+    let mut tr = Trainer::new(&backend, cfg).unwrap();
+    let out = tr.run().unwrap();
+    let curve = out.curve.points.iter().map(|p| (p.step, p.loss)).collect();
+    (curve, out.final_train_loss)
+}
+
+#[test]
+fn thread_count_never_changes_the_math() {
+    for method in MethodKind::all() {
+        let serial = run_curve(method, 1);
+        assert!(serial.0.len() >= 3, "{method:?}: curve too short to be meaningful");
+        assert!(serial.1.is_finite());
+        for threads in [2usize, 4, 8] {
+            let pooled = run_curve(method, threads);
+            assert_eq!(
+                serial, pooled,
+                "{method:?}: --threads {threads} diverged from --threads 1"
+            );
+        }
+    }
+}
+
+/// Regression for the nested-scope deadlock: 2 workers × 2 row shards × 2
+/// parallel eval batches on a 2-thread pool forces row-shard scopes to open
+/// from inside already-running pool tasks with no idle thread left — only
+/// job stealing by the blocked openers lets the run finish.
+#[test]
+fn pooled_run_with_nested_scopes_terminates() {
+    let (tx, rx) = mpsc::channel();
+    let watched = std::thread::spawn(move || {
+        let out = run_curve(MethodKind::Cocodc, 2);
+        tx.send(out).expect("send watchdog result");
+    });
+    let (curve, _) = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("pooled trainer run deadlocked (watchdog timeout)");
+    watched.join().expect("watchdog thread panicked");
+    assert!(!curve.is_empty());
+}
+
+/// Shapes covering every tile remainder: unit dims, sub-tile dims, exact
+/// tile multiples, odd primes straddling MR/NR/LANES boundaries.
+const SHAPES: [(usize, usize, usize); 8] = [
+    (1, 1, 1),
+    (2, 3, 5),
+    (5, 7, 9),
+    (8, 8, 8),
+    (13, 17, 19),
+    (33, 9, 40),
+    (6, 64, 66),
+    (23, 31, 29),
+];
+
+#[test]
+fn tiled_matmul_bit_identical_to_reference() {
+    forall(8, |rng| {
+        for &(n, m, p) in &SHAPES {
+            let a = rng.f32_vec(n * m, 1.0);
+            let b = rng.f32_vec(m * p, 1.0);
+            let mut got = vec![f32::NAN; n * p];
+            let mut want = vec![f32::NAN; n * p];
+            vecops::matmul(&mut got, &a, &b, n, m, p);
+            reference::matmul(&mut want, &a, &b, n, m, p);
+            if got != want {
+                return Err(format!("matmul {n}x{m}x{p} not bit-identical"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_matmul_bt_bit_identical_to_reference() {
+    forall(8, |rng| {
+        for &(n, m, p) in &SHAPES {
+            let dout = rng.f32_vec(n * p, 1.0);
+            let b = rng.f32_vec(m * p, 1.0);
+            let mut got = vec![f32::NAN; n * m];
+            let mut want = vec![f32::NAN; n * m];
+            vecops::matmul_bt(&mut got, &dout, &b, n, m, p);
+            reference::matmul_bt(&mut want, &dout, &b, n, m, p);
+            if got != want {
+                return Err(format!("matmul_bt {n}x{m}x{p} not bit-identical"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_matmul_at_acc_bit_identical_to_reference() {
+    forall(8, |rng| {
+        for &(n, m, p) in &SHAPES {
+            let a = rng.f32_vec(n * m, 1.0);
+            let dout = rng.f32_vec(n * p, 1.0);
+            // Accumulate into a shared non-zero starting buffer: the kernel
+            // adds into gb, and the initial value is part of the contract.
+            let init = rng.f32_vec(m * p, 1.0);
+            let mut got = init.clone();
+            let mut want = init;
+            vecops::matmul_at_acc(&mut got, &a, &dout, n, m, p);
+            reference::matmul_at_acc(&mut want, &a, &dout, n, m, p);
+            if got != want {
+                return Err(format!("matmul_at_acc {n}x{m}x{p} not bit-identical"));
+            }
+        }
+        Ok(())
+    });
+}
