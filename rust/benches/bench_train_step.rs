@@ -1,10 +1,11 @@
 //! Bench: train/eval step latency.
 //!
 //! Native section (always runs, zero artifacts needed): serial vs
-//! row-sharded `train_step` on 1/2/4/8 pool threads, plus the tiled matmul
-//! kernels against their seed triple-loop references — the
-//! `train_step_sharded*` and `matmul_*` perf-trajectory rows of
-//! BENCH_hotpath.json.
+//! 2D-sharded `train_step` on 1/2/4/8 pool threads at batch 8 (row-shard
+//! dominated) and batch 1 (column-shard only), plus the tiled matmul
+//! kernels and the fused softmax–cross-entropy against their seed
+//! references — the `train_step_sharded*`, `train_step_b1_*`, `matmul_*`
+//! and `softmax_xent_*` perf-trajectory rows of BENCH_hotpath.json.
 //!
 //! PJRT section (skipped without `make artifacts`): step latency per
 //! preset, serial vs 4 parallel workers — the L3-visible cost of the L2+L1
@@ -97,6 +98,72 @@ fn bench_native(report: &mut HotpathReport, budget: Duration) {
         step_row(report, &format!("train_step_sharded{threads}"), n, &r, &serial);
     }
     be.set_compute_pool(None);
+}
+
+/// Batch-1: row sharding is pinned at one shard, so any scaling here comes
+/// purely from the column axis (vocab/d_ff/d_model output-column chunks).
+fn bench_native_b1(report: &mut HotpathReport, budget: Duration) {
+    let mut spec = bench_spec();
+    spec.name = "bench1".into();
+    spec.model.batch_size = 1;
+    let be = NativeBackend::new(spec).expect("native backend");
+    let n = be.param_count();
+    let (tokens, targets) = batch(be.model(), 2);
+    println!("-- native train_step (P={n}, batch 1 -> column shards only) --");
+
+    let mut w = be.create_worker().expect("worker");
+    let serial = bench("[native] train_step b1 serial", 3, budget, || {
+        black_box(be.train_step(&mut w, &tokens, &targets).unwrap());
+    });
+    step_row(report, "train_step_b1_serial", n, &serial, &serial);
+
+    for threads in [1usize, 2, 4, 8] {
+        be.set_compute_pool(Some(Arc::new(WorkerPool::new(threads))));
+        let mut w = be.create_worker().expect("worker");
+        let r = bench(&format!("[native] train_step b1 sharded x{threads}"), 3, budget, || {
+            black_box(be.train_step(&mut w, &tokens, &targets).unwrap());
+        });
+        step_row(report, &format!("train_step_b1_sharded{threads}"), n, &r, &serial);
+    }
+    be.set_compute_pool(None);
+}
+
+/// Fused single-sweep softmax–cross-entropy vs the multi-sweep reference
+/// twin at the bench LM-head shape. Both mutate logits in place, so every
+/// iteration restores from a pristine copy (same cost in both arms).
+fn bench_softmax_xent(report: &mut HotpathReport, budget: Duration) {
+    let (rows, v) = (256usize, 256usize);
+    let key = rows * v;
+    let mut rng = Rng::new(11, 0);
+    let pristine: Vec<f32> =
+        (0..rows * v).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect();
+    let targets: Vec<i32> = (0..rows).map(|_| rng.below(v as u64) as i32).collect();
+    let inv_n = 1.0 / rows as f32;
+    println!("-- fused softmax-xent vs multi-sweep reference ({rows}x{v}) --");
+
+    let mut logits = pristine.clone();
+    let rf = bench("[softmax_xent] fused", 3, budget, || {
+        logits.copy_from_slice(&pristine);
+        black_box(vecops::softmax_xent(black_box(&mut logits), &targets, v, inv_n, true));
+    });
+    let rr = bench("[softmax_xent] reference", 3, budget, || {
+        logits.copy_from_slice(&pristine);
+        black_box(reference::softmax_xent_split(
+            black_box(&mut logits),
+            &targets,
+            v,
+            inv_n,
+            true,
+        ));
+    });
+    let bytes = (rows * v * 4) as f64;
+    report.push("softmax_xent_fused", key, bytes, &rf);
+    report.push("softmax_xent_reference", key, bytes, &rr);
+    report.push_speedup(
+        "softmax_xent_fused_speedup",
+        key,
+        rr.mean.as_secs_f64() / rf.mean.as_secs_f64(),
+    );
 }
 
 fn bench_matmuls(report: &mut HotpathReport, budget: Duration) {
@@ -217,7 +284,9 @@ fn main() {
     let budget = Duration::from_secs(1);
     let mut report = HotpathReport::new();
     bench_native(&mut report, budget);
+    bench_native_b1(&mut report, budget);
     bench_matmuls(&mut report, budget);
+    bench_softmax_xent(&mut report, budget);
     bench_pjrt(Duration::from_secs(2));
     let path = HotpathReport::default_path();
     report.write(&path).expect("write BENCH_hotpath.json");

@@ -22,4 +22,6 @@ pub use backend::{load_backend, Backend, BackendKind, HostBackend, WorkerHandle}
 pub use engine::{Engine, PjrtBackend, TrainState};
 pub use marshal::{LiteralCache, MarshalStats};
 pub use meta::{FragmentMeta, LeafMeta, Meta, ModelMeta, TrainMeta};
-pub use native::{lr_schedule, row_shards, NativeBackend, NativeSpec};
+pub use native::{
+    col_shards, intra_step_units, lr_schedule, row_shards, NativeBackend, NativeSpec,
+};

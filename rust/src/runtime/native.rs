@@ -18,11 +18,19 @@
 //! gradient buffer), so forward/backward over shards is embarrassingly
 //! parallel; when a compute pool is installed via
 //! `Backend::set_compute_pool` the shards run on pool threads (a *nested*
-//! scope when the trainer already fanned out per worker). All reductions
+//! scope when the trainer already fanned out per worker). A second,
+//! orthogonal axis makes batch-1 runs scale: inside one shard, every
+//! dense matmul (QKV/O projections, MLP w1/w3/w2, the LM head), the
+//! embedding gather/scatter and the fused softmax–cross-entropy are
+//! partitioned over *output columns* into [`col_shards`] fixed chunks —
+//! again shape-only, never thread-count-dependent — dispatched on the
+//! same pool whenever threads outnumber the row tasks. All reductions
 //! are fixed-order: the loss is the ascending-shard sum of per-shard f64
-//! sums, and AdamW folds the per-element shard-gradient sum into its
-//! update loop — the identical code runs serial and pooled, so results
-//! are bit-identical for any `--threads` value.
+//! sums (each itself an ascending-chunk combine, see
+//! [`softmax_xent_cols`]), and AdamW folds the per-element
+//! shard-gradient sum into its update loop — the identical arithmetic
+//! runs serial and pooled, so results are bit-identical for any
+//! `--threads` value.
 //!
 //! Resident-state discipline (DESIGN.md §Backend): each worker owns its
 //! flat (θ, m, v, step) *and* all shard scratch, allocated once at
@@ -43,7 +51,7 @@ use crate::runtime::backend::{validated_rows, Backend, WorkerHandle};
 use crate::runtime::engine::TrainState;
 use crate::runtime::meta::{LeafMeta, ModelMeta, TrainMeta};
 use crate::util::threadpool::{ScopedTask, WorkerPool};
-use crate::util::vecops::{self, axpy, dot, matmul, matmul_at_acc, matmul_bt};
+use crate::util::vecops::{self, axpy, dot};
 use crate::util::Rng;
 
 const RMS_EPS: f32 = 1e-6;
@@ -61,6 +69,72 @@ pub const MAX_ROW_SHARDS: usize = 8;
 /// crosses a shard boundary.
 pub fn row_shards(batch_size: usize) -> usize {
     batch_size.clamp(1, MAX_ROW_SHARDS)
+}
+
+/// Minimum output columns per column chunk: below one 16-float tile the
+/// per-job dispatch overhead beats the matmul work saved (and the tiled
+/// kernels' NR=16 main loop would never engage).
+pub const MIN_COL_CHUNK: usize = 16;
+
+/// Upper bound on column chunks per operator (mirrors [`MAX_ROW_SHARDS`]).
+pub const MAX_COL_SHARDS: usize = 8;
+
+/// Number of column chunks a `cols`-wide operator output is split into.
+/// A function of the width only — never the thread count — so the chunk
+/// grid, and with it every fixed-order cross-chunk combine in
+/// [`softmax_xent_cols`], is identical for any `--threads` value.
+pub fn col_shards(cols: usize) -> usize {
+    (cols / MIN_COL_CHUNK).clamp(1, MAX_COL_SHARDS)
+}
+
+/// Column range of chunk `s` out of `shards` over a `cols`-wide output:
+/// contiguous, sized as evenly as integer division allows.
+pub fn col_chunk(cols: usize, shards: usize, s: usize) -> (usize, usize) {
+    (s * cols / shards, (s + 1) * cols / shards)
+}
+
+/// Independent work units one worker's train step exposes to the pool:
+/// the 2D partition of row shards × the widest operator's column chunks.
+/// The trainer's thread budget multiplies its worker fan-out by this, so
+/// batch-1 runs (one row shard) still claim threads for column chunks.
+pub fn intra_step_units(m: &ModelMeta) -> usize {
+    row_shards(m.batch_size) * col_shards(m.vocab_size.max(m.d_ff).max(m.d_model))
+}
+
+/// A raw mutable base pointer smuggled into the `Fn` column-chunk
+/// closures of [`dispatch`]. Soundness rests on the `*_cols_ptr`
+/// contracts: every job materializes references only inside its own
+/// disjoint column range of the target buffer.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: see the struct docs — disjointness is the caller's contract.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run `count` column-chunk jobs: boxed scoped tasks on the pool when one
+/// is handed in, a plain ascending inline loop (no allocation) otherwise.
+/// Jobs must write disjoint output ranges; their arithmetic never depends
+/// on which thread runs them, so pool presence is pure scheduling.
+fn dispatch<F: Fn(usize) + Send + Sync>(pool: Option<&WorkerPool>, count: usize, f: F) {
+    match pool {
+        Some(tp) if count > 1 => {
+            let fr = &f;
+            let tasks: Vec<ScopedTask<'_>> =
+                (0..count).map(|j| Box::new(move || fr(j)) as ScopedTask<'_>).collect();
+            tp.scoped(tasks);
+        }
+        _ => {
+            for j in 0..count {
+                f(j);
+            }
+        }
+    }
 }
 
 /// Full specification of a native model + optimizer.
@@ -311,6 +385,168 @@ fn rmsnorm_backward(
 }
 
 // ---------------------------------------------------------------------
+// Column-chunked softmax–cross-entropy
+// ---------------------------------------------------------------------
+
+/// Scratch for [`softmax_xent_cols`]: per-chunk partials plus the combined
+/// per-row statistics, sized for `n` rows at the [`col_shards`]`(v)` grid.
+#[derive(Debug)]
+pub struct XentScratch {
+    /// Per-(chunk, row) partial maxima, chunk-major [C·n].
+    cmax: Vec<f32>,
+    /// Per-(chunk, row) f64 partial partition sums, chunk-major [C·n].
+    zpart: Vec<f64>,
+    /// Combined per-row maxima [n].
+    mx: Vec<f32>,
+    /// Combined per-row f64 partition sums [n].
+    z: Vec<f64>,
+    /// Target logits, saved before the exp phase overwrites them [n].
+    tgt: Vec<f32>,
+}
+
+impl XentScratch {
+    pub fn new(n: usize, v: usize) -> XentScratch {
+        let c = col_shards(v);
+        XentScratch {
+            cmax: vec![0.0; c * n],
+            zpart: vec![0.0; c * n],
+            mx: vec![0.0; n],
+            z: vec![0.0; n],
+            tgt: vec![0.0; n],
+        }
+    }
+}
+
+/// Fused softmax–cross-entropy over `targets.len()` rows of `v` logits,
+/// column-chunked at the shape-only [`col_shards`]`(v)` grid: per-chunk
+/// maxima and f64 partition sums run (possibly pooled) per chunk, every
+/// cross-chunk combine runs serially in ascending-chunk order, and the
+/// grad phase leaves `logits` holding the cross-entropy dlogits (softmax
+/// scaled by `inv_n`, `inv_n` subtracted at each target). Returns the
+/// summed negative log-likelihood in f64.
+///
+/// Determinism: the grid never depends on the pool, and max / f64-sum
+/// combines are fixed-order, so the result is bit-identical for any
+/// `--threads` value — and exactly equal to the single-sweep
+/// [`vecops::softmax_xent`] at one chunk (within 1 ulp otherwise, from
+/// the f64 reassociation of z alone; tests/native_parallel.rs).
+pub fn softmax_xent_cols(
+    pool: Option<&WorkerPool>,
+    logits: &mut [f32],
+    targets: &[i32],
+    v: usize,
+    inv_n: f32,
+    grad: bool,
+    xs: &mut XentScratch,
+) -> f64 {
+    let n = targets.len();
+    debug_assert_eq!(logits.len(), n * v);
+    let cc = col_shards(v);
+    debug_assert_eq!(xs.cmax.len(), cc * n);
+    // Save the target logits before the exp phase overwrites them.
+    for (r, &t) in targets.iter().enumerate() {
+        xs.tgt[r] = logits[r * v + t as usize];
+    }
+    // Phase 1: per-chunk row maxima.
+    {
+        let cm = SendPtr(xs.cmax.as_mut_ptr());
+        let lg = &*logits;
+        dispatch(pool, cc, |c| {
+            let (c0, c1) = col_chunk(v, cc, c);
+            // SAFETY: chunk c writes only its own [c·n, (c+1)·n) window.
+            let out = unsafe { std::slice::from_raw_parts_mut(cm.0.add(c * n), n) };
+            vecops::softmax_colmax(lg, v, c0, c1, out);
+        });
+    }
+    // Serial ascending-chunk max combine (exact for any grid).
+    for r in 0..n {
+        let mut mx = f32::NEG_INFINITY;
+        for c in 0..cc {
+            let x = xs.cmax[c * n + r];
+            if x > mx {
+                mx = x;
+            }
+        }
+        xs.mx[r] = mx;
+    }
+    // Phase 2: exp in place + per-chunk f64 partial partition sums.
+    {
+        let lg = SendPtr(logits.as_mut_ptr());
+        let zp = SendPtr(xs.zpart.as_mut_ptr());
+        let mx = &xs.mx;
+        dispatch(pool, cc, |c| {
+            let (c0, c1) = col_chunk(v, cc, c);
+            // SAFETY: disjoint logits columns; disjoint zpart windows.
+            unsafe {
+                let out = std::slice::from_raw_parts_mut(zp.0.add(c * n), n);
+                vecops::softmax_expsum_ptr(lg.0, n, v, c0, c1, mx, out);
+            }
+        });
+    }
+    // Serial ascending-chunk f64 sum combine + loss.
+    let mut loss = 0.0f64;
+    for r in 0..n {
+        let mut z = 0.0f64;
+        for c in 0..cc {
+            z += xs.zpart[c * n + r];
+        }
+        xs.z[r] = z;
+        loss += xs.mx[r] as f64 + z.ln() - xs.tgt[r] as f64;
+    }
+    // Phase 3: scale the in-place exp values into dlogits.
+    if grad {
+        let lg = SendPtr(logits.as_mut_ptr());
+        let z = &xs.z;
+        dispatch(pool, cc, |c| {
+            let (c0, c1) = col_chunk(v, cc, c);
+            // SAFETY: disjoint logits columns.
+            unsafe { vecops::softmax_grad_ptr(lg.0, targets, v, c0, c1, z, inv_n) }
+        });
+    }
+    loss
+}
+
+/// Embedding gather restricted to columns [c0, c1): x0[i, c0..c1) =
+/// embed[tokens[i], c0..c1). Pure copies — exact for any column grid.
+///
+/// # Safety
+///
+/// `x0` points to an n×d buffer; concurrent calls must use disjoint
+/// column ranges.
+unsafe fn gather_cols(x0: *mut f32, embed: &[f32], tokens: &[i32], d: usize, c0: usize, c1: usize) {
+    for (i, &tok) in tokens.iter().enumerate() {
+        let dst = std::slice::from_raw_parts_mut(x0.add(i * d + c0), c1 - c0);
+        dst.copy_from_slice(&embed[tok as usize * d + c0..tok as usize * d + c1]);
+    }
+}
+
+/// Embedding scatter-add restricted to columns [c0, c1):
+/// gemb[tokens[i], c0..c1) += d_x[i, c0..c1), i ascending. Repeated token
+/// ids accumulate per element in the same i-ascending order for any
+/// column grid, so any chunking is bit-identical to the full-width sweep.
+///
+/// # Safety
+///
+/// `gemb` points to a v×d buffer; concurrent calls must use disjoint
+/// column ranges (rows may repeat — columns are the partition axis).
+unsafe fn scatter_add_cols(
+    gemb: *mut f32,
+    d_x: &[f32],
+    tokens: &[i32],
+    d: usize,
+    c0: usize,
+    c1: usize,
+) {
+    for (i, &tok) in tokens.iter().enumerate() {
+        let dst = std::slice::from_raw_parts_mut(gemb.add(tok as usize * d + c0), c1 - c0);
+        let src = &d_x[i * d + c0..i * d + c1];
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a += b;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // ShardScratch: every buffer one row shard's forward+backward needs
 // ---------------------------------------------------------------------
 
@@ -345,11 +581,13 @@ struct ShardScratch {
     layers: Vec<LayerScratch>,
     xf: Vec<f32>,      // final normed [n·D]
     rinv_f: Vec<f32>,  // [n]
-    logits: Vec<f32>,  // [n·V]; reused in place as dlogits in backward
+    logits: Vec<f32>,  // [n·V]; left holding dlogits when forward runs with grad
+    xent: XentScratch, // chunked softmax–xent partials/combines
     // backward-only (shared across layers)
     grad: Vec<f32>,    // [P]
     d_x: Vec<f32>,     // [n·D]
     d_res: Vec<f32>,   // [n·D]
+    d_res2: Vec<f32>,  // [n·D] third summand of the QKV-backward scope
     d_h: Vec<f32>,     // [n·D]
     d_q: Vec<f32>,     // [n·D]
     d_k: Vec<f32>,     // [n·D]
@@ -399,9 +637,11 @@ impl ShardScratch {
             xf: vec![0.0; n * d],
             rinv_f: vec![0.0; n],
             logits: vec![0.0; n * v],
+            xent: XentScratch::new(n, v),
             grad: bw(total),
             d_x: bw(n * d),
             d_res: bw(n * d),
+            d_res2: bw(n * d),
             d_h: bw(n * d),
             d_q: bw(n * d),
             d_k: bw(n * d),
@@ -617,13 +857,18 @@ impl NativeBackend {
     /// `tokens`/`targets` are the *full* batch; the shard's slice is cut
     /// here. The shard's un-normalized f64 token-loss sum lands in
     /// `sc.loss_sum`; the caller reduces shard sums in ascending order and
-    /// divides once by the global token count.
+    /// divides once by the global token count. With `grad`, the fused
+    /// softmax–xent leaves `sc.logits` holding dlogits for
+    /// [`NativeBackend::backward_shard`]. `pool` parallelizes the dense
+    /// operators over column chunks (pure scheduling — see [`dispatch`]).
     fn forward_shard(
         &self,
+        pool: Option<&WorkerPool>,
         params: &[f32],
         tokens: &[i32],
         targets: &[i32],
         sc: &mut ShardScratch,
+        grad: bool,
     ) {
         let m = &self.spec.model;
         let lay = &self.layout;
@@ -635,12 +880,17 @@ impl NativeBackend {
         let targets = &targets[r0..r0 + n];
         let dh = d / nh;
         let scale = 1.0 / (dh as f32).sqrt();
+        let (cd, cf, cv) = (col_shards(d), col_shards(f), col_shards(v));
 
-        // Embedding lookup.
+        // Embedding gather, column-chunked.
         let embed = &params[lay.embed..lay.embed + v * d];
-        for i in 0..n {
-            let tok = tokens[i] as usize;
-            sc.x0[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        {
+            let x0 = SendPtr(sc.x0.as_mut_ptr());
+            dispatch(pool, cd, |c| {
+                let (c0, c1) = col_chunk(d, cd, c);
+                // SAFETY: disjoint x0 columns per job.
+                unsafe { gather_cols(x0.0, embed, tokens, d, c0, c1) }
+            });
         }
 
         for l in 0..m.n_layers {
@@ -659,9 +909,28 @@ impl NativeBackend {
                 n,
                 d,
             );
-            matmul(&mut ls.q, &ls.hn_attn, &params[off.wq..off.wq + d * d], n, d, d);
-            matmul(&mut ls.k, &ls.hn_attn, &params[off.wk..off.wk + d * d], n, d, d);
-            matmul(&mut ls.v, &ls.hn_attn, &params[off.wv..off.wv + d * d], n, d, d);
+            // QKV projections: one scope, 3·cd disjoint (buffer, column
+            // range) jobs.
+            {
+                let q = SendPtr(ls.q.as_mut_ptr());
+                let k = SendPtr(ls.k.as_mut_ptr());
+                let vv = SendPtr(ls.v.as_mut_ptr());
+                let hn = &ls.hn_attn;
+                let wq = &params[off.wq..off.wq + d * d];
+                let wk = &params[off.wk..off.wk + d * d];
+                let wv = &params[off.wv..off.wv + d * d];
+                dispatch(pool, 3 * cd, |job| {
+                    let (which, c) = (job / cd, job % cd);
+                    let (c0, c1) = col_chunk(d, cd, c);
+                    let (out, w) = match which {
+                        0 => (&q, wq),
+                        1 => (&k, wk),
+                        _ => (&vv, wv),
+                    };
+                    // SAFETY: disjoint (buffer, column-range) per job.
+                    unsafe { vecops::matmul_cols_ptr(out.0, hn, w, n, d, d, c0, c1) }
+                });
+            }
             self.rope(&mut ls.q, 1.0);
             self.rope(&mut ls.k, 1.0);
 
@@ -706,7 +975,16 @@ impl NativeBackend {
             }
 
             // x_mid = x_in + ctx @ wo (matmul into x_mid, then add residual).
-            matmul(&mut ls.x_mid, &ls.ctx, &params[off.wo..off.wo + d * d], n, d, d);
+            {
+                let xm = SendPtr(ls.x_mid.as_mut_ptr());
+                let ctx = &ls.ctx;
+                let wo = &params[off.wo..off.wo + d * d];
+                dispatch(pool, cd, |c| {
+                    let (c0, c1) = col_chunk(d, cd, c);
+                    // SAFETY: disjoint x_mid columns per job.
+                    unsafe { vecops::matmul_cols_ptr(xm.0, ctx, wo, n, d, d, c0, c1) }
+                });
+            }
             vecops::add_assign(&mut ls.x_mid, x_in);
 
             // SwiGLU MLP: x_out = x_mid + (silu(x̂@w1) ⊙ (x̂@w3)) @ w2.
@@ -718,18 +996,39 @@ impl NativeBackend {
                 n,
                 d,
             );
-            matmul(&mut ls.u, &ls.hn_mlp, &params[off.w1..off.w1 + d * f], n, d, f);
-            matmul(&mut ls.g3, &ls.hn_mlp, &params[off.w3..off.w3 + d * f], n, d, f);
+            {
+                let u = SendPtr(ls.u.as_mut_ptr());
+                let g3 = SendPtr(ls.g3.as_mut_ptr());
+                let hn = &ls.hn_mlp;
+                let w1 = &params[off.w1..off.w1 + d * f];
+                let w3 = &params[off.w3..off.w3 + d * f];
+                dispatch(pool, 2 * cf, |job| {
+                    let (which, c) = (job / cf, job % cf);
+                    let (c0, c1) = col_chunk(f, cf, c);
+                    let (out, w) = if which == 0 { (&u, w1) } else { (&g3, w3) };
+                    // SAFETY: disjoint (buffer, column-range) per job.
+                    unsafe { vecops::matmul_cols_ptr(out.0, hn, w, n, d, f, c0, c1) }
+                });
+            }
             for i in 0..n * f {
                 let u = ls.u[i];
                 let sig = 1.0 / (1.0 + (-u).exp());
                 ls.s[i] = u * sig * ls.g3[i];
             }
-            matmul(&mut ls.x_out, &ls.s, &params[off.w2..off.w2 + f * d], n, f, d);
+            {
+                let xo = SendPtr(ls.x_out.as_mut_ptr());
+                let s = &ls.s;
+                let w2 = &params[off.w2..off.w2 + f * d];
+                dispatch(pool, cd, |c| {
+                    let (c0, c1) = col_chunk(d, cd, c);
+                    // SAFETY: disjoint x_out columns per job.
+                    unsafe { vecops::matmul_cols_ptr(xo.0, s, w2, n, f, d, c0, c1) }
+                });
+            }
             vecops::add_assign(&mut ls.x_out, &ls.x_mid);
         }
 
-        // Final norm + untied LM head + token cross-entropy sum.
+        // Final norm + untied LM head + fused softmax–cross-entropy.
         let x_last: &[f32] =
             if m.n_layers == 0 { &sc.x0 } else { &sc.layers[m.n_layers - 1].x_out };
         rmsnorm(
@@ -740,30 +1039,27 @@ impl NativeBackend {
             n,
             d,
         );
-        matmul(&mut sc.logits, &sc.xf, &params[lay.lm_head..lay.lm_head + d * v], n, d, v);
-        let mut loss = 0.0f64;
-        for i in 0..n {
-            let row = &sc.logits[i * v..(i + 1) * v];
-            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-            let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
-            let logz = mx + z.ln();
-            loss += (logz - row[targets[i] as usize]) as f64;
+        {
+            let lg = SendPtr(sc.logits.as_mut_ptr());
+            let xf = &sc.xf;
+            let lm = &params[lay.lm_head..lay.lm_head + d * v];
+            dispatch(pool, cv, |c| {
+                let (c0, c1) = col_chunk(v, cv, c);
+                // SAFETY: disjoint logits columns per job.
+                unsafe { vecops::matmul_cols_ptr(lg.0, xf, lm, n, d, v, c0, c1) }
+            });
         }
-        sc.loss_sum = loss;
+        let inv_n = 1.0 / (m.batch_size * m.seq_len) as f32;
+        sc.loss_sum = softmax_xent_cols(pool, &mut sc.logits, targets, v, inv_n, grad, &mut sc.xent);
     }
 
     /// Backward pass for one shard into `sc.grad` (overwritten; full-size,
     /// holding only this shard's row contributions). Must be called right
-    /// after [`NativeBackend::forward_shard`] on the same shard. dlogits
-    /// are scaled by the *global* 1/N so the per-shard gradients sum to
-    /// the whole-batch gradient.
-    fn backward_shard(
-        &self,
-        params: &[f32],
-        tokens: &[i32],
-        targets: &[i32],
-        sc: &mut ShardScratch,
-    ) {
+    /// after [`NativeBackend::forward_shard`] with `grad = true` on the
+    /// same shard: the fused softmax–xent already left `sc.logits` holding
+    /// dlogits scaled by the *global* 1/N, so the per-shard gradients sum
+    /// to the whole-batch gradient with no vocab re-sweep here.
+    fn backward_shard(&self, pool: Option<&WorkerPool>, params: &[f32], tokens: &[i32], sc: &mut ShardScratch) {
         let m = &self.spec.model;
         let lay = &self.layout;
         let (t_len, d, f, v, nh) = (m.seq_len, m.d_model, m.d_ff, m.vocab_size, m.n_heads);
@@ -771,33 +1067,34 @@ impl NativeBackend {
         let n = b * t_len;
         let r0 = sc.seq0 * t_len;
         let tokens = &tokens[r0..r0 + n];
-        let targets = &targets[r0..r0 + n];
         let dh = d / nh;
         let scale = 1.0 / (dh as f32).sqrt();
+        let (cd, cf, cv) = (col_shards(d), col_shards(f), col_shards(v));
 
         sc.grad.fill(0.0);
 
-        // dlogits in place: (softmax − onehot) / N_global.
-        let inv_n = 1.0 / (m.batch_size * m.seq_len) as f32;
-        for i in 0..n {
-            let row = &mut sc.logits[i * v..(i + 1) * v];
-            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-            let mut z = 0.0f32;
-            for x in row.iter_mut() {
-                *x = (*x - mx).exp();
-                z += *x;
-            }
-            let inv_z = 1.0 / z;
-            for x in row.iter_mut() {
-                *x *= inv_z * inv_n;
-            }
-            row[targets[i] as usize] -= inv_n;
+        // LM head: d_xf = dlogits @ lm_headᵀ; g_lm += xfᵀ @ dlogits — one
+        // scope, two disjoint output buffers.
+        {
+            let lm = &params[lay.lm_head..lay.lm_head + d * v];
+            let dlg = &sc.logits;
+            let xf = &sc.xf;
+            let dhh = SendPtr(sc.d_h.as_mut_ptr());
+            let gbase = SendPtr(sc.grad.as_mut_ptr());
+            let lm_off = lay.lm_head;
+            dispatch(pool, cd + cv, |job| {
+                // SAFETY: disjoint (buffer, column-range) per job.
+                if job < cd {
+                    let (c0, c1) = col_chunk(d, cd, job);
+                    unsafe { vecops::matmul_bt_cols_ptr(dhh.0, dlg, lm, n, d, v, c0, c1) }
+                } else {
+                    let (c0, c1) = col_chunk(v, cv, job - cd);
+                    unsafe {
+                        vecops::matmul_at_acc_cols_ptr(gbase.0.add(lm_off), xf, dlg, n, d, v, c0, c1)
+                    }
+                }
+            });
         }
-
-        // LM head: d_xf = dlogits @ lm_headᵀ; g_lm += xfᵀ @ dlogits.
-        let lm = &params[lay.lm_head..lay.lm_head + d * v];
-        matmul_bt(&mut sc.d_h, &sc.logits, lm, n, d, v);
-        matmul_at_acc(&mut sc.grad[lay.lm_head..lay.lm_head + d * v], &sc.xf, &sc.logits, n, d, v);
 
         // Final RMSNorm (d_x accumulates; start from zero).
         let x_last: &[f32] =
@@ -821,9 +1118,27 @@ impl NativeBackend {
             let x_in: &[f32] = if l == 0 { &sc.x0 } else { &before[l - 1].x_out };
 
             // ---- MLP block backward: x_out = x_mid + s@w2.
-            // d_s = d_x @ w2ᵀ; g_w2 += sᵀ @ d_x.
-            matmul_bt(&mut sc.d_s, &sc.d_x, &params[off.w2..off.w2 + f * d], n, f, d);
-            matmul_at_acc(&mut sc.grad[off.w2..off.w2 + f * d], &ls.s, &sc.d_x, n, f, d);
+            // d_s = d_x @ w2ᵀ; g_w2 += sᵀ @ d_x — one scope.
+            {
+                let w2 = &params[off.w2..off.w2 + f * d];
+                let dx = &sc.d_x;
+                let s = &ls.s;
+                let ds = SendPtr(sc.d_s.as_mut_ptr());
+                let gbase = SendPtr(sc.grad.as_mut_ptr());
+                let w2_off = off.w2;
+                dispatch(pool, cf + cd, |job| {
+                    // SAFETY: disjoint (buffer, column-range) per job.
+                    if job < cf {
+                        let (c0, c1) = col_chunk(f, cf, job);
+                        unsafe { vecops::matmul_bt_cols_ptr(ds.0, dx, w2, n, f, d, c0, c1) }
+                    } else {
+                        let (c0, c1) = col_chunk(d, cd, job - cf);
+                        unsafe {
+                            vecops::matmul_at_acc_cols_ptr(gbase.0.add(w2_off), s, dx, n, f, d, c0, c1)
+                        }
+                    }
+                });
+            }
             // s = silu(u) ⊙ g3.
             for i in 0..n * f {
                 let u = ls.u[i];
@@ -832,12 +1147,38 @@ impl NativeBackend {
                 sc.d_g3[i] = sc.d_s[i] * silu;
                 sc.d_u[i] = sc.d_s[i] * ls.g3[i] * (sig * (1.0 + u * (1.0 - sig)));
             }
-            // d_hn = d_u @ w1ᵀ + d_g3 @ w3ᵀ; weight grads.
-            matmul_bt(&mut sc.d_h, &sc.d_u, &params[off.w1..off.w1 + d * f], n, d, f);
-            matmul_bt(&mut sc.d_res, &sc.d_g3, &params[off.w3..off.w3 + d * f], n, d, f);
+            // d_hn = d_u @ w1ᵀ + d_g3 @ w3ᵀ; weight grads — one scope,
+            // four disjoint output buffers.
+            {
+                let w1 = &params[off.w1..off.w1 + d * f];
+                let w3 = &params[off.w3..off.w3 + d * f];
+                let du = &sc.d_u;
+                let dg3 = &sc.d_g3;
+                let hn = &ls.hn_mlp;
+                let dhh = SendPtr(sc.d_h.as_mut_ptr());
+                let dres = SendPtr(sc.d_res.as_mut_ptr());
+                let gbase = SendPtr(sc.grad.as_mut_ptr());
+                let (w1_off, w3_off) = (off.w1, off.w3);
+                dispatch(pool, 2 * cd + 2 * cf, |job| {
+                    // SAFETY: disjoint (buffer, column-range) per job.
+                    unsafe {
+                        if job < cd {
+                            let (c0, c1) = col_chunk(d, cd, job);
+                            vecops::matmul_bt_cols_ptr(dhh.0, du, w1, n, d, f, c0, c1)
+                        } else if job < 2 * cd {
+                            let (c0, c1) = col_chunk(d, cd, job - cd);
+                            vecops::matmul_bt_cols_ptr(dres.0, dg3, w3, n, d, f, c0, c1)
+                        } else if job < 2 * cd + cf {
+                            let (c0, c1) = col_chunk(f, cf, job - 2 * cd);
+                            vecops::matmul_at_acc_cols_ptr(gbase.0.add(w1_off), hn, du, n, d, f, c0, c1)
+                        } else {
+                            let (c0, c1) = col_chunk(f, cf, job - 2 * cd - cf);
+                            vecops::matmul_at_acc_cols_ptr(gbase.0.add(w3_off), hn, dg3, n, d, f, c0, c1)
+                        }
+                    }
+                });
+            }
             vecops::add_assign(&mut sc.d_h, &sc.d_res);
-            matmul_at_acc(&mut sc.grad[off.w1..off.w1 + d * f], &ls.hn_mlp, &sc.d_u, n, d, f);
-            matmul_at_acc(&mut sc.grad[off.w3..off.w3 + d * f], &ls.hn_mlp, &sc.d_g3, n, d, f);
             // RMSNorm backward at x_mid; residual adds d_x through.
             rmsnorm_backward(
                 &mut sc.d_x,
@@ -851,9 +1192,27 @@ impl NativeBackend {
             );
 
             // ---- Attention block backward: x_mid = x_in + ctx@wo.
-            // d_ctx = d_x @ woᵀ; g_wo += ctxᵀ @ d_x.
-            matmul_bt(&mut sc.d_h, &sc.d_x, &params[off.wo..off.wo + d * d], n, d, d);
-            matmul_at_acc(&mut sc.grad[off.wo..off.wo + d * d], &ls.ctx, &sc.d_x, n, d, d);
+            // d_ctx = d_x @ woᵀ; g_wo += ctxᵀ @ d_x — one scope.
+            {
+                let wo = &params[off.wo..off.wo + d * d];
+                let dx = &sc.d_x;
+                let ctx = &ls.ctx;
+                let dhh = SendPtr(sc.d_h.as_mut_ptr());
+                let gbase = SendPtr(sc.grad.as_mut_ptr());
+                let wo_off = off.wo;
+                dispatch(pool, 2 * cd, |job| {
+                    // SAFETY: disjoint (buffer, column-range) per job.
+                    if job < cd {
+                        let (c0, c1) = col_chunk(d, cd, job);
+                        unsafe { vecops::matmul_bt_cols_ptr(dhh.0, dx, wo, n, d, d, c0, c1) }
+                    } else {
+                        let (c0, c1) = col_chunk(d, cd, job - cd);
+                        unsafe {
+                            vecops::matmul_at_acc_cols_ptr(gbase.0.add(wo_off), ctx, dx, n, d, d, c0, c1)
+                        }
+                    }
+                });
+            }
             // Per (shard row, head): softmax/score backward.
             sc.d_q.fill(0.0);
             sc.d_k.fill(0.0);
@@ -898,15 +1257,46 @@ impl NativeBackend {
             // Undo RoPE (transpose rotation) on d_q/d_k.
             self.rope(&mut sc.d_q, -1.0);
             self.rope(&mut sc.d_k, -1.0);
-            // d_hn = d_q@wqᵀ + d_k@wkᵀ + d_v@wvᵀ; weight grads.
-            matmul_bt(&mut sc.d_h, &sc.d_q, &params[off.wq..off.wq + d * d], n, d, d);
-            matmul_bt(&mut sc.d_res, &sc.d_k, &params[off.wk..off.wk + d * d], n, d, d);
+            // d_hn = d_q@wqᵀ + d_k@wkᵀ + d_v@wvᵀ; weight grads — one
+            // scope, six disjoint output buffers (d_res2 carries the wv
+            // summand so all three bt products coexist).
+            {
+                let wq = &params[off.wq..off.wq + d * d];
+                let wk = &params[off.wk..off.wk + d * d];
+                let wv = &params[off.wv..off.wv + d * d];
+                let dq = &sc.d_q;
+                let dk = &sc.d_k;
+                let dv = &sc.d_v;
+                let hn = &ls.hn_attn;
+                let dhh = SendPtr(sc.d_h.as_mut_ptr());
+                let dres = SendPtr(sc.d_res.as_mut_ptr());
+                let dres2 = SendPtr(sc.d_res2.as_mut_ptr());
+                let gbase = SendPtr(sc.grad.as_mut_ptr());
+                let (wq_off, wk_off, wv_off) = (off.wq, off.wk, off.wv);
+                dispatch(pool, 6 * cd, |job| {
+                    let (which, c) = (job / cd, job % cd);
+                    let (c0, c1) = col_chunk(d, cd, c);
+                    // SAFETY: disjoint (buffer, column-range) per job.
+                    unsafe {
+                        match which {
+                            0 => vecops::matmul_bt_cols_ptr(dhh.0, dq, wq, n, d, d, c0, c1),
+                            1 => vecops::matmul_bt_cols_ptr(dres.0, dk, wk, n, d, d, c0, c1),
+                            2 => vecops::matmul_bt_cols_ptr(dres2.0, dv, wv, n, d, d, c0, c1),
+                            3 => vecops::matmul_at_acc_cols_ptr(
+                                gbase.0.add(wq_off), hn, dq, n, d, d, c0, c1,
+                            ),
+                            4 => vecops::matmul_at_acc_cols_ptr(
+                                gbase.0.add(wk_off), hn, dk, n, d, d, c0, c1,
+                            ),
+                            _ => vecops::matmul_at_acc_cols_ptr(
+                                gbase.0.add(wv_off), hn, dv, n, d, d, c0, c1,
+                            ),
+                        }
+                    }
+                });
+            }
             vecops::add_assign(&mut sc.d_h, &sc.d_res);
-            matmul_bt(&mut sc.d_res, &sc.d_v, &params[off.wv..off.wv + d * d], n, d, d);
-            vecops::add_assign(&mut sc.d_h, &sc.d_res);
-            matmul_at_acc(&mut sc.grad[off.wq..off.wq + d * d], &ls.hn_attn, &sc.d_q, n, d, d);
-            matmul_at_acc(&mut sc.grad[off.wk..off.wk + d * d], &ls.hn_attn, &sc.d_k, n, d, d);
-            matmul_at_acc(&mut sc.grad[off.wv..off.wv + d * d], &ls.hn_attn, &sc.d_v, n, d, d);
+            vecops::add_assign(&mut sc.d_h, &sc.d_res2);
             // RMSNorm backward at x_in; residual passthrough stays in d_x.
             rmsnorm_backward(
                 &mut sc.d_x,
@@ -920,19 +1310,30 @@ impl NativeBackend {
             );
         }
 
-        // Embedding scatter-add (private grad buffer — repeated token ids
-        // across shards never race).
-        let gemb = &mut sc.grad[lay.embed..lay.embed + v * d];
-        for i in 0..n {
-            let tok = tokens[i] as usize;
-            axpy(&mut gemb[tok * d..(tok + 1) * d], 1.0, &sc.d_x[i * d..(i + 1) * d]);
+        // Embedding scatter-add, column-chunked (private grad buffer —
+        // repeated token ids across shards never race; within the shard,
+        // columns are the partition axis so repeats stay i-ascending).
+        {
+            let dx = &sc.d_x;
+            let gbase = SendPtr(sc.grad.as_mut_ptr());
+            let e_off = lay.embed;
+            dispatch(pool, cd, |c| {
+                let (c0, c1) = col_chunk(d, cd, c);
+                // SAFETY: disjoint embedding-gradient columns per job.
+                unsafe { scatter_add_cols(gbase.0.add(e_off), dx, tokens, d, c0, c1) }
+            });
         }
     }
 
-    /// Run forward (and optionally backward) over every shard — on the
-    /// compute pool when one is installed and there is more than one
-    /// shard, serially otherwise. The serial path boxes nothing, keeping
-    /// the steady-state train step allocation-free.
+    /// Run forward (and optionally backward) over every shard, choosing
+    /// the 2D partition's schedule from the pool size: row shards fan out
+    /// on the pool when both sides exceed one (a 1-thread pool would be
+    /// pure queue overhead — the sharded1 regression), and the column axis
+    /// engages only when threads outnumber the row tasks (otherwise rows
+    /// already saturate the pool). Both gates are pure scheduling: the
+    /// chunk grids are shape-only, so every result bit is identical
+    /// serial, row-pooled, column-pooled, or both. The serial path boxes
+    /// nothing, keeping the steady-state train step allocation-free.
     fn run_shards(
         &self,
         pool: Option<&WorkerPool>,
@@ -942,15 +1343,19 @@ impl NativeBackend {
         shards: &mut [ShardScratch],
         with_backward: bool,
     ) {
+        let col_pool = match pool {
+            Some(tp) if tp.threads() > shards.len() => Some(tp),
+            _ => None,
+        };
         match pool {
-            Some(tp) if shards.len() > 1 => {
+            Some(tp) if shards.len() > 1 && tp.threads() > 1 => {
                 let tasks: Vec<ScopedTask<'_>> = shards
                     .iter_mut()
                     .map(|sc| {
                         Box::new(move || {
-                            self.forward_shard(params, tokens, targets, sc);
+                            self.forward_shard(col_pool, params, tokens, targets, sc, with_backward);
                             if with_backward {
-                                self.backward_shard(params, tokens, targets, sc);
+                                self.backward_shard(col_pool, params, tokens, sc);
                             }
                         }) as ScopedTask<'_>
                     })
@@ -959,9 +1364,9 @@ impl NativeBackend {
             }
             _ => {
                 for sc in shards.iter_mut() {
-                    self.forward_shard(params, tokens, targets, sc);
+                    self.forward_shard(col_pool, params, tokens, targets, sc, with_backward);
                     if with_backward {
-                        self.backward_shard(params, tokens, targets, sc);
+                        self.backward_shard(col_pool, params, tokens, sc);
                     }
                 }
             }
@@ -999,7 +1404,10 @@ impl NativeBackend {
             lr,
         };
         match pool {
-            Some(tp) => {
+            // A 1-thread pool gains nothing from span fan-out (the
+            // sharded1 regression); the span chunking never changes bits,
+            // so this gate is pure scheduling.
+            Some(tp) if tp.threads() > 1 => {
                 let total = st.params.len();
                 let slots = tp.threads() + 1;
                 let chunk = total.div_ceil(slots).next_multiple_of(vecops::LANES);
@@ -1016,7 +1424,7 @@ impl NativeBackend {
                     .collect();
                 tp.scoped(tasks);
             }
-            None => adamw_span(coef, &mut st.params, &mut st.m, &mut st.v, shards, 0),
+            _ => adamw_span(coef, &mut st.params, &mut st.m, &mut st.v, shards, 0),
         }
     }
 
@@ -1227,15 +1635,17 @@ mod tests {
     }
 
     /// Serial forward over every shard; returns the reduced mean loss.
+    /// `grad` leaves dlogits in place for a following backward_shard.
     fn forward_all(
         be: &NativeBackend,
         params: &[f32],
         tokens: &[i32],
         targets: &[i32],
         shards: &mut [ShardScratch],
+        grad: bool,
     ) -> f32 {
         for sc in shards.iter_mut() {
-            be.forward_shard(params, tokens, targets, sc);
+            be.forward_shard(None, params, tokens, targets, sc, grad);
         }
         be.reduce_loss(shards)
     }
@@ -1283,14 +1693,43 @@ mod tests {
     }
 
     #[test]
+    fn col_partition_covers_columns_exactly() {
+        for cols in 1..=300usize {
+            let shards = col_shards(cols);
+            assert!(shards >= 1 && shards <= MAX_COL_SHARDS);
+            assert!(shards == 1 || cols / shards >= MIN_COL_CHUNK, "cols {cols}: thin chunks");
+            let mut covered = 0;
+            for s in 0..shards {
+                let (c0, c1) = col_chunk(cols, shards, s);
+                assert_eq!(c0, covered, "cols {cols}: chunk {s} not contiguous");
+                assert!(c1 > c0, "cols {cols}: empty chunk {s}");
+                covered = c1;
+            }
+            assert_eq!(covered, cols, "cols {cols}: chunks do not cover the width");
+        }
+    }
+
+    #[test]
+    fn intra_step_units_scales_with_both_axes() {
+        // tiny: batch 2 → 2 row shards; widest operator is vocab 64 → 4
+        // column chunks.
+        let tiny = NativeSpec::preset("tiny").unwrap();
+        assert_eq!(intra_step_units(&tiny.model), 2 * 4);
+        // batch-1 variant still exposes the column axis.
+        let mut b1 = tiny.model.clone();
+        b1.batch_size = 1;
+        assert_eq!(intra_step_units(&b1), 4);
+    }
+
+    #[test]
     fn gradient_matches_finite_difference() {
         let be = NativeBackend::new(micro_spec()).unwrap();
         let (tokens, targets) = batch(&be, 5);
         let params = be.init_params().unwrap();
         let mut shards = make_shards(&be.spec.model, be.layout.total, true);
-        let _ = forward_all(&be, &params, &tokens, &targets, &mut shards);
+        let _ = forward_all(&be, &params, &tokens, &targets, &mut shards, true);
         for sc in shards.iter_mut() {
-            be.backward_shard(&params, &tokens, &targets, sc);
+            be.backward_shard(None, &params, &tokens, sc);
         }
         // Fixed-order reduction of the per-shard gradients.
         let mut grad = vec![0.0f32; params.len()];
@@ -1304,9 +1743,9 @@ mod tests {
             let i = rng.below(params.len() as u64) as usize;
             let mut pp = params.clone();
             pp[i] += eps;
-            let lp = forward_all(&be, &pp, &tokens, &targets, &mut shards);
+            let lp = forward_all(&be, &pp, &tokens, &targets, &mut shards, false);
             pp[i] = params[i] - eps;
-            let lm = forward_all(&be, &pp, &tokens, &targets, &mut shards);
+            let lm = forward_all(&be, &pp, &tokens, &targets, &mut shards, false);
             let fd = (lp - lm) / (2.0 * eps);
             let tol = 2e-2 * (1.0 + fd.abs().max(grad[i].abs()));
             assert!(

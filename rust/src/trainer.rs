@@ -37,7 +37,7 @@ use crate::data::Split;
 use crate::metrics::{Curve, Dist};
 use crate::network::topology::LinkUtil;
 use crate::network::WanSimulator;
-use crate::runtime::{row_shards, Backend, TrainState, WorkerHandle};
+use crate::runtime::{intra_step_units, Backend, TrainState, WorkerHandle};
 use crate::simclock::VirtualClock;
 use crate::util::pool::BufferPool;
 use crate::util::threadpool::{ScopedTask, WorkerPool};
@@ -201,11 +201,13 @@ impl<'b> Trainer<'b> {
             let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
             // Thread budget (DESIGN.md §Parallelism): an explicit
             // `--threads N` wins, 0 means auto (host parallelism). Cap at
-            // what worker fan-out × intra-worker row shards can actually
-            // keep busy — nested scopes then split this one pool instead of
-            // oversubscribing the host with a second layer of threads.
+            // what worker fan-out × intra-worker 2D (row × column) shards
+            // can actually keep busy — nested scopes then split this one
+            // pool instead of oversubscribing the host with a second layer
+            // of threads. Column shards keep batch-1 runs scaling past the
+            // row-shard ceiling.
             let budget = if cfg.threads > 0 { cfg.threads } else { hw.min(32) };
-            let useful = cfg.workers.max(cfg.eval_batches) * row_shards(model.batch_size);
+            let useful = cfg.workers.max(cfg.eval_batches) * intra_step_units(model);
             let size = budget.min(useful);
             if size > 1 {
                 Some(Arc::new(WorkerPool::new(size)))

@@ -13,7 +13,9 @@
 //! decremented even on panic, and the first panic payload is re-thrown on
 //! the caller thread). A waiting caller never sleeps while work is
 //! queued: it steals and runs jobs from the shared queue until its own
-//! scope has quiesced, so a pool of N threads applies N+1 workers.
+//! scope has quiesced, so a pool of N threads applies N+1 workers. A
+//! scope with exactly one task skips the queue and runs inline on the
+//! caller — cost-identical to a plain function call.
 //!
 //! Nested scopes are supported: a scope opened from *inside* a pool task
 //! enqueues its sub-tasks on the same shared queue and the opening thread
@@ -92,9 +94,17 @@ impl WorkerPool {
     /// other's, so nested scopes make progress through blocked openers).
     /// Panics inside tasks are re-thrown here after the scope has fully
     /// quiesced.
-    pub fn scoped<'scope>(&self, tasks: Vec<ScopedTask<'scope>>) {
+    pub fn scoped<'scope>(&self, mut tasks: Vec<ScopedTask<'scope>>) {
         let n = tasks.len();
         if n == 0 {
+            return;
+        }
+        // A one-task scope gains nothing from the queue: run it inline on
+        // the caller, skipping the lock/notify/steal round-trip entirely
+        // (a panic then unwinds directly, same as re-thrown). This makes
+        // single-shard dispatches cost-identical to a plain call.
+        if n == 1 {
+            (tasks.pop().expect("one task"))();
             return;
         }
         let state = Arc::new(ScopeState {
@@ -254,6 +264,26 @@ mod tests {
     fn empty_scope_is_a_no_op() {
         let pool = WorkerPool::new(2);
         pool.scoped(Vec::new());
+    }
+
+    /// A one-task scope must run inline on the caller thread (no queue
+    /// round-trip), while still honouring borrow-and-mutate semantics.
+    #[test]
+    fn single_task_scope_runs_inline_on_caller() {
+        let pool = WorkerPool::new(2);
+        let caller = std::thread::current().id();
+        let mut ran_on = None;
+        let mut slot = 0usize;
+        {
+            let ran = &mut ran_on;
+            let s = &mut slot;
+            pool.scoped(vec![Box::new(move || {
+                *ran = Some(std::thread::current().id());
+                *s = 7;
+            }) as ScopedTask<'_>]);
+        }
+        assert_eq!(ran_on, Some(caller));
+        assert_eq!(slot, 7);
     }
 
     #[test]

@@ -17,7 +17,15 @@
 //! seed triple loops (kept in [`reference`]), constrained to the exact
 //! per-element accumulation order of the originals so they are
 //! bit-identical — tests/native_parallel.rs asserts exact equality at
-//! odd (non-tile-multiple) shapes.
+//! odd (non-tile-multiple) shapes. Each has a column-range core
+//! (`*_cols_ptr`) computing only output columns [c0, c1), the unit of the
+//! native backend's 2D partition: the per-element sequence is independent
+//! of the column grid, so any chunking is bit-identical to the full-width
+//! call. [`softmax_xent`] fuses the logits→softmax→loss→dlogits passes
+//! into one vocab sweep pair, with a column-chunked three-phase variant
+//! ([`softmax_colmax`]/[`softmax_expsum_ptr`]/[`softmax_grad_ptr`]) whose
+//! fixed-order f64 combines keep it within 1 ulp for any shape-determined
+//! grid.
 //!
 //! Numerical contract: every fused/unrolled kernel performs the *same
 //! per-element operation sequence* as its scalar reference in
@@ -175,19 +183,72 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// axpy form). Bit-identical to the reference: every output element is a
 /// single f32 accumulator summed over k in ascending order, exactly the
 /// per-element sequence `fill(0.0)` + repeated axpy produces.
+///
+/// Full-width wrapper over [`matmul_cols_ptr`] — the column partition does
+/// not change any per-element sequence, so the bit pattern is identical
+/// for every column grid (DESIGN.md §Parallelism).
 pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
     debug_assert_eq!(out.len(), n * p);
+    // SAFETY: exclusive access to all of `out` for the whole call.
+    unsafe { matmul_cols_ptr(out.as_mut_ptr(), a, b, n, m, p, 0, p) }
+}
+
+/// Bounds-checked column-range matmul: writes only out[:, c0..c1). Used by
+/// the serial column-chunk loops and the property tests; the concurrent
+/// dispatch path goes through [`matmul_cols_ptr`] directly.
+pub fn matmul_cols(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    p: usize,
+    c0: usize,
+    c1: usize,
+) {
+    assert_eq!(out.len(), n * p);
+    assert!(c0 <= c1 && c1 <= p, "column range {c0}..{c1} out of 0..{p}");
+    // SAFETY: exclusive access to all of `out` for the whole call.
+    unsafe { matmul_cols_ptr(out.as_mut_ptr(), a, b, n, m, p, c0, c1) }
+}
+
+/// Column-range core of [`matmul`]: computes out[:, c0..c1) only, through a
+/// raw base pointer so disjoint column chunks of one output can run on
+/// different threads (native backend 2D partition). Every output element is
+/// still a single f32 accumulator summed over k in ascending order — the
+/// per-element sequence is independent of the column grid, so any chunking
+/// (including the full-width one) produces identical bits.
+///
+/// # Safety
+///
+/// `out` must point to an n×p f32 buffer that outlives the call, and no
+/// other thread may read or write columns [c0, c1) of it while the call
+/// runs. Concurrent calls on the same buffer are sound iff their column
+/// ranges are disjoint: the only references materialized inside are
+/// per-row sub-slices of this call's own column range.
+pub unsafe fn matmul_cols_ptr(
+    out: *mut f32,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    p: usize,
+    c0: usize,
+    c1: usize,
+) {
+    debug_assert!(c0 <= c1 && c1 <= p);
     debug_assert_eq!(a.len(), n * m);
     debug_assert_eq!(b.len(), m * p);
     const MR: usize = 4;
     const NR: usize = 16;
+    let w = c1 - c0;
     let n_main = n - n % MR;
-    let p_main = p - p % NR;
+    let c_main = c0 + (w - w % NR);
     for i0 in (0..n_main).step_by(MR) {
-        for c0 in (0..p_main).step_by(NR) {
+        for cc in (c0..c_main).step_by(NR) {
             let mut acc = [[0.0f32; NR]; MR];
             for j in 0..m {
-                let brow = &b[j * p + c0..j * p + c0 + NR];
+                let brow = &b[j * p + cc..j * p + cc + NR];
                 for (r, accr) in acc.iter_mut().enumerate() {
                     let av = a[(i0 + r) * m + j];
                     for c in 0..NR {
@@ -196,27 +257,28 @@ pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usiz
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
-                out[(i0 + r) * p + c0..(i0 + r) * p + c0 + NR].copy_from_slice(accr);
+                std::slice::from_raw_parts_mut(out.add((i0 + r) * p + cc), NR)
+                    .copy_from_slice(accr);
             }
         }
         // Column remainder: scalar k-ascending accumulators (same order).
         for r in 0..MR {
             let i = i0 + r;
-            for c in p_main..p {
+            for c in c_main..c1 {
                 let mut acc = 0.0f32;
                 for j in 0..m {
                     acc += a[i * m + j] * b[j * p + c];
                 }
-                out[i * p + c] = acc;
+                *out.add(i * p + c) = acc;
             }
         }
     }
     // Row remainder: the reference axpy form (identical per-element order).
     for i in n_main..n {
-        let row = &mut out[i * p..(i + 1) * p];
+        let row = std::slice::from_raw_parts_mut(out.add(i * p + c0), w);
         row.fill(0.0);
         for j in 0..m {
-            axpy(row, a[i * m + j], &b[j * p..(j + 1) * p]);
+            axpy(row, a[i * m + j], &b[j * p + c0..j * p + c1]);
         }
     }
 }
@@ -231,21 +293,62 @@ pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], n: usize, m: usize, p: usiz
 /// [`dot`] computes.
 pub fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p: usize) {
     debug_assert_eq!(out.len(), n * m);
+    // SAFETY: exclusive access to all of `out` for the whole call.
+    unsafe { matmul_bt_cols_ptr(out.as_mut_ptr(), dout, b, n, m, p, 0, m) }
+}
+
+/// Bounds-checked column-range matmul_bt: writes only out[:, j0..j1).
+pub fn matmul_bt_cols(
+    out: &mut [f32],
+    dout: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    p: usize,
+    j0: usize,
+    j1: usize,
+) {
+    assert_eq!(out.len(), n * m);
+    assert!(j0 <= j1 && j1 <= m, "column range {j0}..{j1} out of 0..{m}");
+    // SAFETY: exclusive access to all of `out` for the whole call.
+    unsafe { matmul_bt_cols_ptr(out.as_mut_ptr(), dout, b, n, m, p, j0, j1) }
+}
+
+/// Column-range core of [`matmul_bt`]: computes out[:, j0..j1) — i.e. the
+/// dot products against rows [j0, j1) of `b` only. Each element keeps the
+/// exact [`dot`] lane sequence regardless of the column grid.
+///
+/// # Safety
+///
+/// Same contract as [`matmul_cols_ptr`]: `out` points to an n×m buffer, and
+/// concurrent calls must use disjoint [j0, j1) ranges.
+pub unsafe fn matmul_bt_cols_ptr(
+    out: *mut f32,
+    dout: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    p: usize,
+    j0: usize,
+    j1: usize,
+) {
+    debug_assert!(j0 <= j1 && j1 <= m);
     debug_assert_eq!(dout.len(), n * p);
     debug_assert_eq!(b.len(), m * p);
     const MB: usize = 2;
     const NB: usize = 4;
+    let w = j1 - j0;
     let n_main = n - n % MB;
-    let m_main = m - m % NB;
+    let j_main = j0 + (w - w % NB);
     let p_chunks = p - p % LANES;
     for i0 in (0..n_main).step_by(MB) {
-        for j0 in (0..m_main).step_by(NB) {
+        for jj in (j0..j_main).step_by(NB) {
             let mut lanes = [[[0.0f32; LANES]; NB]; MB];
             for k0 in (0..p_chunks).step_by(LANES) {
                 for (r, lr) in lanes.iter_mut().enumerate() {
                     let dch = &dout[(i0 + r) * p + k0..(i0 + r) * p + k0 + LANES];
                     for (c, lc) in lr.iter_mut().enumerate() {
-                        let bch = &b[(j0 + c) * p + k0..(j0 + c) * p + k0 + LANES];
+                        let bch = &b[(jj + c) * p + k0..(jj + c) * p + k0 + LANES];
                         for l in 0..LANES {
                             lc[l] += dch[l] * bch[l];
                         }
@@ -256,9 +359,9 @@ pub fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p
                 for (c, lc) in lr.iter().enumerate() {
                     let mut total: f32 = lc.iter().sum();
                     for k in p_chunks..p {
-                        total += dout[(i0 + r) * p + k] * b[(j0 + c) * p + k];
+                        total += dout[(i0 + r) * p + k] * b[(jj + c) * p + k];
                     }
-                    out[(i0 + r) * m + j0 + c] = total;
+                    *out.add((i0 + r) * m + jj + c) = total;
                 }
             }
         }
@@ -266,15 +369,15 @@ pub fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p
         for r in 0..MB {
             let i = i0 + r;
             let drow = &dout[i * p..(i + 1) * p];
-            for j in m_main..m {
-                out[i * m + j] = dot(drow, &b[j * p..(j + 1) * p]);
+            for j in j_main..j1 {
+                *out.add(i * m + j) = dot(drow, &b[j * p..(j + 1) * p]);
             }
         }
     }
     for i in n_main..n {
         let drow = &dout[i * p..(i + 1) * p];
-        for j in 0..m {
-            out[i * m + j] = dot(drow, &b[j * p..(j + 1) * p]);
+        for j in j0..j1 {
+            *out.add(i * m + j) = dot(drow, &b[j * p..(j + 1) * p]);
         }
     }
 }
@@ -287,20 +390,66 @@ pub fn matmul_bt(out: &mut [f32], dout: &[f32], b: &[f32], n: usize, m: usize, p
 /// reference's repeated axpy performs against memory.
 pub fn matmul_at_acc(gb: &mut [f32], a: &[f32], dout: &[f32], n: usize, m: usize, p: usize) {
     debug_assert_eq!(gb.len(), m * p);
+    // SAFETY: exclusive access to all of `gb` for the whole call.
+    unsafe { matmul_at_acc_cols_ptr(gb.as_mut_ptr(), a, dout, n, m, p, 0, p) }
+}
+
+/// Bounds-checked column-range matmul_at_acc: accumulates into
+/// gb[:, c0..c1) only.
+pub fn matmul_at_acc_cols(
+    gb: &mut [f32],
+    a: &[f32],
+    dout: &[f32],
+    n: usize,
+    m: usize,
+    p: usize,
+    c0: usize,
+    c1: usize,
+) {
+    assert_eq!(gb.len(), m * p);
+    assert!(c0 <= c1 && c1 <= p, "column range {c0}..{c1} out of 0..{p}");
+    // SAFETY: exclusive access to all of `gb` for the whole call.
+    unsafe { matmul_at_acc_cols_ptr(gb.as_mut_ptr(), a, dout, n, m, p, c0, c1) }
+}
+
+/// Column-range core of [`matmul_at_acc`]: accumulates gb[:, c0..c1) only.
+/// Per element the sequence stays: initial gb value plus `a[i,j]·dout[i,c]`
+/// for i ascending — independent of the column grid.
+///
+/// # Safety
+///
+/// Same contract as [`matmul_cols_ptr`]: `gb` points to an m×p buffer, and
+/// concurrent calls must use disjoint [c0, c1) ranges (reads of gb are also
+/// confined to this call's own range).
+pub unsafe fn matmul_at_acc_cols_ptr(
+    gb: *mut f32,
+    a: &[f32],
+    dout: &[f32],
+    n: usize,
+    m: usize,
+    p: usize,
+    c0: usize,
+    c1: usize,
+) {
+    debug_assert!(c0 <= c1 && c1 <= p);
     debug_assert_eq!(a.len(), n * m);
     debug_assert_eq!(dout.len(), n * p);
     const MR: usize = 4;
     const NR: usize = 16;
+    let w = c1 - c0;
     let m_main = m - m % MR;
-    let p_main = p - p % NR;
+    let c_main = c0 + (w - w % NR);
     for j0 in (0..m_main).step_by(MR) {
-        for c0 in (0..p_main).step_by(NR) {
+        for cc in (c0..c_main).step_by(NR) {
             let mut acc = [[0.0f32; NR]; MR];
             for (r, accr) in acc.iter_mut().enumerate() {
-                accr.copy_from_slice(&gb[(j0 + r) * p + c0..(j0 + r) * p + c0 + NR]);
+                accr.copy_from_slice(std::slice::from_raw_parts(
+                    gb.add((j0 + r) * p + cc),
+                    NR,
+                ));
             }
             for i in 0..n {
-                let drow = &dout[i * p + c0..i * p + c0 + NR];
+                let drow = &dout[i * p + cc..i * p + cc + NR];
                 for (r, accr) in acc.iter_mut().enumerate() {
                     let av = a[i * m + j0 + r];
                     for c in 0..NR {
@@ -309,26 +458,168 @@ pub fn matmul_at_acc(gb: &mut [f32], a: &[f32], dout: &[f32], n: usize, m: usize
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
-                gb[(j0 + r) * p + c0..(j0 + r) * p + c0 + NR].copy_from_slice(accr);
+                std::slice::from_raw_parts_mut(gb.add((j0 + r) * p + cc), NR)
+                    .copy_from_slice(accr);
             }
         }
         // Column remainder: scalar i-ascending accumulators (same order).
         for r in 0..MR {
             let j = j0 + r;
-            for c in p_main..p {
-                let mut acc = gb[j * p + c];
+            for c in c_main..c1 {
+                let mut acc = *gb.add(j * p + c);
                 for i in 0..n {
                     acc += a[i * m + j] * dout[i * p + c];
                 }
-                gb[j * p + c] = acc;
+                *gb.add(j * p + c) = acc;
             }
         }
     }
-    // Row remainder of gb: the reference axpy form.
+    // Row remainder of gb: the reference axpy form over the column window.
     for i in 0..n {
-        let drow = &dout[i * p..(i + 1) * p];
+        let drow = &dout[i * p + c0..i * p + c1];
         for j in m_main..m {
-            axpy(&mut gb[j * p..(j + 1) * p], a[i * m + j], drow);
+            let row = std::slice::from_raw_parts_mut(gb.add(j * p + c0), w);
+            axpy(row, a[i * m + j], drow);
+        }
+    }
+}
+
+/// Fused softmax–cross-entropy over `targets.len()` rows of `v` logits:
+/// one vocab sweep computes the row max, a second turns the row into
+/// softmax numerators in place while accumulating the partition sum in
+/// f64, and (when `grad`) a third scales it into dlogits — replacing the
+/// seed's separate logits→softmax→loss→dlogits passes.
+///
+/// Returns Σ_r (mx_r + ln z_r − logit_r[target_r]) in f64 (the summed
+/// negative log-likelihood; the caller divides by its token count). With
+/// `grad`, `logits` is left holding `softmax · inv_n` with `inv_n`
+/// subtracted at each target — the cross-entropy dlogits.
+///
+/// Bit-identical to [`reference::softmax_xent_split`] (same per-element
+/// sequence, f64 partition sums in row-ascending order). The chunked
+/// variant ([`softmax_colmax`] / [`softmax_expsum_ptr`] /
+/// [`softmax_grad_ptr`] combined in fixed ascending-chunk order) differs
+/// only by f64 reassociation of z — ≤ 1 ulp after f32 rounding, and its
+/// chunk grid depends only on `v`, never on the thread count
+/// (DESIGN.md §Parallelism).
+pub fn softmax_xent(logits: &mut [f32], targets: &[i32], v: usize, inv_n: f32, grad: bool) -> f64 {
+    let n = targets.len();
+    debug_assert_eq!(logits.len(), n * v);
+    let mut loss = 0.0f64;
+    for r in 0..n {
+        let row = &mut logits[r * v..(r + 1) * v];
+        let t = targets[r] as usize;
+        let tgt = row[t];
+        let mut mx = f32::NEG_INFINITY;
+        for &x in row.iter() {
+            if x > mx {
+                mx = x;
+            }
+        }
+        let mut z = 0.0f64;
+        for x in row.iter_mut() {
+            let e = (*x - mx).exp();
+            *x = e;
+            z += e as f64;
+        }
+        loss += mx as f64 + z.ln() - tgt as f64;
+        if grad {
+            let s = (1.0 / z) as f32 * inv_n;
+            for x in row.iter_mut() {
+                *x *= s;
+            }
+            row[t] -= inv_n;
+        }
+    }
+    loss
+}
+
+/// Phase 1 of the column-chunked softmax–xent: per-row f32 max over
+/// logits[:, c0..c1) into `out` (one entry per row). Chunk maxima combine
+/// exactly (max is associative), so the final row max is bit-identical to
+/// the fused kernel's for every column grid.
+pub fn softmax_colmax(logits: &[f32], v: usize, c0: usize, c1: usize, out: &mut [f32]) {
+    let n = out.len();
+    debug_assert_eq!(logits.len(), n * v);
+    debug_assert!(c0 <= c1 && c1 <= v);
+    for (r, o) in out.iter_mut().enumerate() {
+        let mut mx = f32::NEG_INFINITY;
+        for &x in &logits[r * v + c0..r * v + c1] {
+            if x > mx {
+                mx = x;
+            }
+        }
+        *o = mx;
+    }
+}
+
+/// Phase 2 of the column-chunked softmax–xent: replaces logits[:, c0..c1)
+/// with exp(x − mx[row]) in place and writes each row's f64 partial sum of
+/// this chunk into `zpart`. The caller combines chunk partials in
+/// ascending-chunk order; that reassociation (vs the fused kernel's
+/// whole-row sum) is the chunked variant's only numeric difference.
+///
+/// # Safety
+///
+/// `logits` points to an n×v buffer; concurrent calls must use disjoint
+/// [c0, c1) ranges (the only references materialized are per-row
+/// sub-slices of this call's own range).
+pub unsafe fn softmax_expsum_ptr(
+    logits: *mut f32,
+    n: usize,
+    v: usize,
+    c0: usize,
+    c1: usize,
+    mx: &[f32],
+    zpart: &mut [f64],
+) {
+    debug_assert!(c0 <= c1 && c1 <= v);
+    debug_assert_eq!(mx.len(), n);
+    debug_assert_eq!(zpart.len(), n);
+    for r in 0..n {
+        let row = std::slice::from_raw_parts_mut(logits.add(r * v + c0), c1 - c0);
+        let m = mx[r];
+        let mut z = 0.0f64;
+        for x in row.iter_mut() {
+            let e = (*x - m).exp();
+            *x = e;
+            z += e as f64;
+        }
+        zpart[r] = z;
+    }
+}
+
+/// Phase 3 of the column-chunked softmax–xent: scales the in-place exp
+/// values of logits[:, c0..c1) by `(1/z[row]) as f32 * inv_n` and
+/// subtracts `inv_n` at targets that fall inside this chunk — producing
+/// the same dlogits expression as the fused kernel (any difference comes
+/// only from z's chunk reassociation).
+///
+/// # Safety
+///
+/// Same contract as [`softmax_expsum_ptr`]: disjoint [c0, c1) ranges
+/// across concurrent calls on one buffer.
+pub unsafe fn softmax_grad_ptr(
+    logits: *mut f32,
+    targets: &[i32],
+    v: usize,
+    c0: usize,
+    c1: usize,
+    z: &[f64],
+    inv_n: f32,
+) {
+    let n = targets.len();
+    debug_assert!(c0 <= c1 && c1 <= v);
+    debug_assert_eq!(z.len(), n);
+    for r in 0..n {
+        let row = std::slice::from_raw_parts_mut(logits.add(r * v + c0), c1 - c0);
+        let s = (1.0 / z[r]) as f32 * inv_n;
+        for x in row.iter_mut() {
+            *x *= s;
+        }
+        let t = targets[r] as usize;
+        if (c0..c1).contains(&t) {
+            row[t - c0] -= inv_n;
         }
     }
 }
@@ -732,6 +1023,64 @@ pub mod reference {
             }
         }
     }
+
+    /// Multi-sweep twin of [`super::softmax_xent`], in the seed's
+    /// structure (separate whole-batch passes for max, exp+sum, loss and
+    /// grad, with per-pass scratch) but with the same per-element
+    /// operation sequence and f64 partition sums — so the fused kernel is
+    /// bit-identical to it, and this stays the ground truth for the 1-ulp
+    /// property tests and the bench baseline.
+    pub fn softmax_xent_split(
+        logits: &mut [f32],
+        targets: &[i32],
+        v: usize,
+        inv_n: f32,
+        grad: bool,
+    ) -> f64 {
+        let n = targets.len();
+        debug_assert_eq!(logits.len(), n * v);
+        // Pass 0: save the target logits before the exp pass overwrites.
+        let tgt: Vec<f32> = targets
+            .iter()
+            .enumerate()
+            .map(|(r, &t)| logits[r * v + t as usize])
+            .collect();
+        // Pass 1: row maxima.
+        let mut maxes = vec![f32::NEG_INFINITY; n];
+        for (r, mx) in maxes.iter_mut().enumerate() {
+            for &x in &logits[r * v..(r + 1) * v] {
+                if x > *mx {
+                    *mx = x;
+                }
+            }
+        }
+        // Pass 2: softmax numerators in place, f64 partition sums.
+        let mut zs = vec![0.0f64; n];
+        for (r, z) in zs.iter_mut().enumerate() {
+            let mx = maxes[r];
+            for x in logits[r * v..(r + 1) * v].iter_mut() {
+                let e = (*x - mx).exp();
+                *x = e;
+                *z += e as f64;
+            }
+        }
+        // Pass 3: summed negative log-likelihood.
+        let mut loss = 0.0f64;
+        for r in 0..n {
+            loss += maxes[r] as f64 + zs[r].ln() - tgt[r] as f64;
+        }
+        // Pass 4: dlogits.
+        if grad {
+            for r in 0..n {
+                let s = (1.0 / zs[r]) as f32 * inv_n;
+                for x in logits[r * v..(r + 1) * v].iter_mut() {
+                    *x *= s;
+                }
+                logits[r * v + targets[r] as usize] -= inv_n;
+            }
+        }
+        loss
+    }
 }
 
 #[cfg(test)]
@@ -830,6 +1179,24 @@ mod tests {
         reference::outer_step(&mut t2, &delta, &mut m2, 0.7, 0.9);
         assert_eq!(t1, t2);
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn softmax_xent_fused_matches_split_bitwise() {
+        for (n, v) in [(1usize, 5usize), (7, 13), (4, 32)] {
+            let logits: Vec<f32> =
+                (0..n * v).map(|i| ((i * 37 + 11) % 23) as f32 * 0.17 - 1.5).collect();
+            let targets: Vec<i32> = (0..n).map(|r| ((r * 5 + 3) % v) as i32).collect();
+            let inv_n = 1.0 / (n * v) as f32;
+            for grad in [false, true] {
+                let mut fused = logits.clone();
+                let mut split = logits.clone();
+                let lf = softmax_xent(&mut fused, &targets, v, inv_n, grad);
+                let ls = reference::softmax_xent_split(&mut split, &targets, v, inv_n, grad);
+                assert_eq!(lf.to_bits(), ls.to_bits(), "loss n={n} v={v} grad={grad}");
+                assert_eq!(fused, split, "buffer n={n} v={v} grad={grad}");
+            }
+        }
     }
 
     #[test]

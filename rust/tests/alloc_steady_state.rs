@@ -11,7 +11,12 @@
 //!     backward-free shard sets), plus a constant-cost check for *pooled*
 //!     eval: row-shard fan-out boxes per-call queue traffic, so it cannot
 //!     be zero-alloc, but two identical measurement windows must allocate
-//!     the same amount — no steady-state growth.
+//!     the same amount — no steady-state growth, and
+//!  4. the same two properties at *batch 1*, where the 2D partition runs
+//!     column chunks only: serial batch-1 steps (column scratch, the fused
+//!     softmax-xent `XentScratch`, `d_res2`) are zero-alloc once warm, and
+//!     pooled batch-1 eval — column-chunk fan-out instead of row shards —
+//!     stays window-constant.
 //!
 //! This file intentionally contains a single test (plus the allocator):
 //! libtest runs tests in one binary concurrently, and any neighbour test
@@ -26,7 +31,9 @@ use cocodc::config::{MethodKind, RunConfig, TauMode};
 use cocodc::coordinator::strategy::SyncCtx;
 use cocodc::coordinator::{make_strategy, FragmentTable, GlobalState, SyncStats};
 use cocodc::network::WanSimulator;
-use cocodc::runtime::{Backend, HostBackend, NativeBackend, WorkerHandle};
+use cocodc::runtime::{
+    Backend, HostBackend, ModelMeta, NativeBackend, NativeSpec, TrainMeta, WorkerHandle,
+};
 use cocodc::simclock::VirtualClock;
 use cocodc::util::pool::BufferPool;
 use cocodc::util::{Rng, WorkerPool};
@@ -238,9 +245,96 @@ fn eval_allocations_reach_steady_state() {
     backend.set_compute_pool(None);
 }
 
+/// Batch-1 backend: one row shard, so every parallel path in the step is a
+/// column-chunk dispatch and the per-shard scratch (including the fused
+/// softmax-xent `XentScratch`) is exercised at its smallest row count.
+fn batch1_backend() -> NativeBackend {
+    NativeBackend::new(NativeSpec {
+        name: "alloc-b1".into(),
+        model: ModelMeta {
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            seq_len: 16,
+            batch_size: 1,
+            use_pallas_attention: false,
+        },
+        train: TrainMeta {
+            lr: 1e-3,
+            warmup_steps: 4,
+            total_steps: 1_000_000,
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            min_lr_ratio: 0.1,
+        },
+        n_fragments: 2, // build_layout needs K <= n_layers
+        seed: 0,
+    })
+    .unwrap()
+}
+
+fn batch1_train_steps_are_allocation_free() {
+    // Serial batch-1 trainer steps: the column-chunked kernels run inline
+    // (no pool → `dispatch` loops in place, boxing nothing), so the whole
+    // step must stay zero-alloc once scratch is warm.
+    let backend = batch1_backend();
+    let mut cfg = RunConfig::paper("tiny", MethodKind::Cocodc);
+    cfg.workers = 2;
+    cfg.h_steps = 8;
+    cfg.tau = TauMode::Fixed { tau: 2 };
+    cfg.total_steps = 1000; // never reached; we drive step_once by hand
+    cfg.parallel_workers = false;
+    let mut tr = Trainer::new(&backend, cfg).unwrap();
+    for _ in 0..40 {
+        tr.step_once().unwrap();
+    }
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..40 {
+        tr.step_once().unwrap();
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} heap allocations across 40 steady-state batch-1 train steps",
+        after - before
+    );
+}
+
+fn batch1_eval_allocations_reach_steady_state() {
+    // Pooled batch-1 eval: one row shard means the row-level scope inlines
+    // and all queue traffic comes from column-chunk dispatches. Boxed
+    // per-call, so zero is unattainable — but identical windows must cost
+    // identical allocation counts.
+    let backend = batch1_backend();
+    let params = backend.init_params().unwrap();
+    let (tokens, targets) = native_eval_batch(&backend, 13);
+    backend.set_compute_pool(Some(Arc::new(WorkerPool::new(4))));
+    for _ in 0..6 {
+        backend.eval_loss(&params, &tokens, &targets).unwrap();
+    }
+    let window = || {
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        for _ in 0..16 {
+            backend.eval_loss(&params, &tokens, &targets).unwrap();
+        }
+        ALLOCATIONS.load(Ordering::SeqCst) - before
+    };
+    let w1 = window();
+    let w2 = window();
+    assert_eq!(w1, w2, "pooled batch-1 eval allocations grew between identical windows");
+    backend.set_compute_pool(None);
+}
+
 #[test]
 fn hot_paths_are_allocation_free_in_steady_state() {
     sync_cycles_are_allocation_free();
     native_train_steps_are_allocation_free();
     eval_allocations_reach_steady_state();
+    batch1_train_steps_are_allocation_free();
+    batch1_eval_allocations_reach_steady_state();
 }

@@ -12,12 +12,21 @@
 //!  3. The tiled matmul kernels are *exactly* equal (bit-identical, not
 //!     1-ulp) to the seed triple-loop references at awkward shapes that
 //!     exercise every register-tile remainder path.
+//!  4. The 2D column partition: any contiguous column grid (including
+//!     remainder widths the canonical [`col_chunk`] grid produces) covers
+//!     each output column exactly once and is bit-identical to the
+//!     full-range kernel; the chunked softmax–cross-entropy is within
+//!     1 ulp of the fused single-sweep kernel (exactly equal at one
+//!     chunk); batch-1 runs — where row sharding is pinned at one shard
+//!     and all scaling comes from column chunks — stay bit-identical
+//!     across `--threads 1/2/4/8` for all three sync methods.
 
 use std::sync::mpsc;
 use std::time::Duration;
 
 use cocodc::config::{MethodKind, RunConfig, TauMode};
-use cocodc::runtime::NativeBackend;
+use cocodc::runtime::native::{col_chunk, col_shards, softmax_xent_cols, XentScratch};
+use cocodc::runtime::{ModelMeta, NativeBackend, NativeSpec, TrainMeta};
 use cocodc::util::proptest::forall;
 use cocodc::util::vecops::{self, reference};
 use cocodc::Trainer;
@@ -144,4 +153,210 @@ fn tiled_matmul_at_acc_bit_identical_to_reference() {
         }
         Ok(())
     });
+}
+
+/// A random contiguous partition of `0..cols` (1..=4 chunks, random
+/// interior cut points), plus the canonical [`col_chunk`] grid — both must
+/// behave identically to the unpartitioned kernel.
+fn random_grid(rng: &mut cocodc::util::Rng, cols: usize) -> Vec<(usize, usize)> {
+    let cc = rng.usize_in(1, 4.min(cols));
+    let mut cuts: Vec<usize> = (0..cc - 1).map(|_| rng.usize_in(0, cols)).collect();
+    cuts.push(0);
+    cuts.push(cols);
+    cuts.sort_unstable();
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Column-chunked matmul kernels, run chunk-by-chunk over arbitrary grids
+/// (empty chunks, remainder widths narrower than a register tile), must
+/// cover every output column exactly once and reproduce the full-range
+/// kernel bit-for-bit — the kernels' accumulation order per output element
+/// is independent of which column range computes it.
+#[test]
+fn column_chunked_matmuls_bit_identical_to_full() {
+    forall(8, |rng| {
+        for &(n, m, p) in &SHAPES {
+            let a = rng.f32_vec(n * m, 1.0);
+            let b = rng.f32_vec(m * p, 1.0);
+            let dout = rng.f32_vec(n * p, 1.0);
+            let init = rng.f32_vec(m * p, 1.0);
+
+            let canonical: Vec<(usize, usize)> = {
+                let cc = col_shards(p);
+                (0..cc).map(|s| col_chunk(p, cc, s)).collect()
+            };
+            for grid in [random_grid(rng, p), canonical] {
+                // Coverage/disjointness: contiguous, monotone, exact.
+                let mut edge = 0;
+                for &(c0, c1) in &grid {
+                    if c0 != edge || c1 < c0 || c1 > p {
+                        return Err(format!("bad grid {grid:?} over {p} cols"));
+                    }
+                    edge = c1;
+                }
+                if edge != p {
+                    return Err(format!("grid {grid:?} does not cover {p} cols"));
+                }
+
+                let mut full = vec![f32::NAN; n * p];
+                vecops::matmul(&mut full, &a, &b, n, m, p);
+                let mut got = vec![f32::NAN; n * p];
+                for &(c0, c1) in &grid {
+                    vecops::matmul_cols(&mut got, &a, &b, n, m, p, c0, c1);
+                }
+                if got != full {
+                    return Err(format!("matmul {n}x{m}x{p} grid {grid:?} diverged"));
+                }
+
+                let mut full = vec![f32::NAN; n * m];
+                vecops::matmul_bt(&mut full, &dout, &b, n, m, p);
+                let mut got = vec![f32::NAN; n * m];
+                let jgrid = random_grid(rng, m);
+                for &(j0, j1) in &jgrid {
+                    vecops::matmul_bt_cols(&mut got, &dout, &b, n, m, p, j0, j1);
+                }
+                if got != full {
+                    return Err(format!("matmul_bt {n}x{m}x{p} grid {jgrid:?} diverged"));
+                }
+
+                let mut full = init.clone();
+                vecops::matmul_at_acc(&mut full, &a, &dout, n, m, p);
+                let mut got = init.clone();
+                for &(c0, c1) in &grid {
+                    vecops::matmul_at_acc_cols(&mut got, &a, &dout, n, m, p, c0, c1);
+                }
+                if got != full {
+                    return Err(format!("matmul_at_acc {n}x{m}x{p} grid {grid:?} diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Monotone total order on f32 bit patterns, so ulp distance is a plain
+/// integer subtraction (handles the sign-magnitude wraparound at zero).
+fn f32_order(x: f32) -> i64 {
+    let i = x.to_bits() as i32;
+    if i < 0 { (i32::MIN as i64) - i as i64 } else { i as i64 }
+}
+
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    (f32_order(a) - f32_order(b)).unsigned_abs()
+}
+
+/// The chunked softmax–cross-entropy ([`softmax_xent_cols`], the kernel the
+/// native step runs on both serial and pooled paths) vs the fused
+/// single-sweep kernel and the multi-sweep reference: exactly equal at one
+/// chunk, and within 1 ulp per dlogit (loss to f64 roundoff) at multi-chunk
+/// grids — the only divergence is the f64 reassociation of the partition
+/// sum z across chunk boundaries.
+#[test]
+fn chunked_softmax_xent_within_one_ulp_of_fused() {
+    // Rows × vocab, including vocabs not divisible by MIN_COL_CHUNK and
+    // vocabs below it (single chunk → bit-exact branch).
+    const XSHAPES: [(usize, usize); 5] = [(1, 7), (2, 16), (3, 48), (5, 50), (4, 100)];
+    forall(8, |rng| {
+        for &(n, v) in &XSHAPES {
+            let logits0 = rng.f32_vec(n * v, 2.0);
+            let targets: Vec<i32> = (0..n).map(|_| rng.usize_in(0, v - 1) as i32).collect();
+            let inv_n = 1.0 / n as f32;
+
+            let mut fused = logits0.clone();
+            let lf = vecops::softmax_xent(&mut fused, &targets, v, inv_n, true);
+            let mut split = logits0.clone();
+            let ls = reference::softmax_xent_split(&mut split, &targets, v, inv_n, true);
+            if lf.to_bits() != ls.to_bits() || fused != split {
+                return Err(format!("fused vs split diverged at {n}x{v}"));
+            }
+
+            let mut chunked = logits0.clone();
+            let mut xs = XentScratch::new(n, v);
+            let lc = softmax_xent_cols(None, &mut chunked, &targets, v, inv_n, true, &mut xs);
+            if col_shards(v) == 1 {
+                if lc.to_bits() != lf.to_bits() || chunked != fused {
+                    return Err(format!("single-chunk xent not bit-exact at {n}x{v}"));
+                }
+            } else {
+                let rel = (lc - lf).abs() / lf.abs().max(1e-30);
+                if rel > 1e-12 {
+                    return Err(format!("chunked loss off by {rel:e} at {n}x{v}"));
+                }
+                for (i, (&c, &f)) in chunked.iter().zip(fused.iter()).enumerate() {
+                    let d = ulp_diff(c, f);
+                    if d > 1 {
+                        return Err(format!("dlogit[{i}] {d} ulps apart at {n}x{v}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Batch-1 spec: one row shard, so every parallel gain and every potential
+/// determinism hazard lives on the column axis. Vocab 64 → 4 column chunks
+/// at the LM head; d_ff 64 → 4 on the MLP; d_model 32 → 2 elsewhere.
+fn batch1_spec() -> NativeSpec {
+    NativeSpec {
+        name: "b1".into(),
+        model: ModelMeta {
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            seq_len: 16,
+            batch_size: 1,
+            use_pallas_attention: false,
+        },
+        train: TrainMeta {
+            lr: 1e-3,
+            warmup_steps: 4,
+            total_steps: 1_000_000,
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            min_lr_ratio: 0.1,
+        },
+        n_fragments: 2, // build_layout needs K <= n_layers
+        seed: 0,
+    }
+}
+
+fn run_curve_b1(method: MethodKind, threads: usize) -> (Vec<(u32, f64)>, f32) {
+    let backend = NativeBackend::new(batch1_spec()).unwrap();
+    let mut cfg = RunConfig::paper("tiny", method);
+    cfg.workers = 2;
+    cfg.h_steps = 8;
+    cfg.tau = TauMode::Fixed { tau: 2 };
+    cfg.total_steps = 24;
+    cfg.eval_every = 6;
+    cfg.eval_batches = 2;
+    cfg.threads = threads;
+    cfg.parallel_workers = threads > 1;
+    let mut tr = Trainer::new(&backend, cfg).unwrap();
+    let out = tr.run().unwrap();
+    let curve = out.curve.points.iter().map(|p| (p.step, p.loss)).collect();
+    (curve, out.final_train_loss)
+}
+
+/// The acceptance gate of the 2D partition: batch-1 curves (column shards
+/// only — the case PR 9's row sharding could not touch) are bit-identical
+/// across `--threads 1/2/4/8` for DiLoCo, Streaming DiLoCo and CoCoDC.
+#[test]
+fn batch1_thread_count_never_changes_the_math() {
+    for method in MethodKind::all() {
+        let serial = run_curve_b1(method, 1);
+        assert!(serial.0.len() >= 3, "{method:?}: curve too short to be meaningful");
+        assert!(serial.1.is_finite());
+        for threads in [2usize, 4, 8] {
+            let pooled = run_curve_b1(method, threads);
+            assert_eq!(
+                serial, pooled,
+                "{method:?}: batch-1 --threads {threads} diverged from --threads 1"
+            );
+        }
+    }
 }
